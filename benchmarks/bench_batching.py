@@ -1,0 +1,101 @@
+"""Paper §5.4 + Figures 6/8 — input ordering and parallel batching.
+
+Three reproductions:
+
+1. **Padding waste** (§5.4): unsorted vs word-sorted vs token-sorted
+   batching over the synthetic corpus (the paper reports +28% throughput
+   for token over word sorting; padding waste is the hardware-independent
+   cause).
+2. **Measured throughput** on the tiny trained NMT model: token-sorted vs
+   unsorted serving on this CPU.
+3. **Serial vs parallel streams** (Fig 6/8): per-batch decode costs are
+   measured once, then the stream-queue model reports makespan/utilization
+   for 1/2/4/8 streams (a threaded 2-stream run is also measured — on one
+   CPU core it shows the *mechanism*, the model shows the scaling).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import trained_tiny_nmt, translate_all
+from repro.data import make_batches, make_corpus, padding_stats
+from repro.serving import (
+    ParallelStreams,
+    ServingEngine,
+    TokenSortedScheduler,
+    simulate_streams,
+)
+
+
+def run() -> list:
+    rows = []
+    corpus = make_corpus(1200, vocab=256, seed=7)
+
+    # 1 — padding waste
+    stats = {}
+    for mode in ("none", "words", "tokens"):
+        stats[mode] = padding_stats(corpus, make_batches(corpus, 64, mode))
+        rows.append((f"s5_4_padding_{mode}", 0.0,
+                     f"pad_waste={stats[mode]['pad_waste']:.4f}"))
+    comp_reduction = (stats["none"]["padded_tokens"]
+                      / stats["tokens"]["padded_tokens"])
+    rows.append(("s5_4_token_vs_none_compute", 0.0,
+                 f"padded_token_reduction={comp_reduction:.3f}x "
+                 f"(paper: +28% throughput token vs word sorting)"))
+
+    # 2 — measured throughput, sorted vs unsorted (tiny model, this CPU)
+    cfg, model, params, train_corpus, _ = trained_tiny_nmt()
+    requests = train_corpus[:128]
+    hyp_u, t_unsorted = translate_all(model, params, None, requests)
+    # token-sorted path is what translate_all uses; compare with shuffled
+    # batches of identical content via sort_mode none
+    from repro.serving import TokenSortedScheduler
+    from repro.core.ptq import FP_CONTEXT
+    engine = ServingEngine(model, params, max_len=96)
+    for mode in ("none", "tokens"):
+        sched = TokenSortedScheduler(batch_size=16, sort_mode=mode)
+        items = sched.plan(requests)
+        import time
+        t0 = time.perf_counter()
+        n_tok = 0
+        for item in items:
+            res = engine.generate(item.batch, max_new_tokens=24)
+            n_tok += res.n_tokens
+        dt = time.perf_counter() - t0
+        rows.append((f"fig8_measured_{mode}_sorted", dt * 1e6 / len(requests),
+                     f"sentences_per_s={len(requests) / dt:.2f}"))
+
+    # 3 — serial vs parallel streams (queueing model on measured costs)
+    sched = TokenSortedScheduler(batch_size=16)
+    items = sched.plan(requests)
+    costs = []
+    for item in items:
+        import time
+        t0 = time.perf_counter()
+        engine.generate(item.batch, max_new_tokens=24)
+        costs.append(time.perf_counter() - t0)
+    for n in (1, 2, 4, 8):
+        sim = simulate_streams(costs, n)
+        rows.append((f"fig6_streams_{n}", sim["makespan_s"] * 1e6,
+                     f"speedup={sim['speedup_vs_serial']:.2f} "
+                     f"util={sim['utilization']:.2f}"))
+
+    # threaded 2-stream mechanism check (GIL-bound on 1 core: mechanism only)
+    ps = ParallelStreams(
+        lambda sid, item: engine.generate(item.batch,
+                                          max_new_tokens=24).n_tokens,
+        n_streams=2)
+    out = ps.run(items)
+    rows.append(("fig6_threaded_2stream", out["makespan_s"] * 1e6,
+                 f"util={out['utilization']:.2f} "
+                 f"tok_per_s={out['throughput_tok_s']:.1f}"))
+    rows.append(("fig6_paper_reference", 0.0,
+                 "paper: +43% throughput from parallel batching; "
+                 "best config 1.51x vs best FP32"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

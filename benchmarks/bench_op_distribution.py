@@ -1,0 +1,80 @@
+"""Paper Figure 7 — operation-class split, FP32 graph vs INT8 graph.
+
+The paper profiles op-time percentages (MatMul 43% in FP32; quantized
+MatMuls shrink, Quantize/Dequantize overhead appears).  We reproduce the
+graph-level view: compile the tiny NMT decode step in both precisions and
+classify every HLO op into MatMul / Quantize / Dequantize / Gather /
+Softmax-Norm / Other, weighting by output bytes (a dtype-aware proxy for
+op cost on a bandwidth-bound decode step), plus measured end-to-end times.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn, trained_tiny_nmt
+from repro.core import QuantPolicy, quantize_model
+from repro.core.ptq import FP_CONTEXT
+from repro.launch.hlo_analysis import shape_bytes
+
+_CLASSES = [
+    ("matmul", ("dot(", "dot-general")),
+    ("quantize", ("round-nearest", "clamp(")),
+    ("convert", ("convert(",)),
+    ("gather", ("gather(", "dynamic-slice(", "dynamic-update-slice(",
+                "scatter(")),
+    ("softmax_norm", ("exponential(", "divide(", "rsqrt(", "reduce(")),
+]
+
+
+def _classify(hlo: str) -> dict:
+    buckets = defaultdict(int)
+    for line in hlo.splitlines():
+        if "=" not in line:
+            continue
+        rhs = line.split("=", 1)[1]
+        b = shape_bytes(rhs.split(" ", 2)[1] if len(rhs.split(" ", 2)) > 1
+                        else rhs)
+        kind = "other"
+        for name, pats in _CLASSES:
+            if any(p in rhs for p in pats):
+                kind = name
+                break
+        buckets[kind] += b
+    total = max(sum(buckets.values()), 1)
+    return {k: v / total for k, v in sorted(buckets.items())}
+
+
+def run() -> list:
+    cfg, model, params, corpus, _ = trained_tiny_nmt()
+    qp, qctx = quantize_model(params, {}, QuantPolicy(act_quant="dynamic"))
+    B = 16
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(3, cfg.vocab, (B,)), jnp.int32)
+
+    rows = []
+    for name, pp, qq, quantized in [("fp32", params, FP_CONTEXT, False),
+                                    ("int8", qp, qctx, True)]:
+        state = model.init_decode_state(B, 64, quantized=quantized,
+                                        enc_len=32)
+        fn = jax.jit(lambda p, t, s: model.decode_step(p, t, s, quant=qq))
+        lowered = fn.lower(pp, tokens, state)
+        compiled = lowered.compile()
+        split = _classify(compiled.as_text())
+        t = time_fn(fn, pp, tokens, state)
+        detail = " ".join(f"{k}={v:.1%}" for k, v in split.items())
+        rows.append((f"fig7_decode_{name}", t * 1e6, detail))
+    rows.append(("fig7_paper_reference", 0.0,
+                 "paper: FP32 MatMul 43% -> INT8 adds Quantize/Dequantize, "
+                 "shrinks MatMul+GatherNd share"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,72 @@
+"""Shared benchmark utilities: timing + the tiny trained NMT model every
+accuracy benchmark reuses (trained once, cached in-process)."""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-clock seconds per call (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+@functools.lru_cache(maxsize=1)
+def trained_tiny_nmt(steps: int = 900):
+    """Train the paper's model (reduced) on the synthetic corpus once."""
+    from repro.configs import get_config
+    from repro.data import TranslationBatches, make_corpus
+    from repro.models import build_model
+    from repro.optim import AdamW
+    from repro.optim.schedule import inverse_sqrt
+    from repro.train import make_train_step
+
+    cfg = get_config("transformer-base").reduced(
+        vocab=64, d_model=128, n_layers=2, n_enc_layers=2, d_ff=256,
+        n_heads=4, n_kv_heads=4, head_dim=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # the paper's model's own recipe (inverse-sqrt warmup, Adam b2=0.98)
+    opt = AdamW(lr=inverse_sqrt(cfg.d_model, warmup=200), b2=0.98)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt))
+    corpus = make_corpus(600, cfg.vocab, max_words=6, seed=0)
+    data = TranslationBatches(corpus, 32, sort_mode="tokens", seed=0)
+    loss = None
+    for _ in range(steps):
+        batch = jax.tree_util.tree_map(jnp.asarray, data.next_batch())
+        (params, opt_state), m = step(params, opt_state, batch)
+        loss = float(m["loss"])
+    return cfg, model, params, corpus, loss
+
+
+def translate_all(model, params, qctx, requests, *, batch_size=16,
+                  max_new=24) -> Tuple[List[list], float]:
+    """Translate requests with the serving engine; returns (hyps, seconds)."""
+    from repro.core.ptq import FP_CONTEXT
+    from repro.serving import ServingEngine, TokenSortedScheduler
+    engine = ServingEngine(model, params, quant=qctx or FP_CONTEXT,
+                           max_len=96)
+    sched = TokenSortedScheduler(batch_size=batch_size)
+    items = sched.plan(requests)
+    hyps = {}
+    t0 = time.perf_counter()
+    for item in items:
+        res = engine.generate(item.batch, max_new_tokens=max_new)
+        for local, gi in enumerate(item.indices):
+            hyps[gi] = list(res.tokens[local])
+    dt = time.perf_counter() - t0
+    return [hyps[i] for i in range(len(requests))], dt

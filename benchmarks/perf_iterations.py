@@ -1,0 +1,113 @@
+"""§Perf hillclimbing harness — hypothesis → change → re-lower → measure.
+
+Each iteration re-lowers one of the three selected cells on the production
+mesh with a candidate change and records the roofline terms before/after
+into ``experiments/perf/<cell>__<iter>.json``.  The narrative lives in
+EXPERIMENTS.md §Perf.
+
+Cells (selection per the assignment):
+  A. yi-9b × decode_32k      — most representative of the paper (INT8
+                               serving decode); worst roofline fraction.
+  B. internvl2-76b × train_4k — most collective-bound.
+  C. qwen3-moe-30b-a3b × prefill_32k — MoE dispatch overhead (worst
+                               useful-compute ratio among serve cells).
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_iterations <cell> <iter>
+      (module must be launched fresh per iteration — device-count env).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.configs import SHAPES, get_config
+from repro.core.policy import QuantPolicy
+from repro.core.ptq import QuantContext, quantize_model
+from repro.launch import specs as S
+from repro.launch.hlo_analysis import analyze_collectives
+from repro.launch.mesh import make_production_mesh, batch_axes
+from repro.launch.dryrun import lower_cell
+from repro.models.registry import build_model
+
+cell, variant = sys.argv[1], sys.argv[2]
+ARCH, SHAPE = {"A": ("yi-9b", "decode_32k"),
+               "B": ("internvl2-76b", "train_4k"),
+               "C": ("qwen3-moe-30b-a3b", "prefill_32k")}[cell]
+
+def measure(**kw):
+    rec = lower_cell(ARCH, SHAPE, multi_pod=False, **kw)
+    return {"memory_gib": rec["memory"]["peak_per_device_gib"],
+            "argument_bytes": rec["memory"]["argument_bytes"],
+            "collective_bytes": rec["collectives"]["total_bytes"],
+            "collectives_by_kind": rec["collectives"]["by_kind"]}
+
+import repro.launch.specs as specs_mod
+if variant == "baseline":
+    out = measure()
+elif variant == "static_scales":
+    # patch the serving policy to calibrated-constant activation scales
+    orig = specs_mod.serve_param_specs
+    def patched(cfg, mesh):
+        model, p_sds, qctx = orig(cfg, mesh)
+        qctx = QuantContext(policy=QuantPolicy(
+            mode=cfg.quant.mode, act_quant="static", default_amax=8.0,
+            quantize_kv_cache=cfg.quant.quantize_kv_cache), impl="xla")
+        return model, p_sds, qctx
+    specs_mod.serve_param_specs = patched
+    out = measure()
+elif variant == "bf16_params":
+    os.environ["REPRO_MIXED_PRECISION"] = "1"
+    out = measure()
+elif variant == "grad_rs_tag":
+    from repro.distributed.context import block_grad_specs
+    from repro.distributed.sharding import param_specs
+    from repro.launch.mesh import fsdp_axes
+    import repro.launch.dryrun as dr
+    cfg = get_config(ARCH)
+    mesh = make_production_mesh()
+    model = build_model(cfg)
+    p_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_specs(p_abs, mesh, tensor="model", fsdp=fsdp_axes(mesh),
+                        kv_heads=cfg.n_kv_heads)
+    block_specs = jax.tree_util.tree_map(
+        lambda s: P(*list(s)[1:]), specs["blocks"],
+        is_leaf=lambda x: isinstance(x, P))
+    with block_grad_specs(block_specs):
+        out = measure()
+else:
+    raise SystemExit(f"unknown variant {variant}")
+print("RESULT " + json.dumps(out))
+'''
+
+
+def run_variant(cell: str, variant: str) -> dict:
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT, cell, variant],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": "src"})
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(f"{cell}/{variant} failed:\n{proc.stderr[-2000:]}")
+
+
+def main() -> None:
+    cell, variant = sys.argv[1], sys.argv[2]
+    os.makedirs("experiments/perf", exist_ok=True)
+    out = run_variant(cell, variant)
+    path = f"experiments/perf/{cell}__{variant}.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(path)
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""End-to-end driver (paper workflow): TRAIN a small NMT transformer on the
+synthetic corpus for a few hundred steps, CALIBRATE on held-out sentences,
+QUANTIZE with every Table-1 mode, and report BLEU for each.
+
+    PYTHONPATH=src python examples/train_and_quantize.py [--steps 300]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import Calibrator, QuantMode, QuantPolicy, Taps, quantize_model
+from repro.core.ptq import FP_CONTEXT
+from repro.data import TranslationBatches, corpus_bleu, make_corpus
+from repro.models import build_model
+from repro.optim import AdamW, warmup_cosine
+from repro.serving import ServingEngine, TokenSortedScheduler
+from repro.train import make_train_step
+
+
+def translate(model, params, qctx, requests):
+    engine = ServingEngine(model, params, quant=qctx or FP_CONTEXT,
+                           max_len=96)
+    sched = TokenSortedScheduler(batch_size=16)
+    hyps = {}
+    for item in sched.plan(requests):
+        res = engine.generate(item.batch, max_new_tokens=24)
+        for local, gi in enumerate(item.indices):
+            hyps[gi] = list(res.tokens[local])
+    return [hyps[i] for i in range(len(requests))]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=900)
+    args = ap.parse_args()
+
+    from repro.optim.schedule import inverse_sqrt
+    cfg = get_config("transformer-base").reduced(
+        vocab=64, d_model=128, n_layers=2, n_enc_layers=2, d_ff=256,
+        n_heads=4, n_kv_heads=4, head_dim=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=inverse_sqrt(cfg.d_model, warmup=200), b2=0.98)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt))
+    corpus = make_corpus(600, cfg.vocab, max_words=6, seed=0)
+    data = TranslationBatches(corpus, 32, sort_mode="tokens", seed=0)
+
+    print(f"training {args.steps} steps ...")
+    for i in range(args.steps):
+        batch = jax.tree_util.tree_map(jnp.asarray, data.next_batch())
+        (params, opt_state), m = step(params, opt_state, batch)
+        if (i + 1) % 100 == 0:
+            print(f"  step {i + 1}: loss {float(m['loss']):.4f}")
+
+    test_set = corpus[:96]
+    refs = [list(s.tgt) for s in test_set]
+    bleu_fp = corpus_bleu(translate(model, params, None, test_set), refs)
+    print(f"\nFP32 BLEU: {bleu_fp:.2f}")
+
+    cal = Calibrator()
+    for s in corpus[200:260]:
+        taps = Taps()
+        model.forward(params, {
+            "src_tokens": jnp.asarray(s.src[None, :]),
+            "tgt_tokens": jnp.asarray(
+                np.concatenate([[1], s.tgt, [2]])[None, :])}, taps=taps)
+        cal.observe_taps(taps)
+
+    print(f"{'mode':>12} {'BLEU':>7} {'drop':>7}    (paper Table 1)")
+    for mode in ("naive", "symmetric", "independent", "conjugate"):
+        recs = cal.compute(mode)
+        qp, qctx = quantize_model(
+            params, recs, QuantPolicy(mode=QuantMode(mode),
+                                      act_quant="static"))
+        bleu = corpus_bleu(translate(model, qp, qctx, test_set), refs)
+        print(f"{mode:>12} {bleu:7.2f} {bleu_fp - bleu:+7.2f}")
+
+
+if __name__ == "__main__":
+    main()

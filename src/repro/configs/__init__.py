@@ -1,0 +1,35 @@
+"""Architecture registry — one module per assigned arch (+ the paper's own).
+
+``get_config("<arch-id>")`` returns the exact published configuration;
+``cfg.reduced()`` returns the same-family smoke-test configuration.
+"""
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    HybridConfig,
+    XLSTMConfig,
+    QuantSettings,
+    ShapeConfig,
+    SHAPES,
+    get_config,
+    list_archs,
+    register,
+    shapes_for,
+)
+
+# Import every arch module so @register runs.
+from repro.configs import (  # noqa: F401
+    command_r_35b,
+    granite_8b,
+    granite_moe_1b_a400m,
+    internvl2_76b,
+    mistral_nemo_12b,
+    qwen3_moe_30b_a3b,
+    transformer_base,
+    whisper_base,
+    xlstm_1_3b,
+    yi_9b,
+    zamba2_2_7b,
+)

@@ -1,0 +1,30 @@
+"""transformer-base — the paper's own model (Vaswani et al. 2017, base).
+
+6L encoder + 6L decoder, d_model=512, 8 heads, d_ff=2048, shared vocab
+37000 (the paper's retrained En→De WMT model, BLEU 27.68 starting point).
+This is the model every Table-1 / Figure-3 reproduction benchmark uses
+(at reduced scale where the experiment trains from scratch).
+"""
+
+from repro.configs.base import ModelConfig, register
+
+
+@register("transformer-base")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="transformer-base",
+        family="audio",          # enc-dec builder (token inputs)
+        n_layers=6,
+        n_enc_layers=6,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=8,
+        d_ff=2048,
+        vocab=37000,
+        norm="layernorm",
+        ffn="gelu",
+        enc_dec=True,
+        attn_bias=True,
+        input_kind="tokens",
+        tie_embeddings=True,
+    )

@@ -1,0 +1,19 @@
+"""yi-9b — 48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+llama-arch GQA. [arXiv:2403.04652]
+"""
+
+from repro.configs.base import ModelConfig, register
+
+
+@register("yi-9b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="yi-9b",
+        family="dense",
+        n_layers=48,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=4,
+        d_ff=11008,
+        vocab=64000,
+    )

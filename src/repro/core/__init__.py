@@ -1,0 +1,30 @@
+"""Core INT8 post-training quantization library (the paper's contribution)."""
+
+from repro.core.qtensor import QTensor, quantize_symmetric, quantize_affine  # noqa: F401
+from repro.core.quantize import (  # noqa: F401
+    QuantMode,
+    Thresholds,
+    fake_quant,
+    fake_quant_dynamic,
+    quantize_dynamic,
+    quantize_naive,
+    quantize_with_thresholds,
+)
+from repro.core.histogram import StreamingHistogram, classify  # noqa: F401
+from repro.core.calibration import (  # noqa: F401
+    Calibrator,
+    SiteCalibration,
+    Taps,
+    kl_threshold_search,
+    kl_thresholds,
+    record,
+)
+from repro.core.policy import QuantPolicy, summarize  # noqa: F401
+from repro.core.ptq import (  # noqa: F401
+    FP_CONTEXT,
+    QuantContext,
+    count_quantized,
+    generic_site,
+    quantize_model,
+    quantize_weight,
+)

@@ -1,0 +1,155 @@
+"""QTensor — the quantized-tensor pytree used throughout the framework.
+
+A ``QTensor`` carries the int8 payload together with the affine mapping back
+to real values:
+
+    real ≈ (data - zero_point) * scale          (per-tensor or per-channel)
+
+This mirrors the paper's Eq. (5)/(6): ``A_q = round((A_f - zero_offset) *
+scale)`` with ``scale = target / (Max - Min)``.  ``scale`` here is stored in
+the *dequantize* direction (real = q * scale) because that is what the matmul
+epilogue consumes; helpers below convert.
+
+Design notes
+------------
+* Registered as a pytree so QTensors can live inside parameter trees, be
+  donated, sharded, and checkpointed like any other leaf-bearing node.
+* ``axis`` (static aux data) marks the per-channel axis; ``None`` means
+  per-tensor.  ``scale`` broadcasts against ``data`` accordingly.
+* ``zero_point`` is kept in float32.  For symmetric quantization it is the
+  scalar 0.0 and the epilogue correction folds away at trace time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN = -127  # symmetric: avoid -128 so |q| <= 127 (paper keeps ranges symmetric)
+INT8_MAX = 127
+UINT8_LEVELS = 255
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """int8 payload + affine dequantization parameters."""
+
+    data: jax.Array          # int8
+    scale: jax.Array         # f32, broadcastable to ``data`` along ``axis``
+    zero_point: jax.Array    # f32, same broadcast rules as ``scale``
+    axis: Optional[int] = None   # static: per-channel axis (None = per-tensor)
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self) -> Tuple[Tuple[jax.Array, ...], Optional[int]]:
+        return (self.data, self.scale, self.zero_point), self.axis
+
+    @classmethod
+    def tree_unflatten(cls, axis, leaves) -> "QTensor":
+        data, scale, zero_point = leaves
+        return cls(data=data, scale=scale, zero_point=zero_point, axis=axis)
+
+    # -- conveniences -------------------------------------------------------
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def ndim(self):
+        return self.data.ndim
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        """Paper Eq. (6): ``A_deq = (A_q - zero_offset) * scale``."""
+        scale = _expand(self.scale, self.axis, self.data.ndim)
+        zp = _expand(self.zero_point, self.axis, self.data.ndim)
+        return ((self.data.astype(jnp.float32) - zp) * scale).astype(dtype)
+
+    def nbytes(self) -> int:
+        return int(self.data.size) * 1 + int(self.scale.size) * 4 + int(self.zero_point.size) * 4
+
+    def __repr__(self) -> str:  # avoid dumping arrays in logs
+        return (f"QTensor(shape={tuple(self.data.shape)}, axis={self.axis}, "
+                f"scale_shape={tuple(jnp.shape(self.scale))})")
+
+
+def _expand(param: jax.Array, axis: Optional[int], ndim: int) -> jax.Array:
+    """Reshape a per-channel vector so it broadcasts along ``axis``."""
+    param = jnp.asarray(param, jnp.float32)
+    if axis is None or param.ndim == 0:
+        return param
+    shape = [1] * ndim
+    shape[axis] = -1
+    return param.reshape(shape)
+
+
+def quantize_affine(
+    x: jax.Array,
+    t_min: jax.Array,
+    t_max: jax.Array,
+    axis: Optional[int] = None,
+) -> QTensor:
+    """Affine (asymmetric) quantization of ``x`` clipped to [t_min, t_max].
+
+    Maps t_min -> INT8_MIN and t_max -> INT8_MAX (paper Eq. (4)/(5) with a
+    signed target).  Used by the ``naive`` and ``independent`` modes where the
+    thresholds are not symmetric about zero.
+    """
+    t_min = jnp.asarray(t_min, jnp.float32)
+    t_max = jnp.asarray(t_max, jnp.float32)
+    span = jnp.maximum(t_max - t_min, 1e-12)
+    # q = round(x * q_scale + q_bias), real = (q - zp) * scale
+    q_scale = (INT8_MAX - INT8_MIN) / span
+    zp = INT8_MIN - t_min * q_scale            # float zero point in q-space
+    xq = jnp.round(x.astype(jnp.float32) * _expand(q_scale, axis, x.ndim)
+                   + _expand(zp, axis, x.ndim))
+    xq = jnp.clip(xq, INT8_MIN, INT8_MAX).astype(jnp.int8)
+    return QTensor(data=xq, scale=1.0 / q_scale, zero_point=zp, axis=axis)
+
+
+def quantize_symmetric(
+    x: jax.Array,
+    amax: jax.Array,
+    axis: Optional[int] = None,
+) -> QTensor:
+    """Symmetric quantization: thresholds are (-amax, +amax), zero_point = 0.
+
+    This is the mode the paper ultimately ships (§4.2): zero offsets keep the
+    QuantizedMatMul kernel on its fast path.  On the TPU MXU (s8 x s8) it
+    additionally removes the zero-point correction term entirely.
+    """
+    amax = jnp.maximum(jnp.asarray(amax, jnp.float32), 1e-12)
+    q_scale = INT8_MAX / amax
+    xq = jnp.round(x.astype(jnp.float32) * _expand(q_scale, axis, x.ndim))
+    xq = jnp.clip(xq, INT8_MIN, INT8_MAX).astype(jnp.int8)
+    zp = jnp.zeros_like(amax)
+    return QTensor(data=xq, scale=amax / INT8_MAX, zero_point=zp, axis=axis)
+
+
+def quantize_tensor_minmax(x: jax.Array, axis: Optional[int] = None) -> QTensor:
+    """Paper §4.1 "naive" quantization: absolute Min/Max of the tensor."""
+    if axis is None:
+        t_min = jnp.min(x)
+        t_max = jnp.max(x)
+    else:
+        reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+        t_min = jnp.min(x, axis=reduce_axes)
+        t_max = jnp.max(x, axis=reduce_axes)
+    return quantize_affine(x, t_min, t_max, axis=axis)
+
+
+def abs_max(x: jax.Array, axis: Optional[int] = None) -> jax.Array:
+    if axis is None:
+        return jnp.max(jnp.abs(x))
+    reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+    return jnp.max(jnp.abs(x), axis=reduce_axes)
+
+
+def is_qtensor(x) -> bool:
+    return isinstance(x, QTensor)

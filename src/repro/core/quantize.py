@@ -1,0 +1,145 @@
+"""Quantization modes (paper §4) and activation/weight quantizers.
+
+The paper evaluates four ways of turning a calibrated histogram into INT8
+thresholds (Table 1):
+
+* ``naive``       — absolute Min/Max of the tensor (fails: long tails).
+* ``symmetric``   — KL-divergence search on the |x| distribution; thresholds
+                    are (-T, T).  Zero zero-point → fastest kernel. Shipped
+                    by the paper.
+* ``independent`` — split the histogram at zero, search the negative and
+                    positive halves independently; thresholds (T_min, T_max)
+                    are asymmetric → non-zero zero-point (best accuracy,
+                    slightly slower kernel).
+* ``conjugate``   — independent search, then report the symmetric envelope
+                    T = max(|T_min|, |T_max|).
+
+This module holds the pure-jnp quantizers that *consume* thresholds; the
+threshold search itself (which needs histograms) lives in ``calibration.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import (
+    QTensor,
+    abs_max,
+    quantize_affine,
+    quantize_symmetric,
+    quantize_tensor_minmax,
+)
+
+
+class QuantMode(str, enum.Enum):
+    NONE = "none"
+    NAIVE = "naive"
+    SYMMETRIC = "symmetric"
+    INDEPENDENT = "independent"
+    CONJUGATE = "conjugate"
+
+
+@dataclasses.dataclass(frozen=True)
+class Thresholds:
+    """Calibrated clipping thresholds for one tensor site."""
+
+    t_min: float
+    t_max: float
+
+    @property
+    def symmetric(self) -> bool:
+        return abs(self.t_min + self.t_max) <= 1e-9 * max(abs(self.t_max), 1e-30)
+
+    def symmetric_envelope(self) -> "Thresholds":
+        t = max(abs(self.t_min), abs(self.t_max))
+        return Thresholds(-t, t)
+
+
+def quantize_with_thresholds(
+    x: jax.Array, thr: Thresholds, axis: Optional[int] = None
+) -> QTensor:
+    """Clip ``x`` to the calibrated range and quantize.
+
+    Symmetric thresholds take the zero-point-free path (paper's shipped
+    config); asymmetric thresholds use the affine map.
+    """
+    if thr.symmetric:
+        return quantize_symmetric(x, jnp.float32(thr.t_max), axis=axis)
+    return quantize_affine(
+        x, jnp.float32(thr.t_min), jnp.float32(thr.t_max), axis=axis
+    )
+
+
+def quantize_dynamic(x: jax.Array, axis: Optional[int] = None) -> QTensor:
+    """Dynamic symmetric quantization (per-call abs-max).
+
+    Used for activations at sites with no calibration record, and as the
+    weight quantizer's fallback.  This is the O(N) scan the paper's §5.5
+    removes for calibrated sites — keep calibrated scales wherever possible.
+    """
+    return quantize_symmetric(x, abs_max(x, axis=axis), axis=axis)
+
+
+def quantize_weight(w: jax.Array, channel_axis: int = -1) -> QTensor:
+    """Per-output-channel symmetric weight quantization.
+
+    Weights have well-behaved ranges (no long activation tails), so abs-max
+    per channel is the standard choice; per-channel scales fold into the
+    matmul epilogue at zero cost.
+    """
+    axis = channel_axis % w.ndim
+    return quantize_symmetric(w, abs_max(w, axis=axis), axis=axis)
+
+
+def quantize_naive(x: jax.Array, axis: Optional[int] = None) -> QTensor:
+    """Paper §4.1 — absolute Min/Max mapping (kept for the Table-1 repro)."""
+    return quantize_tensor_minmax(x, axis=axis)
+
+
+def fake_quant(x: jax.Array, thr: Thresholds, axis: Optional[int] = None) -> jax.Array:
+    """Quantize→dequantize round trip in the original dtype.
+
+    Used to simulate INT8 accuracy loss (Table-1 experiments) without
+    running the int8 kernels, and as the straight-through estimator body
+    for the (beyond-paper) QAT mode.
+    """
+    qt = quantize_with_thresholds(x, thr, axis=axis)
+    return qt.dequantize(x.dtype)
+
+
+def fake_quant_dynamic(x: jax.Array, axis: Optional[int] = None) -> jax.Array:
+    qt = quantize_dynamic(x, axis=axis)
+    return qt.dequantize(x.dtype)
+
+
+def thresholds_for_mode(
+    mode: QuantMode,
+    observed_min: float,
+    observed_max: float,
+    kl_min: Optional[float] = None,
+    kl_max: Optional[float] = None,
+) -> Thresholds:
+    """Combine calibration outputs into final thresholds per mode.
+
+    ``kl_min``/``kl_max`` come from the KL-divergence search
+    (``calibration.kl_thresholds``); observed_{min,max} are the raw extrema
+    (used by ``naive``).
+    """
+    mode = QuantMode(mode)
+    if mode == QuantMode.NAIVE:
+        return Thresholds(float(observed_min), float(observed_max))
+    if mode == QuantMode.SYMMETRIC:
+        assert kl_max is not None
+        return Thresholds(-float(kl_max), float(kl_max))
+    if mode == QuantMode.INDEPENDENT:
+        assert kl_min is not None and kl_max is not None
+        return Thresholds(float(kl_min), float(kl_max))
+    if mode == QuantMode.CONJUGATE:
+        assert kl_min is not None and kl_max is not None
+        return Thresholds(float(kl_min), float(kl_max)).symmetric_envelope()
+    raise ValueError(f"no thresholds for mode {mode}")

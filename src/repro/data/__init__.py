@@ -1,0 +1,13 @@
+"""Data substrate: synthetic corpus, ordering (paper §5.4), pipeline, BLEU."""
+
+from repro.data.metrics import corpus_bleu  # noqa: F401
+from repro.data.pipeline import LMBatches, Prefetcher, TranslationBatches  # noqa: F401
+from repro.data.sorting import make_batches, order_indices, padding_stats  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    BOS,
+    EOS,
+    PAD,
+    Sentence,
+    make_corpus,
+    pad_batch,
+)

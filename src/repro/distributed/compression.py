@@ -1,0 +1,77 @@
+"""INT8 gradient compression with error feedback (beyond-paper distributed
+trick, same spirit as the paper's INT8 insight applied to the wire).
+
+All-reduce is realized as *all-gather of int8 shards + local int32
+reduction*: the bytes on the ICI links are 1/4 of an fp32 ring all-reduce
+(1/2 of bf16).  Error feedback keeps the quantization noise unbiased across
+steps (Karimireddy et al., 2019): the residual of each local compression is
+added to the next step's gradient before compressing.
+
+Used by ``train/step.py``'s ``dp_compressed`` mode inside ``shard_map`` over
+the data axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def compress(x: jax.Array, scale: jax.Array) -> jax.Array:
+    return jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX
+                    ).astype(jnp.int8)
+
+
+def ef_compressed_mean(
+    g: jax.Array,
+    err: jax.Array,
+    axis_name: str,
+    n_shards: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 mean-all-reduce of one gradient leaf.
+
+    Must run inside shard_map/pmap with ``axis_name`` bound.
+    Returns (mean gradient f32, new error-feedback state).
+    """
+    c = g.astype(jnp.float32) + err
+    amax = jnp.max(jnp.abs(c))
+    amax = jax.lax.pmax(amax, axis_name)                  # shared scale
+    scale = jnp.maximum(amax, 1e-12) / INT8_MAX
+    q = compress(c, scale)                                # int8 on the wire
+    local_dq = q.astype(jnp.float32) * scale
+    new_err = c - local_dq                                # residual memory
+    total = jax.lax.all_gather(q, axis_name).astype(jnp.int32)
+    mean = jnp.sum(total, axis=0).astype(jnp.float32) * scale / n_shards
+    return mean, new_err
+
+
+def tree_ef_compressed_mean(grads: Any, err_state: Any, axis_name: str,
+                            n_shards: int) -> Tuple[Any, Any]:
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(err_state)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        mg, ne = ef_compressed_mean(g, e, axis_name, n_shards)
+        out_g.append(mg)
+        out_e.append(ne)
+    return (jax.tree_util.tree_unflatten(treedef, out_g),
+            jax.tree_util.tree_unflatten(treedef, out_e))
+
+
+def init_error_state(grads_abstract: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_abstract)
+
+
+def wire_bytes_fp32_allreduce(n_params: int, n_shards: int) -> int:
+    """Ring all-reduce: 2·(n-1)/n · N · 4 bytes."""
+    return int(2 * (n_shards - 1) / n_shards * n_params * 4)
+
+
+def wire_bytes_int8_gather(n_params: int, n_shards: int) -> int:
+    """All-gather of int8: (n-1)/n · N · 1 byte (each shard sends its copy)."""
+    return int((n_shards - 1) / n_shards * n_params * 1)

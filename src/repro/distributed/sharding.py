@@ -1,0 +1,190 @@
+"""Parameter/activation sharding rules: param-tree paths → PartitionSpec.
+
+Layout (production mesh, DESIGN §4):
+
+* ``tensor`` axis = "model": output features of in-projections, input
+  features of out-projections, vocab, experts, attention heads.
+* ``fsdp`` axes = "data" (+ "pod" for training): the other weight dim —
+  ZeRO-3 parameter/optimizer/grad sharding.  For inference the fsdp axes
+  are dropped (weights resident, batch data-parallel).
+
+Divisibility guard: an axis is applied only when the dim divides evenly
+(e.g. granite-moe's vocab 49155 and whisper's 51865 don't split 16 ways →
+replicated there; noted per-arch in EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.qtensor import QTensor
+
+IN_PROJ = {"q_proj", "k_proj", "v_proj", "gate", "up", "in", "in_proj",
+           "up_proj", "gate_ssm_if"}
+OUT_PROJ = {"o_proj", "down", "out", "out_proj", "down_proj"}
+ROUTER = {"router"}
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fit(dim: int, axes, mesh: Mesh):
+    """Return ``axes`` if ``dim`` divides the axis product, else None."""
+    if axes is None:
+        return None
+    return axes if dim % _axis_size(mesh, axes) == 0 else None
+
+
+def _base_spec(node_name: str, path: Tuple[str, ...], leaf_name: str,
+               shape: Tuple[int, ...], mesh: Mesh, tensor, fsdp,
+               kv_heads: int = 0) -> P:
+    """Spec for one leaf of a linear/embedding node."""
+    is_expert = "experts" in path
+    rank = len(shape)
+
+    # GQA: when kv heads don't divide the tensor axis, sharding the flat
+    # (HKV·dh) projection splits heads across shards and every attention
+    # einsum reshards — replicate the (small) K/V projections instead.
+    if node_name in ("k_proj", "v_proj") and tensor is not None and \
+            kv_heads and kv_heads % _axis_size(mesh, tensor) != 0:
+        tensor = None
+
+    if leaf_name == "table":                       # embedding (V, D)
+        if tensor is not None:
+            # vocab-parallel only: sharding D over fsdp as well makes the
+            # unembed contraction gather the full f32 table (B@data vs
+            # D@data conflict).  V/16 per device is already ZeRO-enough.
+            return P(_fit(shape[0], tensor, mesh), None)
+        return P(_fit(shape[0], fsdp, mesh), None)
+
+    if node_name in ROUTER:
+        core = 2
+        if leaf_name == "b":
+            return P(*([None] * rank))
+        specs = [_fit(shape[-2], fsdp, mesh), None]
+    elif node_name in IN_PROJ:
+        core = 2
+        if leaf_name == "b":
+            return P(*([None] * (rank - 1)), _fit(shape[-1], tensor, mesh))
+        specs = [_fit(shape[-2], fsdp, mesh), _fit(shape[-1], tensor, mesh)]
+    elif node_name in OUT_PROJ:
+        core = 2
+        if leaf_name == "b":
+            return P(*([None] * rank))
+        specs = [_fit(shape[-2], tensor, mesh), _fit(shape[-1], fsdp, mesh)]
+    else:
+        return P(*([None] * rank))
+
+    lead_rank = rank - core
+    lead: list = [None] * lead_rank
+    if is_expert and lead_rank >= 1:
+        # trailing stack dim right before the core dims is the expert dim;
+        # expert parallelism claims the tensor axis, so the feature dims
+        # must not reuse it (a spec may name each mesh axis once).
+        e_fit = _fit(shape[lead_rank - 1], tensor, mesh)
+        lead[-1] = e_fit
+        if e_fit is not None:
+            specs = [None if s == tensor else s for s in specs]
+    return P(*lead, *specs)
+
+
+def _qtensor_scale_spec(w_spec: P, scale_shape) -> P:
+    """Scale has the weight's shape with the contraction dim = 1."""
+    parts = list(w_spec) + [None] * (len(scale_shape) - len(w_spec))
+    parts = parts[:len(scale_shape)]
+    out = [None if scale_shape[i] == 1 else parts[i]
+           for i in range(len(scale_shape))]
+    return P(*out)
+
+
+def param_specs(params: Any, mesh: Mesh, *, tensor="model",
+                fsdp: Optional[Any] = "data", kv_heads: int = 0) -> Any:
+    """Tree of PartitionSpec matching ``params`` (works on abstract trees)."""
+
+    def walk(node, path: Tuple[str, ...]):
+        if isinstance(node, QTensor):
+            # path ends with the leaf key ("w"); the linear's name is above it
+            node_name = path[-2] if len(path) >= 2 and path[-1] == "w" \
+                else (path[-1] if path else "")
+            w_spec = _base_spec(node_name, path, "w", node.data.shape, mesh,
+                                tensor, fsdp, kv_heads)
+            return QTensor(
+                data=w_spec,
+                scale=_qtensor_scale_spec(w_spec, node.scale.shape),
+                zero_point=P(*([None] * getattr(node.zero_point, "ndim", 0))),
+                axis=node.axis,
+            )
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k in ("w", "b", "table", "scale", "bias") and not \
+                        isinstance(v, (dict, QTensor)):
+                    node_name = path[-1] if path else ""
+                    if k in ("scale", "bias") and node_name not in IN_PROJ \
+                            and node_name not in OUT_PROJ:
+                        out[k] = P(*([None] * v.ndim))       # norm params
+                    else:
+                        out[k] = _base_spec(node_name, path, k, v.shape,
+                                            mesh, tensor, fsdp, kv_heads)
+                elif isinstance(v, (dict, QTensor)):
+                    out[k] = walk(v, path + (k,))
+                else:
+                    # bare array leaf (conv weights, A_log, r_weight, …)
+                    out[k] = _leaf_spec(k, v, mesh, tensor)
+            return out
+        return node
+
+    def _leaf_spec(name: str, v, mesh, tensor) -> P:
+        shape = v.shape
+        if name == "conv_w" and len(shape) >= 2:
+            return P(*([None] * (len(shape) - 1)),
+                     _fit(shape[-1], tensor, mesh))
+        if name == "conv_b":
+            return P(*([None] * (len(shape) - 1)),
+                     _fit(shape[-1], tensor, mesh))
+        if name == "r_weight" and len(shape) >= 3:
+            return P(*([None] * (len(shape) - 3)),
+                     _fit(shape[-3], tensor, mesh), None, None)
+        return P(*([None] * len(shape)))
+
+    return walk(params, ())
+
+
+def named_shardings(params: Any, mesh: Mesh, **kw) -> Any:
+    specs = param_specs(params, mesh, **kw)
+    to_ns = lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s
+
+    def walk(node):
+        if isinstance(node, QTensor):
+            return QTensor(data=to_ns(node.data), scale=to_ns(node.scale),
+                           zero_point=to_ns(node.zero_point), axis=node.axis)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        return to_ns(node)
+
+    return walk(specs)
+
+
+def abstract_with_sharding(abstract: Any, shardings: Any) -> Any:
+    """Attach shardings onto a ShapeDtypeStruct tree (for jit.lower)."""
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract, shardings,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def batch_specs(batch: Any, mesh: Mesh, batch_axes) -> Any:
+    """Shard the leading (batch) dim of every batch leaf over ``batch_axes``."""
+    def spec(a):
+        first = _fit(a.shape[0], batch_axes, mesh) if a.ndim >= 1 else None
+        return NamedSharding(mesh, P(first, *([None] * (a.ndim - 1))))
+    return jax.tree_util.tree_map(spec, batch)

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: flash-decode attention over an INT8 KV cache.
+
+TPU-native form of the paper's §5.3 (quantized GatherNd): during
+auto-regressive decode the per-step cost is dominated by *reading the KV
+cache* — exactly the big-tensor copies the paper quantized.  Keeping the
+cache int8 and dequantizing in VMEM registers cuts decode HBM traffic ~4×
+vs f32 (2× vs bf16) and shrinks beam-search cache reorders by the same
+factor.
+
+One query token per sequence attends to the full cache with an online
+(flash) softmax: grid (batch, kv_head, seq_blocks), f32 running max / sum /
+accumulator in VMEM scratch.  GQA query groups (G = H / H_kv) ride along the
+sublane dim.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_S = 256
+
+
+def _kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, len_ref, out_ref,
+            m_ref, l_ref, acc_ref, *, s_steps: int, block_s: int,
+            sm_scale: float):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # (G, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                # (bs, dh)
+    k = k * ks_ref[0, :, 0][:, None]                         # dequant in VREGs
+    scores = jax.lax.dot_general(                            # (G, bs)
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale
+
+    pos = s * block_s + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    valid = pos < len_ref[0, 0]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_ref[...]                                      # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)
+    p = jnp.where(valid, p, 0.0)
+
+    v = v_ref[0, :, 0, :].astype(jnp.float32)                # (bs, dh)
+    v = v * vs_ref[0, :, 0][:, None]
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s == s_steps - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "block_s", "interpret"))
+def decode_attention_pallas(
+    q: jax.Array,          # (B, H, dh)
+    k_q: jax.Array,        # (B, S, HKV, dh) int8
+    k_scale: jax.Array,    # (B, S, HKV) f32
+    v_q: jax.Array,        # (B, S, HKV, dh) int8
+    v_scale: jax.Array,    # (B, S, HKV) f32
+    lengths: jax.Array,    # (B,) int32
+    *,
+    sm_scale: float,
+    block_s: int = DEFAULT_BLOCK_S,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, dh = q.shape
+    _, S, HKV, _ = k_q.shape
+    assert H % HKV == 0, (H, HKV)
+    G = H // HKV
+    bs = min(block_s, S)
+    pad = (-S) % bs
+    if pad:
+        k_q = jnp.pad(k_q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_q = jnp.pad(v_q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    s_steps = Sp // bs
+
+    q4 = q.reshape(B, HKV, G, dh)
+    len2 = lengths.astype(jnp.int32).reshape(B, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, s_steps=s_steps, block_s=bs,
+                          sm_scale=sm_scale),
+        grid=(B, HKV, s_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, h, s: (b, h, 0, 0)),   # q
+            pl.BlockSpec((1, bs, 1, dh), lambda b, h, s: (b, s, h, 0)),  # k
+            pl.BlockSpec((1, bs, 1), lambda b, h, s: (b, s, h)),         # k_scale
+            pl.BlockSpec((1, bs, 1, dh), lambda b, h, s: (b, s, h, 0)),  # v
+            pl.BlockSpec((1, bs, 1), lambda b, h, s: (b, s, h)),         # v_scale
+            pl.BlockSpec((1, 1), lambda b, h, s: (b, 0)),                # lengths
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, HKV, G, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),    # running max
+            pltpu.VMEM((G, 1), jnp.float32),    # running denom
+            pltpu.VMEM((G, dh), jnp.float32),   # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q4, k_q, k_scale, v_q, v_scale, len2)
+    return out.reshape(B, H, dh)

@@ -1,0 +1,180 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Every op dispatches on ``impl``:
+
+* ``"pallas"``     — the TPU kernel (the deployment path),
+* ``"interpret"``  — the same kernel body interpreted on CPU (tests),
+* ``"xla"``        — pure-jnp fallback (identical math; this is what the
+                     CPU dry-run compiles, and the oracle for tests).
+* ``"auto"``       — pallas on TPU backends, xla elsewhere.
+
+The wrappers are QTensor-aware and handle leading-batch flattening so model
+code can stay shape-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import QTensor
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.int8_matmul import (
+    int8_matmul_batched_pallas,
+    int8_matmul_pallas,
+)
+from repro.kernels.quantize import quantize_rowwise_pallas, quantize_static_pallas
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _resolve(impl: str) -> str:
+    return default_impl() if impl == "auto" else impl
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul
+# ---------------------------------------------------------------------------
+
+def int8_matmul(
+    a: QTensor,
+    b: QTensor,
+    bias: Optional[jax.Array] = None,
+    *,
+    out_dtype=jnp.float32,
+    impl: str = "auto",
+) -> jax.Array:
+    """``dequant(a) @ dequant(b) + bias`` computed in int8 on the MXU.
+
+    ``a``: activations, shape (..., K); scale per-row (…,1) or scalar;
+    ``b``: weights, shape (K, N); symmetric per-column scale (1, N)/scalar.
+    """
+    impl = _resolve(impl)
+    batch_shape = a.data.shape[:-1]
+    K = a.data.shape[-1]
+    N = b.data.shape[-1]
+    a2 = a.data.reshape(-1, K)
+    M = a2.shape[0]
+    a_scale = (jnp.reshape(jnp.asarray(a.scale, jnp.float32), (1, 1))
+               if jnp.size(a.scale) == 1
+               else jnp.reshape(jnp.asarray(a.scale, jnp.float32), (M, 1)))
+    b_scale = jnp.asarray(b.scale, jnp.float32)
+    b_scale = (jnp.broadcast_to(b_scale.reshape(1, 1), (1, N))
+               if b_scale.size == 1 else b_scale.reshape(1, N))
+    # symmetric activations have zp == 0 everywhere; treat as no-zp fast path
+    zp = None
+    if jnp.size(a.zero_point) == 1:
+        # static zero-point: only thread it through if it can be non-zero.
+        # (Symmetric mode constructs zero_point as a literal 0.0 — the
+        # comparison below is a trace-time constant in that case.)
+        if isinstance(a.zero_point, (float, int)):
+            zp = None if float(a.zero_point) == 0.0 else jnp.float32(a.zero_point)
+        else:
+            azp = jnp.asarray(a.zero_point)
+            try:  # concrete (calibrated constant) → fold the decision now
+                zp = None if float(azp) == 0.0 else azp.astype(jnp.float32)
+            except Exception:  # traced → keep correction term
+                zp = azp.astype(jnp.float32)
+    if impl in ("pallas", "interpret"):
+        out = int8_matmul_pallas(
+            a2, a_scale, b.data, b_scale, zp, bias,
+            out_dtype=out_dtype, interpret=(impl == "interpret"),
+        )
+    else:
+        out = ref.ref_int8_matmul(a2, a_scale, b.data, b_scale, zp, bias,
+                                  out_dtype=out_dtype)
+    return out.reshape(*batch_shape, N)
+
+
+def int8_matmul_batched(
+    a: QTensor,                    # data (E, M, K); scale (E, M, 1) or scalar
+    b: QTensor,                    # data (E, K, N); scale (E, 1, N)
+    *,
+    out_dtype=jnp.float32,
+    impl: str = "auto",
+) -> jax.Array:
+    """Per-expert grouped int8 matmul (MoE expert FFN hot path)."""
+    impl = _resolve(impl)
+    E, M, K = a.data.shape
+    _, _, N = b.data.shape
+    a_scale = (jnp.broadcast_to(jnp.asarray(a.scale, jnp.float32),
+                                (E, M, 1))
+               if jnp.size(a.scale) != 1
+               else jnp.broadcast_to(jnp.asarray(a.scale, jnp.float32
+                                                 ).reshape(1, 1, 1), (E, 1, 1)))
+    b_scale = jnp.asarray(b.scale, jnp.float32).reshape(E, 1, N)
+    if impl in ("pallas", "interpret"):
+        return int8_matmul_batched_pallas(
+            a.data, a_scale, b.data, b_scale, out_dtype=out_dtype,
+            interpret=(impl == "interpret"))
+    return ref.ref_int8_matmul_batched(a.data, a_scale, b.data, b_scale,
+                                       out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+
+def quantize_rowwise(x: jax.Array, *, impl: str = "auto") -> QTensor:
+    """Dynamic symmetric per-row quantization of (..., K) activations."""
+    impl = _resolve(impl)
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if impl in ("pallas", "interpret"):
+        q, scale = quantize_rowwise_pallas(x2, interpret=(impl == "interpret"))
+    else:
+        q, scale = ref.ref_quantize_rowwise(x2)
+    return QTensor(
+        data=q.reshape(*batch_shape, x.shape[-1]),
+        scale=scale.reshape(*batch_shape, 1),
+        zero_point=jnp.zeros((), jnp.float32),
+        axis=None,
+    )
+
+
+def quantize_static(x: jax.Array, amax, *, impl: str = "auto") -> QTensor:
+    """Calibrated symmetric quantization with a constant threshold."""
+    impl = _resolve(impl)
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if impl in ("pallas", "interpret"):
+        q = quantize_static_pallas(x2, jnp.float32(amax),
+                                   interpret=(impl == "interpret"))
+    else:
+        q = ref.ref_quantize_static(x2, jnp.float32(amax))
+    return QTensor(
+        data=q.reshape(x.shape),
+        scale=jnp.float32(amax) / 127.0,
+        zero_point=jnp.zeros((), jnp.float32),
+        axis=None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode attention over int8 KV cache
+# ---------------------------------------------------------------------------
+
+def decode_attention(
+    q: jax.Array,
+    k_q: jax.Array,
+    k_scale: jax.Array,
+    v_q: jax.Array,
+    v_scale: jax.Array,
+    lengths: jax.Array,
+    *,
+    sm_scale: float,
+    impl: str = "auto",
+) -> jax.Array:
+    impl = _resolve(impl)
+    if impl in ("pallas", "interpret"):
+        return decode_attention_pallas(
+            q, k_q, k_scale, v_q, v_scale, lengths,
+            sm_scale=sm_scale, interpret=(impl == "interpret"),
+        )
+    return ref.ref_decode_attention(q, k_q, k_scale, v_q, v_scale, lengths,
+                                    sm_scale)

@@ -1,0 +1,102 @@
+"""Pallas TPU kernels: fused activation quantization.
+
+The paper's graph inserts ``Min → Max → QuantizeV2`` chains (§4.1), i.e.
+three HBM passes per quantized tensor; its §5.5 then removes the Min/Max for
+calibrated sites.  These kernels are the TPU form of both:
+
+* ``quantize_rowwise_pallas`` — *dynamic* symmetric quantization: one fused
+  pass computes the per-row abs-max, the scale, and the rounded int8 payload
+  (one read + one write instead of three reads).
+* ``quantize_static_pallas`` — *calibrated* quantization: the scale is a
+  trace-time constant (the KL threshold), so the kernel is a single
+  elementwise pass — the paper's "thresholds become Const ops".
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT8_MAX = 127.0
+_EPS = 1e-12
+
+
+def _rowwise_kernel(x_ref, q_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), _EPS)
+    scale = amax / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX)
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize_rowwise_pallas(
+    x: jax.Array,                  # (M, K) f32/bf16
+    *,
+    block_rows: int = 128,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused dynamic row-wise quantizer. Returns (int8 (M,K), f32 (M,1))."""
+    M, K = x.shape
+    bm = min(block_rows, max(8, M))
+    pad = (-M) % bm
+    x_p = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    Mp = x_p.shape[0]
+
+    q, scale = pl.pallas_call(
+        _rowwise_kernel,
+        grid=(Mp // bm,),
+        in_specs=[pl.BlockSpec((bm, K), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, K), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Mp, K), jnp.int8),
+            jax.ShapeDtypeStruct((Mp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x_p)
+    return q[:M], scale[:M]
+
+
+def _static_kernel(x_ref, amax_ref, q_ref):
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.maximum(amax_ref[0, 0], _EPS) / INT8_MAX
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX
+                          ).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize_static_pallas(
+    x: jax.Array,                  # (M, K)
+    amax: jax.Array,               # scalar f32 — calibrated threshold
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Calibrated-scale quantizer: single elementwise pass to int8."""
+    M, K = x.shape
+    bm = min(block_rows, max(8, M))
+    pad = (-M) % bm
+    x_p = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    Mp = x_p.shape[0]
+    amax2 = jnp.asarray(amax, jnp.float32).reshape(1, 1)
+
+    q = pl.pallas_call(
+        _static_kernel,
+        grid=(Mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, K), jnp.int8),
+        interpret=interpret,
+    )(x_p, amax2)
+    return q[:M]

@@ -1,0 +1,3 @@
+"""Launchers: mesh.py (production meshes), dryrun.py (multi-pod dry-run),
+train.py / serve.py (drivers), specs.py (abstract sharded inputs),
+hlo_analysis.py (collective accounting)."""

@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init): the dry-run — and only the dry-run — sees 512
+placeholder CPU devices so the production meshes can build.
+
+Per cell this script:
+  1. builds abstract, sharded inputs (``launch/specs.py`` —
+     ShapeDtypeStruct only, no allocation),
+  2. ``jax.jit(step).lower(...).compile()`` under the production mesh,
+  3. records ``memory_analysis()`` (proves the per-device footprint fits),
+     ``cost_analysis()`` (FLOPs/bytes for §Roofline), and the parsed
+     collective schedule (``hlo_analysis.py``),
+  4. writes ``experiments/dryrun/<cell>.json``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--fp-baseline]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs, shapes_for
+from repro.core.ptq import FP_CONTEXT
+from repro.distributed.context import activation_sharding
+from repro.launch import specs as S
+from repro.launch.hlo_analysis import analyze_collectives
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamW
+from repro.train.step import make_train_step
+
+V5E = {"bf16_flops": 197e12, "int8_ops": 394e12, "hbm_gbps": 819e9,
+       "ici_gbps": 50e9}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               quantized: bool = True, accum: int = 0):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    bax = batch_axes(mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            opt = AdamW(lr=1e-4)
+            p_sds, o_sds, b_sds = S.train_arg_specs(cfg, shape, mesh, opt)
+            model = build_model(cfg)
+            # accum=1 default: sequence-sharded activations keep the layer
+            # carry small, and each extra microbatch repeats the FSDP grad
+            # reduce-scatter (params-sized wire traffic).
+            accum = accum or 1
+            grad_shardings = jax.tree_util.tree_map(
+                lambda s: s.sharding, p_sds,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            step = make_train_step(
+                model, opt, accum_steps=accum,
+                grad_shardings=grad_shardings,
+                mixed_precision=os.environ.get(
+                    "REPRO_MIXED_PRECISION", "0") == "1")
+            act_spec = P(S.train_batch_axes(mesh), "model", None)
+            with activation_sharding(act_spec):
+                lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                    p_sds, o_sds, b_sds)
+        elif shape.kind == "prefill":
+            model, p_sds, qctx = S.serve_param_specs(cfg, mesh)
+            if not quantized:
+                _, p_abs = S.abstract_params(cfg, quantized=False)
+                from repro.distributed.sharding import named_shardings
+                p_sds = S._attach(p_abs,
+                                  named_shardings(p_abs, mesh,
+                                                  tensor="model", fsdp=None,
+                                                  kv_heads=cfg.n_kv_heads))
+                qctx = FP_CONTEXT
+            b_sds = S.batch_input_specs(cfg, shape, mesh, kind="prefill")
+            st_sds = S.decode_state_specs(cfg, shape, mesh,
+                                          quantized=quantized and
+                                          qctx.quantize_kv)
+            fn = lambda p, b, s: model.prefill(p, b, s, quant=qctx)
+            lowered = jax.jit(fn, donate_argnums=(2,)).lower(
+                p_sds, b_sds, st_sds)
+        else:  # decode — serve_step
+            model, p_sds, qctx = S.serve_param_specs(cfg, mesh)
+            if not quantized:
+                _, p_abs = S.abstract_params(cfg, quantized=False)
+                from repro.distributed.sharding import named_shardings
+                p_sds = S._attach(p_abs,
+                                  named_shardings(p_abs, mesh,
+                                                  tensor="model", fsdp=None,
+                                                  kv_heads=cfg.n_kv_heads))
+                qctx = FP_CONTEXT
+            t_sds = S.decode_token_specs(cfg, shape, mesh)
+            st_sds = S.decode_state_specs(cfg, shape, mesh,
+                                          quantized=quantized and
+                                          qctx.quantize_kv)
+            fn = lambda p, t, s: model.decode_step(p, t, s, quant=qctx)
+            lowered = jax.jit(fn, donate_argnums=(2,)).lower(
+                p_sds, t_sds, st_sds)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = analyze_collectives(hlo)
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "quantized": quantized,
+        "kind": shape.kind,
+        "compile_s": round(compile_s, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_gib": round(
+                (mem.argument_size_in_bytes + mem.output_size_in_bytes +
+                 mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30, 3),
+        },
+        "cost_analysis": {
+            "flops_per_device": cost.get("flops", 0.0),
+            "bytes_per_device": cost.get("bytes accessed", 0.0),
+        },
+        "collectives": coll,
+        "model_params": get_config(arch).n_params,
+        "model_active_params": get_config(arch).n_active_params,
+    }
+
+
+def cell_name(arch, shape, multi_pod, quantized):
+    tag = "2pod" if multi_pod else "1pod"
+    q = "int8" if quantized else "bf16"
+    return f"{arch}__{shape}__{tag}__{q}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--fp-baseline", action="store_true",
+                    help="also lower the bf16 (unquantized) serving variant")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    archs = [a for a in archs if a != "transformer-base"]  # paper model: not a cell
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results, failures = [], []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape, skip in shapes_for(cfg):
+            if args.shape and shape.name != args.shape:
+                continue
+            for mp in meshes:
+                for q in ([True, False] if args.fp_baseline and
+                          shape.kind != "train" else [True]):
+                    name = cell_name(arch, shape.name, mp, q)
+                    path = os.path.join(args.out, name + ".json")
+                    if args.skip_existing and os.path.exists(path):
+                        print(f"SKIP (cached) {name}")
+                        continue
+                    if skip is not None:
+                        rec = {"arch": arch, "shape": shape.name,
+                               "mesh": "2x16x16" if mp else "16x16",
+                               "skipped": skip}
+                        with open(path, "w") as f:
+                            json.dump(rec, f, indent=2)
+                        print(f"SKIP {name}: {skip}")
+                        continue
+                    print(f"RUN  {name} ...", flush=True)
+                    try:
+                        rec = lower_cell(arch, shape.name, multi_pod=mp,
+                                         quantized=q)
+                        with open(path, "w") as f:
+                            json.dump(rec, f, indent=2)
+                        print(f"  OK mem={rec['memory']['peak_per_device_gib']}GiB "
+                              f"compile={rec['compile_s']}s "
+                              f"coll={rec['collectives']['total_bytes']/2**30:.2f}GiB",
+                              flush=True)
+                        results.append(rec)
+                    except Exception as e:
+                        failures.append((name, repr(e)))
+                        print(f"  FAIL {name}: {e}")
+                        traceback.print_exc()
+    print(f"\n{len(results)} cells OK, {len(failures)} failed")
+    for name, err in failures:
+        print(" FAILED:", name, err[:200])
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,274 @@
+"""Abstract input/state specs for the dry-run: ShapeDtypeStruct stand-ins
+with NamedShardings attached — weak-type-correct, shardable, no allocation.
+
+Covers, per (arch × shape) cell:
+* ``train``   — (params, opt_state, batch) for ``train_step``;
+* ``prefill`` — (params_q, batch, decode_state) for ``model.prefill``;
+* ``decode``  — (params_q, tokens, decode_state) for ``model.decode_step``
+  (one new token against a ``seq_len`` KV cache — ``serve_step``).
+
+Sharding layout (DESIGN §4): batch over (pod, data); vocab/heads/experts/ffn
+over "model"; training params+optimizer FSDP over (pod, data) as well;
+serving weights "model"-resident; long_500k shards the KV-cache *sequence*
+over (pod, data) since batch=1.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.policy import QuantPolicy
+from repro.core.ptq import QuantContext, quantize_model
+from repro.core.qtensor import QTensor
+from repro.distributed.sharding import named_shardings
+from repro.launch.mesh import batch_axes, fsdp_axes
+from repro.models import kv_cache as kvc
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamW
+
+
+def _fit(dim: int, axes, mesh: Mesh):
+    if axes is None or not axes:
+        return None
+    size = int(np.prod([mesh.shape[a] for a in
+                        ((axes,) if isinstance(axes, str) else axes)]))
+    return axes if dim % size == 0 else None
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, P(*spec)))
+
+
+def _attach(tree_abs: Any, shardings: Any) -> Any:
+    def go(a, s):
+        return jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s)
+    # QTensor nodes appear in both trees with matching structure
+    return jax.tree_util.tree_map(go, tree_abs, shardings)
+
+
+# ---------------------------------------------------------------------------
+# parameter trees (abstract)
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig, *, quantized: bool):
+    model = build_model(cfg)
+    if quantized:
+        policy = QuantPolicy(mode=cfg.quant.mode, act_quant="dynamic",
+                             quantize_kv_cache=cfg.quant.quantize_kv_cache)
+
+        def init_q(key):
+            return quantize_model(model.init(key), {}, policy)[0]
+        return model, jax.eval_shape(init_q, jax.random.PRNGKey(0))
+    return model, jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def train_batch_axes(mesh: Mesh) -> tuple:
+    """Training batch shards over (pod, data); "model" carries TP + the
+    Megatron-style sequence sharding of activations between blocks."""
+    return batch_axes(mesh)
+
+
+def train_seq_axes(mesh: Mesh):
+    return ("model",)
+
+
+def train_arg_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    optimizer: AdamW) -> Tuple[Any, Any, Any]:
+    """(params, opt_state, batch) abstract+sharded for train_step.
+
+    Training parallelism = FSDP over (pod, data) × TP over "model", with
+    sequence-parallel activations (the residual stream is (B@data, S@model,
+    D) between blocks, so the 80-layer scan carry stays ~67 MB/device).
+    """
+    model, p_abs = abstract_params(cfg, quantized=False)
+    shardings = named_shardings(p_abs, mesh, tensor="model",
+                                fsdp=fsdp_axes(mesh),
+                                kv_heads=cfg.n_kv_heads)
+    p_sds = _attach(p_abs, shardings)
+
+    o_abs = jax.eval_shape(optimizer.init, p_abs)
+    # m/v mirror params; step replicated
+    m_shard = shardings
+    rep = NamedSharding(mesh, P())
+    o_sds = type(o_abs)(
+        step=jax.ShapeDtypeStruct(o_abs.step.shape, o_abs.step.dtype,
+                                  sharding=rep),
+        m=_attach(o_abs.m, m_shard),
+        v=_attach(o_abs.v, m_shard),
+    )
+    batch_sds = batch_input_specs(cfg, shape, mesh, kind="train")
+    return p_sds, o_sds, batch_sds
+
+
+def serve_param_specs(cfg: ModelConfig, mesh: Mesh) -> Tuple[Any, Any, Any]:
+    """(model, params_sds, qctx) for prefill/decode lowering (INT8 weights)."""
+    model, p_abs = abstract_params(cfg, quantized=True)
+    shardings = named_shardings(p_abs, mesh, tensor="model", fsdp=None,
+                                kv_heads=cfg.n_kv_heads)
+    qctx = QuantContext(
+        policy=QuantPolicy(mode=cfg.quant.mode, act_quant="dynamic",
+                           quantize_kv_cache=cfg.quant.quantize_kv_cache),
+        impl="xla")
+    return model, _attach(p_abs, shardings), qctx
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+def batch_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      *, kind: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    if kind == "train":
+        bax = _fit(B, train_batch_axes(mesh), mesh)
+        sax = _fit(S, train_seq_axes(mesh), mesh) \
+            if train_seq_axes(mesh) else None
+    else:
+        bax = _fit(B, batch_axes(mesh), mesh)
+        sax = None
+    dt = jnp.dtype(cfg.dtype)
+
+    if cfg.enc_dec:
+        # backbone shapes: encoder gets the stub frame embeddings at S,
+        # decoder trains at S (teacher forcing)
+        batch: Dict[str, Any] = {}
+        if cfg.input_kind == "embeddings":
+            batch["src_embeds"] = _sds((B, S, cfg.d_model), dt, mesh,
+                                       (bax, sax, None))
+        else:
+            batch["src_tokens"] = _sds((B, S), jnp.int32, mesh, (bax, sax))
+        batch["src_lengths"] = _sds((B,), jnp.int32, mesh, (bax,))
+        if kind == "train":
+            batch["tgt_tokens"] = _sds((B, S), jnp.int32, mesh, (bax, sax))
+            batch["tgt_lengths"] = _sds((B,), jnp.int32, mesh, (bax,))
+        return batch
+
+    if cfg.input_kind == "embeddings":
+        batch = {"embeds": _sds((B, S, cfg.d_model), dt, mesh,
+                                (bax, sax, None))}
+    else:
+        batch = {"tokens": _sds((B, S), jnp.int32, mesh, (bax, sax))}
+    batch["lengths"] = _sds((B,), jnp.int32, mesh, (bax,))
+    if kind == "train":
+        batch["labels"] = _sds((B, S), jnp.int32, mesh, (bax, sax))
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# decode-state specs
+# ---------------------------------------------------------------------------
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       *, quantized: bool) -> Any:
+    """Abstract decode state with shardings for the serve_step lowering.
+
+    decode_32k: batch over (pod,data); heads over model when divisible.
+    long_500k (batch=1): cache *sequence* over (pod,data) — context
+    parallelism — heads over model.
+    """
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    extra = {}
+    if cfg.enc_dec:
+        extra["enc_len"] = 1536      # whisper stub encoder memory (~1500)
+    state_abs = jax.eval_shape(
+        lambda: model.init_decode_state(B, S, quantized=quantized, **extra))
+
+    bax = _fit(B, batch_axes(mesh), mesh)
+    seq_ax = None
+    if bax is None:  # batch unshardable (long_500k) → shard cache sequence
+        seq_ax = _fit(S, batch_axes(mesh), mesh)
+
+    def cache_spec(leaf, batch_dim: int):
+        """Shard (…, B, S, H[, dh]) cache-like leaves.
+
+        Heads take the model axis when they divide it; otherwise the cache
+        *sequence* does (flash-decoding style: per-shard partial softmax,
+        XLA inserts the tiny combine all-reduces).  Without this, GQA archs
+        with 4–8 kv heads replicate the 32k cache over all 16 model shards.
+        """
+        nd = leaf.ndim
+        spec = [None] * nd
+        if batch_dim < nd:
+            spec[batch_dim] = bax
+        heads_ax = None
+        if batch_dim + 2 < nd:       # heads
+            heads_ax = _fit(leaf.shape[batch_dim + 2], "model", mesh)
+            spec[batch_dim + 2] = heads_ax
+        if batch_dim + 1 < nd:
+            s_ax = seq_ax
+            if heads_ax is None and s_ax is None:
+                s_ax = _fit(leaf.shape[batch_dim + 1], "model", mesh)
+            spec[batch_dim + 1] = s_ax
+        return NamedSharding(mesh, P(*spec))
+
+    rep = NamedSharding(mesh, P())
+
+    def walk(node):
+        if isinstance(node, kvc.KVCache):
+            return kvc.KVCache(
+                k=_with(node.k, cache_spec(node.k, 1)),
+                v=_with(node.v, cache_spec(node.v, 1)),
+                k_scale=(None if node.k_scale is None
+                         else _with(node.k_scale, cache_spec(node.k_scale, 1))),
+                v_scale=(None if node.v_scale is None
+                         else _with(node.v_scale, cache_spec(node.v_scale, 1))),
+                lengths=_with(node.lengths,
+                              NamedSharding(mesh, P(bax))),
+            )
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if v is None:
+                    out[k] = None
+                elif k in ("cross_k", "cross_v"):
+                    out[k] = _with(v, cache_spec(v, 1))
+                elif k in ("src_lengths", "lengths"):
+                    out[k] = _with(v, NamedSharding(mesh, P(bax)))
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, jax.ShapeDtypeStruct):
+            return _state_leaf(node)
+        # NamedTuples (SSMState / MLSTMState / SLSTMState)
+        if hasattr(node, "_fields"):
+            return type(node)(*[walk(getattr(node, f))
+                                for f in node._fields])
+        return node
+
+    def _state_leaf(leaf):
+        """Recurrent states: (…, B, H, …) — shard batch; try model on the
+        widest trailing dim."""
+        nd = leaf.ndim
+        spec = [None] * nd
+        # find the batch dim: the axis whose size == B (first match)
+        for i, d in enumerate(leaf.shape):
+            if d == B:
+                spec[i] = bax
+                # widest dim after batch gets the model axis
+                rest = [(sz, j) for j, sz in enumerate(leaf.shape)
+                        if j > i]
+                for sz, j in sorted(rest, reverse=True):
+                    if _fit(sz, "model", mesh):
+                        spec[j] = "model"
+                        break
+                break
+        return _with(leaf, NamedSharding(mesh, P(*spec)))
+
+    def _with(leaf, sharding):
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sharding)
+
+    return walk(state_abs)
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    B = shape.global_batch
+    bax = _fit(B, batch_axes(mesh), mesh)
+    return _sds((B,), jnp.int32, mesh, (bax,))

@@ -1,0 +1,4 @@
+"""Model zoo: composable JAX model definitions for the assigned archs."""
+
+from repro.models.registry import build_model  # noqa: F401
+from repro.models import kv_cache  # noqa: F401

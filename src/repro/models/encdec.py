@@ -1,0 +1,332 @@
+"""Encoder-decoder transformer — whisper-base backbone and the paper's own
+Transformer NMT model (Vaswani base).
+
+Structure mirrors the paper's workload: encoder (bidirectional self-attn),
+auto-regressive decoder (causal self-attn + cross-attn), the decoder
+while-loop being where the paper's GatherNd/batching optimizations live.
+
+Cross-attention K/V are computed once from the encoder memory and cached —
+with INT8 cache quantization they are quantized *once* per request
+(the cheapest possible activation quantization site).
+
+Inputs: ``src_tokens`` (B, S_enc) or ``src_embeds`` (B, S_enc, D) for the
+audio stub; ``tgt_tokens`` (B, S_dec) for teacher forcing.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calibration import Taps
+from repro.core.ptq import FP_CONTEXT, QuantContext
+from repro.distributed.context import constrain
+from repro.models import kv_cache as kvc
+from repro.models.attention import attention, attention_init
+from repro.models.ffn import ffn, ffn_init
+from repro.models.layers import embed, embedding_init, norm, norm_init, unembed
+
+
+def sinusoidal_positions(S: int, D: int, dtype) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, D, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / D)
+    pe = jnp.zeros((S, D), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe.astype(dtype)
+
+
+class EncDecLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def _enc_block_init(self, key, stack=()):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "attn_norm": norm_init(cfg.d_model, cfg.norm, stack=stack),
+            "attn": attention_init(k1, cfg, stack=stack),
+            "ffn_norm": norm_init(cfg.d_model, cfg.norm, stack=stack),
+            "ffn": ffn_init(k2, cfg, stack=stack),
+        }
+
+    def _dec_block_init(self, key, stack=()):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "self_norm": norm_init(cfg.d_model, cfg.norm, stack=stack),
+            "self_attn": attention_init(k1, cfg, stack=stack),
+            "cross_norm": norm_init(cfg.d_model, cfg.norm, stack=stack),
+            "cross_attn": attention_init(k2, cfg, stack=stack),
+            "ffn_norm": norm_init(cfg.d_model, cfg.norm, stack=stack),
+            "ffn": ffn_init(k3, cfg, stack=stack),
+        }
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        n_enc, n_dec = cfg.n_enc_layers, cfg.n_layers
+        keys = jax.random.split(key, n_enc + n_dec + 3)
+        params: Dict[str, Any] = {
+            "embed": embedding_init(keys[0], cfg.vocab, cfg.d_model),
+            "enc_final_norm": norm_init(cfg.d_model, cfg.norm),
+            "dec_final_norm": norm_init(cfg.d_model, cfg.norm),
+        }
+        if cfg.scan_layers:
+            params["enc_blocks"] = self._enc_block_init(keys[1],
+                                                        stack=(n_enc,))
+            params["dec_blocks"] = self._dec_block_init(keys[2],
+                                                        stack=(n_dec,))
+        else:
+            for i in range(n_enc):
+                params[f"enc_blocks.{i}"] = self._enc_block_init(keys[1 + i])
+            for i in range(n_dec):
+                params[f"dec_blocks.{i}"] = self._dec_block_init(
+                    keys[1 + n_enc + i])
+        return params
+
+    # ---------------------------------------------------------------- encode
+    def encode(self, params, batch, *, quant: QuantContext = FP_CONTEXT,
+               taps: Optional[Taps] = None, unroll: bool = False) -> jax.Array:
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        if "src_embeds" in batch:
+            x = batch["src_embeds"].astype(dt)
+        else:
+            x = embed(params["embed"], batch["src_tokens"], dt)
+            x = x * math.sqrt(cfg.d_model)
+        B, S, D = x.shape
+        x = x + sinusoidal_positions(S, D, dt)[None]
+        lengths = batch.get("src_lengths")
+
+        def block(x, bparams, site):
+            h = norm(bparams["attn_norm"], x, cfg.norm)
+            a, _ = attention(bparams["attn"], h, cfg=cfg, site=f"{site}/attn",
+                             quant=quant, taps=taps, causal=False, rope=False,
+                             kv_lengths=lengths, unroll=unroll)
+            x = x + a
+            h = norm(bparams["ffn_norm"], x, cfg.norm)
+            return x + ffn(bparams["ffn"], h, cfg=cfg, site=f"{site}/ffn",
+                           quant=quant, taps=taps)
+
+        if cfg.scan_layers:
+            def layer(x, bp):
+                f = lambda xx: block(xx, bp, "enc_blocks.*")
+                if cfg.remat:
+                    f = jax.checkpoint(f)
+                return f(constrain(x)), None
+            x, _ = jax.lax.scan(layer, x, params["enc_blocks"])
+        else:
+            for i in range(cfg.n_enc_layers):
+                x = block(x, params[f"enc_blocks.{i}"], f"enc_blocks.{i}")
+        return norm(params["enc_final_norm"], x, cfg.norm)
+
+    # ---------------------------------------------------------------- decode
+    def _dec_block(self, bparams, x, memory, *, site, quant, taps, positions,
+                   kv_lengths, memory_lengths, unroll, cache_view=None):
+        cfg = self.cfg
+        h = norm(bparams["self_norm"], x, cfg.norm)
+        a, entries = attention(
+            bparams["self_attn"], h, cfg=cfg, site=f"{site}/self_attn",
+            quant=quant, taps=taps, positions=positions,
+            kv_lengths=kv_lengths, cache=cache_view, rope=False,
+            unroll=unroll)
+        x = x + a
+        h = norm(bparams["cross_norm"], x, cfg.norm)
+        c, _ = attention(
+            bparams["cross_attn"], h, cfg=cfg, site=f"{site}/cross_attn",
+            quant=quant, taps=taps, memory=memory,
+            memory_lengths=memory_lengths, unroll=unroll)
+        x = x + c
+        h = norm(bparams["ffn_norm"], x, cfg.norm)
+        f = ffn(bparams["ffn"], h, cfg=cfg, site=f"{site}/ffn", quant=quant,
+                taps=taps)
+        return x + f, entries
+
+    def _cross_kv(self, bparams, memory, *, site, quant, taps):
+        """Project encoder memory to this layer's cross K/V (done once)."""
+        cfg = self.cfg
+        B, S, _ = memory.shape
+        from repro.models.layers import dense  # local import to avoid cycle
+        k = dense(bparams["cross_attn"]["k_proj"], memory,
+                  site=f"{site}/cross_attn/k_proj", quant=quant,
+                  taps=taps).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+        v = dense(bparams["cross_attn"]["v_proj"], memory,
+                  site=f"{site}/cross_attn/v_proj", quant=quant,
+                  taps=taps).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+        return k, v
+
+    def forward(self, params, batch, *, quant: QuantContext = FP_CONTEXT,
+                taps: Optional[Taps] = None, unroll: bool = False
+                ) -> Tuple[jax.Array, Dict]:
+        """Teacher-forced training forward: returns decoder logits."""
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        memory = self.encode(params, batch, quant=quant, taps=taps,
+                             unroll=unroll)
+        mem_lengths = batch.get("src_lengths")
+
+        x = embed(params["embed"], batch["tgt_tokens"], dt)
+        x = x * math.sqrt(cfg.d_model)
+        B, S, D = x.shape
+        x = x + sinusoidal_positions(S, D, dt)[None]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        tgt_lengths = batch.get("tgt_lengths")
+
+        def block(x, bparams, site):
+            kv = self._cross_kv(bparams, memory, site=site, quant=quant,
+                                taps=taps)
+            y, _ = self._dec_block(bparams, x, kv, site=site, quant=quant,
+                                   taps=taps, positions=positions,
+                                   kv_lengths=tgt_lengths,
+                                   memory_lengths=mem_lengths, unroll=unroll)
+            return y
+
+        if cfg.scan_layers:
+            def layer(x, bp):
+                f = lambda xx: block(xx, bp, "dec_blocks.*")
+                if cfg.remat:
+                    f = jax.checkpoint(f)
+                return f(constrain(x)), None
+            x, _ = jax.lax.scan(layer, x, params["dec_blocks"])
+        else:
+            for i in range(cfg.n_layers):
+                x = block(x, params[f"dec_blocks.{i}"], f"dec_blocks.{i}")
+
+        x = norm(params["dec_final_norm"], x, cfg.norm)
+        logits = unembed(params["embed"], x)
+        return logits, {}
+
+    # ------------------------------------------------------- serving states
+    def init_decode_state(self, batch: int, max_len: int, *,
+                          quantized: bool,
+                          enc_len: Optional[int] = None) -> Dict[str, Any]:
+        """``enc_len``: pre-allocate cross K/V buffers of that length (used
+        by the dry-run to lower serve_step without running prefill)."""
+        cfg = self.cfg
+        state: Dict[str, Any] = {
+            "cache": kvc.init_cache(cfg.n_layers, batch, max_len,
+                                    cfg.n_kv_heads, cfg.hd,
+                                    quantized=quantized,
+                                    dtype=cfg.activation_dtype),
+            "cross_k": None, "cross_v": None, "src_lengths": None,
+        }
+        if enc_len is not None:
+            shape = (cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.hd)
+            state["cross_k"] = jnp.zeros(shape, cfg.activation_dtype)
+            state["cross_v"] = jnp.zeros(shape, cfg.activation_dtype)
+            state["src_lengths"] = jnp.full((batch,), enc_len, jnp.int32)
+        return state
+
+    def prefill(self, params, batch, state, *,
+                quant: QuantContext = FP_CONTEXT) -> Tuple[jax.Array, Dict]:
+        """Encode source; compute+cache per-layer cross K/V; emit BOS logits."""
+        cfg = self.cfg
+        memory = self.encode(params, batch, quant=quant)
+        B = memory.shape[0]
+        src_lengths = batch.get(
+            "src_lengths", jnp.full((B,), memory.shape[1], jnp.int32))
+
+        if cfg.scan_layers:
+            def layer(_, bp):
+                k, v = self._cross_kv(bp, memory, site="dec_blocks.*",
+                                      quant=quant, taps=None)
+                return None, (k, v)
+            _, (ck, cv) = jax.lax.scan(layer, None, params["dec_blocks"])
+        else:
+            ks, vs = [], []
+            for i in range(cfg.n_layers):
+                k, v = self._cross_kv(params[f"dec_blocks.{i}"], memory,
+                                      site=f"dec_blocks.{i}", quant=quant,
+                                      taps=None)
+                ks.append(k); vs.append(v)
+            ck, cv = jnp.stack(ks), jnp.stack(vs)
+
+        state = dict(state)
+        state["cross_k"], state["cross_v"] = ck, cv
+        state["src_lengths"] = src_lengths
+        bos = jnp.zeros((B,), jnp.int32)
+        return self.decode_step(params, bos, state, quant=quant)
+
+    def decode_step(self, params, tokens, state, *,
+                    quant: QuantContext = FP_CONTEXT) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        cache = state["cache"]
+        B = tokens.shape[0]
+        x = embed(params["embed"], tokens[:, None], dt) * math.sqrt(cfg.d_model)
+        pe = sinusoidal_positions(cache.capacity, cfg.d_model, dt)
+        x = x + pe[cache.lengths][:, None, :]
+
+        def block_with_cache(x, bparams, kl, vl, ksl, vsl, ck, cv, site):
+            view = kvc.LayerCacheView(k=kl, v=vl, k_scale=ksl, v_scale=vsl,
+                                      lengths=cache.lengths)
+            y, entries = self._dec_block(
+                bparams, x, (ck, cv), site=site, quant=quant, taps=None,
+                positions=None, kv_lengths=None,
+                memory_lengths=state["src_lengths"], unroll=False,
+                cache_view=view)
+            return y, entries
+
+        if cfg.scan_layers:
+            # full self-cache in the scan carry (single live copy — see
+            # transformer.py); cross K/V are read-only xs.
+            idx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+            quantized = cache.quantized
+
+            def layer(carry, xs):
+                x, kc, vc, ksc, vsc = carry
+                bp, ck, cv, li = xs
+                kl = jax.lax.dynamic_index_in_dim(kc, li, 0, keepdims=False)
+                vl = jax.lax.dynamic_index_in_dim(vc, li, 0, keepdims=False)
+                ksl = (jax.lax.dynamic_index_in_dim(ksc, li, 0,
+                                                    keepdims=False)
+                       if quantized else None)
+                vsl = (jax.lax.dynamic_index_in_dim(vsc, li, 0,
+                                                    keepdims=False)
+                       if quantized else None)
+                x, e = block_with_cache(x, bp, kl, vl, ksl, vsl, ck, cv,
+                                        "dec_blocks.*")
+                kc = jax.lax.dynamic_update_index_in_dim(kc, e[0], li, 0)
+                vc = jax.lax.dynamic_update_index_in_dim(vc, e[1], li, 0)
+                if quantized:
+                    ksc = jax.lax.dynamic_update_index_in_dim(ksc, e[2],
+                                                              li, 0)
+                    vsc = jax.lax.dynamic_update_index_in_dim(vsc, e[3],
+                                                              li, 0)
+                return (x, kc, vc, ksc, vsc), None
+
+            init = (x, cache.k, cache.v,
+                    cache.k_scale if quantized else jnp.zeros((), x.dtype),
+                    cache.v_scale if quantized else jnp.zeros((), x.dtype))
+            (x, k_c, v_c, ks_c, vs_c), _ = jax.lax.scan(
+                layer, init,
+                (params["dec_blocks"], state["cross_k"], state["cross_v"],
+                 idx))
+            if not quantized:
+                ks_c = vs_c = None
+        else:
+            kL, vL, ksL, vsL = [], [], [], []
+            for i in range(cfg.n_layers):
+                ksl = cache.k_scale[i] if cache.quantized else None
+                vsl = cache.v_scale[i] if cache.quantized else None
+                x, e = block_with_cache(
+                    x, params[f"dec_blocks.{i}"], cache.k[i], cache.v[i],
+                    ksl, vsl, state["cross_k"][i], state["cross_v"][i],
+                    f"dec_blocks.{i}")
+                kL.append(e[0]); vL.append(e[1])
+                ksL.append(e[2]); vsL.append(e[3])
+            k_c, v_c = jnp.stack(kL), jnp.stack(vL)
+            ks_c = jnp.stack(ksL) if cache.quantized else None
+            vs_c = jnp.stack(vsL) if cache.quantized else None
+
+        state = dict(state)
+        state["cache"] = kvc.KVCache(k=k_c, v=v_c, k_scale=ks_c,
+                                     v_scale=vs_c, lengths=cache.lengths + 1)
+        x = norm(params["dec_final_norm"], x, cfg.norm)
+        logits = unembed(params["embed"], x)[:, 0]
+        return logits, state

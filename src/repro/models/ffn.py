@@ -1,0 +1,46 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU MLP (enc-dec family).
+
+All matmuls route through :func:`repro.models.layers.dense`, so every FFN in
+the zoo picks up the paper's INT8 path when its weights are quantized.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calibration import Taps
+from repro.core.ptq import FP_CONTEXT, QuantContext
+from repro.models.layers import dense, dense_init
+
+
+def ffn_init(key, cfg, *, stack: tuple = (), dtype=jnp.float32):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.ffn == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "gate": dense_init(k1, d, f, dtype=dtype, stack=stack),
+            "up": dense_init(k2, d, f, dtype=dtype, stack=stack),
+            "down": dense_init(k3, f, d, dtype=dtype, stack=stack),
+        }
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "in": dense_init(k1, d, f, bias=cfg.attn_bias, dtype=dtype, stack=stack),
+        "out": dense_init(k2, f, d, bias=cfg.attn_bias, dtype=dtype, stack=stack),
+    }
+
+
+def ffn(params, x: jax.Array, *, cfg, site: str,
+        quant: QuantContext = FP_CONTEXT,
+        taps: Optional[Taps] = None) -> jax.Array:
+    if cfg.ffn == "swiglu":
+        g = dense(params["gate"], x, site=f"{site}/gate", quant=quant, taps=taps)
+        u = dense(params["up"], x, site=f"{site}/up", quant=quant, taps=taps)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return dense(params["down"], h, site=f"{site}/down", quant=quant,
+                     taps=taps)
+    h = dense(params["in"], x, site=f"{site}/in", quant=quant, taps=taps)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return dense(params["out"], h, site=f"{site}/out", quant=quant, taps=taps)

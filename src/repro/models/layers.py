@@ -1,0 +1,147 @@
+"""Shared model layers.  ``dense`` is the quantization integration point.
+
+Conventions (repo-wide):
+* every linear is a dict node ``{"w": (…, d_in, d_out)[, "b": (d_out,)]}``;
+* quantized weights are :class:`QTensor` with pre-broadcast (keepdims)
+  per-output-channel scales, so stacked layers slice cleanly in `lax.scan`;
+* each linear has a *site* name (its params path); calibration taps record
+  the matmul input under that name and the QuantContext resolves activation
+  thresholds / policy by it.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calibration import Taps, record
+from repro.core.ptq import FP_CONTEXT, QuantContext
+from repro.core.qtensor import QTensor
+from repro.core.quantize import quantize_with_thresholds
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, stack: tuple = ()) -> Dict[str, Any]:
+    scale = 1.0 / math.sqrt(d_in)
+    node = {"w": jax.random.uniform(key, (*stack, d_in, d_out), dtype,
+                                    -scale, scale)}
+    if bias:
+        node["b"] = jnp.zeros((*stack, d_out), dtype)
+    return node
+
+
+def embedding_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d_model), dtype) * 0.02}
+
+
+def norm_init(d: int, kind: str, *, stack: tuple = (), dtype=jnp.float32):
+    node = {"scale": jnp.ones((*stack, d), dtype)}
+    if kind == "layernorm":
+        node["bias"] = jnp.zeros((*stack, d), dtype)
+    return node
+
+
+# ---------------------------------------------------------------------------
+# forward ops
+# ---------------------------------------------------------------------------
+
+def dense(
+    node: Dict[str, Any],
+    x: jax.Array,
+    *,
+    site: str,
+    quant: QuantContext = FP_CONTEXT,
+    taps: Optional[Taps] = None,
+) -> jax.Array:
+    """Linear layer: fp einsum, or the paper's INT8 path when ``w`` is a QTensor.
+
+    INT8 path: activation is quantized with the calibrated static threshold
+    (KL-search constant — paper §5.5 removed the runtime Min/Max for exactly
+    this case) or dynamically per-row as fallback; the matmul runs s8·s8→s32
+    on the MXU with the dequant epilogue fused (``kernels/int8_matmul``).
+    """
+    w = node["w"]
+    b = node.get("b")
+    record(taps, site, x)
+
+    if isinstance(w, QTensor):
+        thr = quant.activation_thresholds(site)
+        if thr is None:
+            xq = ops.quantize_rowwise(x, impl=quant.impl)
+        elif thr.symmetric:
+            xq = ops.quantize_static(x, thr.t_max, impl=quant.impl)
+        else:
+            # independent mode: affine activation quantization; the
+            # zero-point correction folds into the matmul epilogue.
+            xq = quantize_with_thresholds(x, thr)
+        w_scale = w.scale.reshape(1, w.data.shape[-1])
+        w2 = QTensor(w.data, w_scale, jnp.zeros((), jnp.float32), None)
+        bias = None if b is None else b.astype(jnp.float32)
+        y = ops.int8_matmul(xq, w2, bias, out_dtype=x.dtype, impl=quant.impl)
+        return y
+
+    y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def embed(node, ids: jax.Array, dtype) -> jax.Array:
+    return node["table"].astype(dtype)[ids]
+
+
+def unembed(node, x: jax.Array) -> jax.Array:
+    """Logits head via tied embedding transpose (f32 accumulation)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      node["table"].astype(jnp.float32))
+
+
+def rmsnorm(node, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * node["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(node, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * node["scale"].astype(jnp.float32)
+    if "bias" in node:
+        y = y + node["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm(node, x: jax.Array, kind: str) -> jax.Array:
+    return layernorm(node, x) if kind == "layernorm" else rmsnorm(node, x)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

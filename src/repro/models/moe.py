@@ -1,0 +1,152 @@
+"""Mixture-of-Experts FFN with GShard-style grouped einsum dispatch.
+
+Routing/dispatch design (SPMD-friendly; experts shard over the "model" mesh
+axis, token groups over "data"):
+
+* tokens are split into fixed groups of ``group_size`` — capacity is
+  per-group (``C = ceil(group_size·top_k/E · capacity_factor)``), which keeps
+  the dispatch one-hot at a bounded (G, S_g, E, C) instead of cubic in total
+  tokens;
+* dispatch/combine are einsums against that one-hot (the battle-tested
+  GShard lowering — XLA partitions it into all-to-all-equivalent collective
+  matmuls);
+* expert FFNs are *grouped matmuls* — per-expert batched s8·s8→s32 through
+  ``kernels.ops.int8_matmul_batched`` when quantized.
+
+The router linear is deny-listed from quantization by default
+(``core.policy.DEFAULT_DENY``): its logits feed a softmax/top-k, the class of
+op the paper keeps in FP32.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calibration import Taps, record
+from repro.core.ptq import FP_CONTEXT, QuantContext
+from repro.core.qtensor import QTensor
+from repro.kernels import ops
+from repro.models.layers import dense, dense_init
+
+
+def moe_init(key, cfg, *, stack: tuple = (), dtype=jnp.float32):
+    d, f, m = cfg.d_model, cfg.d_ff, cfg.moe
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, d, m.n_experts, dtype=dtype, stack=stack),
+        "experts": {
+            "gate": dense_init(kg, d, f, dtype=dtype,
+                               stack=(*stack, m.n_experts)),
+            "up": dense_init(ku, d, f, dtype=dtype,
+                             stack=(*stack, m.n_experts)),
+            "down": dense_init(kd, f, d, dtype=dtype,
+                               stack=(*stack, m.n_experts)),
+        },
+    }
+
+
+def _expert_dense(node, x: jax.Array, *, site: str, quant: QuantContext,
+                  taps: Optional[Taps]) -> jax.Array:
+    """Batched per-expert linear: x (E, M, K) @ w (E, K, N)."""
+    w = node["w"]
+    record(taps, site, x)
+    if isinstance(w, QTensor):
+        thr = quant.activation_thresholds(site)
+        if thr is not None and thr.symmetric:
+            scale = jnp.float32(thr.t_max) / 127.0
+            q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+            xq = QTensor(q.astype(jnp.int8), scale, jnp.zeros(()), None)
+        else:
+            E, M, K = x.shape
+            amax = jnp.maximum(
+                jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                        keepdims=True), 1e-12)
+            q = jnp.clip(jnp.round(x.astype(jnp.float32) / (amax / 127.0)),
+                         -127, 127)
+            xq = QTensor(q.astype(jnp.int8), amax / 127.0, jnp.zeros(()), None)
+        w_scale = w.scale.reshape(w.data.shape[0], 1, w.data.shape[-1])
+        wq = QTensor(w.data, w_scale, jnp.zeros(()), None)
+        return ops.int8_matmul_batched(xq, wq, out_dtype=x.dtype,
+                                       impl=quant.impl)
+    return jnp.einsum("emk,ekn->emn", x, w.astype(x.dtype))
+
+
+def moe_ffn(
+    params,
+    x: jax.Array,                 # (B, S, D)
+    *,
+    cfg,
+    site: str,
+    quant: QuantContext = FP_CONTEXT,
+    taps: Optional[Taps] = None,
+):
+    """Returns (output (B,S,D), aux) where aux carries load-balance stats."""
+    B, S, D = x.shape
+    m = cfg.moe
+    E, K = m.n_experts, m.top_k
+    dt = x.dtype
+
+    tokens = B * S
+    g_sz = min(m.group_size, tokens)
+    # pad token count to a whole number of groups
+    pad = (-tokens) % g_sz
+    x_flat = x.reshape(tokens, D)
+    if pad:
+        x_flat = jnp.pad(x_flat, ((0, pad), (0, 0)))
+    G = (tokens + pad) // g_sz
+    xg = x_flat.reshape(G, g_sz, D)
+
+    # ---- routing (kept fp32: softmax/top-k — paper §3 rule) ----
+    logits = dense(params["router"], xg, site=f"{site}/router", quant=quant,
+                   taps=taps).astype(jnp.float32)            # (G, Sg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # (G, Sg, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    capacity = max(int(math.ceil(g_sz * K / E * m.capacity_factor)), 4)
+
+    # position of each (token, choice) within its expert queue
+    onehot_e = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # (G,Sg,K,E)
+    flat = onehot_e.reshape(G, g_sz * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # (G,Sg*K,E)
+    pos = jnp.sum(pos.reshape(G, g_sz, K, E) * onehot_e, axis=-1)  # (G,Sg,K)
+    keep = pos < capacity
+
+    onehot_c = jax.nn.one_hot(pos, capacity, dtype=dt)         # (G,Sg,K,C)
+    onehot_c = onehot_c * keep[..., None].astype(dt)
+    oh_e = onehot_e.astype(dt)
+    dispatch = jnp.einsum("gske,gskc->gsec", oh_e, onehot_c)   # (G,Sg,E,C)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", oh_e, onehot_c,
+                         gate_vals.astype(dt))
+
+    # ---- dispatch → expert FFN (grouped) → combine ----
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, xg)            # (E,G,C,D)
+    xe = xe.reshape(E, G * capacity, D)
+    g = _expert_dense(params["experts"]["gate"], xe,
+                      site=f"{site}/experts/gate", quant=quant, taps=taps)
+    u = _expert_dense(params["experts"]["up"], xe,
+                      site=f"{site}/experts/up", quant=quant, taps=taps)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    y_e = _expert_dense(params["experts"]["down"], h,
+                        site=f"{site}/experts/down", quant=quant, taps=taps)
+    y_e = y_e.reshape(E, G, capacity, D)
+    y = jnp.einsum("egcd,gsec->gsd", y_e, combine)             # (G,Sg,D)
+
+    y = y.reshape(-1, D)
+    if pad:
+        y = y[:tokens]
+    y = y.reshape(B, S, D)
+
+    # load-balance aux loss terms (Switch-style)
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0].reshape(-1), E, dtype=jnp.float32),
+        axis=0)
+    aux = {"load_balance_loss": E * jnp.sum(me * ce),
+           "dropped_fraction": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return y, aux

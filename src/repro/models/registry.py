@@ -1,0 +1,34 @@
+"""Model registry: ModelConfig.family → model class.
+
+Every model exposes the same protocol:
+
+    model = build_model(cfg)
+    params           = model.init(key)
+    logits, aux      = model.forward(params, batch, quant=..., taps=...)
+    state            = model.init_decode_state(B, max_len, quantized=...)
+    logits, state    = model.prefill(params, batch, state, quant=...)
+    logits, state    = model.decode_step(params, tokens, state, quant=...)
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import HybridLM
+from repro.models.transformer import DecoderLM
+from repro.models.xlstm_model import XLSTMLM
+
+_FAMILIES = {
+    "dense": DecoderLM,
+    "moe": DecoderLM,
+    "vlm": DecoderLM,
+    "audio": EncDecLM,
+    "hybrid": HybridLM,
+    "ssm": XLSTMLM,
+}
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family not in _FAMILIES:
+        raise KeyError(f"unknown family {cfg.family}")
+    return _FAMILIES[cfg.family](cfg)

@@ -1,0 +1,224 @@
+"""Mamba2 (SSD) block — the zamba2 backbone.
+
+Implements the chunked state-space-dual algorithm: within a chunk the output
+is an attention-like einsum against a lower-triangular decay matrix; across
+chunks a ``lax.scan`` carries the (H, N, P) state.  Decode is the O(1)
+recurrence.  Chunking keeps live memory at O(S·Lc) per head instead of
+O(S²), and the scan keeps the HLO depth-independent.
+
+Quantization (paper technique applied per DESIGN §Arch-applicability): the
+in/out projections are quantizable ``dense`` sites; the recurrence itself —
+exp/softplus/divisions — stays f32, the paper's "Softmax & LayerNorm stay
+FP32" rule transplanted to SSMs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calibration import Taps
+from repro.core.ptq import FP_CONTEXT, QuantContext
+from repro.models.layers import dense, dense_init, rmsnorm
+
+
+class SSMState(NamedTuple):
+    h: jax.Array          # (B, H, N, P) f32 — SSM state
+    conv: jax.Array       # (B, W-1, d_conv) activation dtype — conv tail
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return s, d_inner, n_heads
+
+
+def ssm_init(key, cfg, *, stack: tuple = (), dtype=jnp.float32):
+    s, d_inner, H = _dims(cfg)
+    N = s.state
+    k1, k2, k3 = jax.random.split(key, 3)
+    # packed in-projection: [z (d_inner) | x (d_inner) | B (N) | C (N) | dt (H)]
+    d_proj = 2 * d_inner + 2 * N + H
+    return {
+        "in_proj": dense_init(k1, cfg.d_model, d_proj, dtype=dtype, stack=stack),
+        "out_proj": dense_init(k2, d_inner, cfg.d_model, dtype=dtype,
+                               stack=stack),
+        "conv_w": jax.random.normal(k3, (*stack, s.conv_width, d_inner),
+                                    dtype) * 0.1,
+        "conv_b": jnp.zeros((*stack, d_inner), dtype),
+        "A_log": jnp.zeros((*stack, H), dtype),            # A = -exp(A_log)
+        "D_skip": jnp.ones((*stack, H), dtype),
+        "dt_bias": jnp.zeros((*stack, H), dtype),
+        "norm": {"scale": jnp.ones((*stack, d_inner), dtype)},
+    }
+
+
+def _split_proj(proj, d_inner: int, N: int, H: int):
+    z = proj[..., :d_inner]
+    xs = proj[..., d_inner:2 * d_inner]
+    Bm = proj[..., 2 * d_inner:2 * d_inner + N]
+    Cm = proj[..., 2 * d_inner + N:2 * d_inner + 2 * N]
+    dt = proj[..., 2 * d_inner + 2 * N:]
+    return z, xs, Bm, Cm, dt
+
+
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv along sequence. x: (B,S,Dc); w: (W,Dc)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_tail = xp[:, -(W - 1):] if W > 1 else tail
+    return out + b, new_tail
+
+
+def ssm_block(
+    params,
+    x: jax.Array,                   # (B, S, D)
+    *,
+    cfg,
+    site: str,
+    quant: QuantContext = FP_CONTEXT,
+    taps: Optional[Taps] = None,
+    state: Optional[SSMState] = None,
+    return_state: bool = False,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Optional[SSMState]]:
+    """Full-sequence (train/prefill) Mamba2 block.  Chunked SSD."""
+    s, d_inner, H = _dims(cfg)
+    N, P, Lc = s.state, s.head_dim, s.chunk
+    B, S, D = x.shape
+    dt_ = x.dtype
+
+    proj = dense(params["in_proj"], x, site=f"{site}/in_proj", quant=quant,
+                 taps=taps)
+    z, xs, Bm, Cm, dt = _split_proj(proj, d_inner, N, H)
+
+    conv_tail = state.conv if state is not None else None
+    xs, new_tail = _causal_conv(xs, params["conv_w"].astype(dt_),
+                                params["conv_b"].astype(dt_), conv_tail)
+    xs = jax.nn.silu(xs.astype(jnp.float32))
+
+    # heads
+    xh = xs.reshape(B, S, H, P)                                  # f32
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))            # (H,)
+    Bf = Bm.astype(jnp.float32)                                  # (B,S,N)
+    Cf = Cm.astype(jnp.float32)
+
+    # chunking
+    pad = (-S) % Lc
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bf = jnp.pad(Bf, ((0, 0), (0, pad), (0, 0)))
+        Cf = jnp.pad(Cf, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    Nc = Sp // Lc
+    xh = xh.reshape(B, Nc, Lc, H, P)
+    dtc = dt.reshape(B, Nc, Lc, H)
+    Bc = Bf.reshape(B, Nc, Lc, N)
+    Cc = Cf.reshape(B, Nc, Lc, N)
+
+    dA = dtc * A                                               # (B,Nc,Lc,H)
+    cum = jnp.cumsum(dA, axis=2)                               # within-chunk
+
+    h0 = (state.h if state is not None
+          else jnp.zeros((B, H, N, P), jnp.float32))
+
+    def chunk_step(h, xs_c):
+        x_c, dt_c, B_c, C_c, cum_c = xs_c
+        # x_c: (B,Lc,H,P); B_c/C_c: (B,Lc,N); cum_c: (B,Lc,H)
+        xbar = x_c * dt_c[..., None]                           # (B,Lc,H,P)
+        # intra-chunk: y[i] = Σ_{j<=i} C_i·B_j exp(cum_i - cum_j) x̄_j
+        decay = jnp.exp(cum_c[:, :, None, :] - cum_c[:, None, :, :])
+        tri = jnp.tril(jnp.ones((x_c.shape[1], x_c.shape[1]), bool))
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)   # (B,Lc,Lc,H)
+        scores = jnp.einsum("bin,bjn->bij", C_c, B_c)          # (B,Lc,Lc)
+        y_diag = jnp.einsum("bij,bijh,bjhp->bihp", scores, decay, xbar)
+        # inter-chunk: y[i] += C_i · h_prev · exp(cum_i)
+        y_off = jnp.einsum("bin,bhnp,bih->bihp", C_c, h,
+                           jnp.exp(cum_c))
+        # state update: h = h·exp(cum_last) + Σ_j exp(cum_last - cum_j) B_j x̄ᵀ
+        last = cum_c[:, -1, :]                                 # (B,H)
+        h_decay = jnp.exp(last)[:, :, None, None]
+        chunk_state = jnp.einsum("bjn,bjh,bjhp->bhnp", B_c,
+                                 jnp.exp(last[:, None, :] - cum_c), xbar)
+        h_new = h * h_decay + chunk_state
+        return h_new, y_diag + y_off
+
+    xs_seq = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(dtc, 1, 0),
+              jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0),
+              jnp.moveaxis(cum, 1, 0))
+    if unroll:  # roofline cost extraction (see EXPERIMENTS.md §Roofline)
+        h, ys = h0, []
+        for i in range(Nc):
+            h, y_i = chunk_step(h, tuple(a[i] for a in xs_seq))
+            ys.append(y_i)
+        h_final, y = h, jnp.stack(ys, axis=0)
+    else:
+        h_final, y = jax.lax.scan(chunk_step, h0, xs_seq)
+    y = jnp.moveaxis(y, 0, 1).reshape(B, Sp, H, P)[:, :S]
+
+    y = y + params["D_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.reshape(B, Sp, H, P)[:, :S]
+    y = y.reshape(B, S, d_inner)
+
+    # gated RMSNorm then out-projection (recurrence output normalizer f32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(params["norm"], y.astype(dt_))
+    out = dense(params["out_proj"], y, site=f"{site}/out_proj", quant=quant,
+                taps=taps)
+
+    new_state = None
+    if return_state:
+        new_state = SSMState(h=h_final, conv=new_tail)
+    return out, new_state
+
+
+def ssm_decode_step(
+    params,
+    x: jax.Array,                   # (B, 1, D)
+    state: SSMState,
+    *,
+    cfg,
+    site: str,
+    quant: QuantContext = FP_CONTEXT,
+) -> Tuple[jax.Array, SSMState]:
+    """O(1) single-token recurrence: h = h·exp(A·dt) + B x̄ᵀ ; y = C·h."""
+    s, d_inner, H = _dims(cfg)
+    N, P = s.state, s.head_dim
+    B = x.shape[0]
+    dt_ = x.dtype
+
+    proj = dense(params["in_proj"], x, site=f"{site}/in_proj", quant=quant)
+    z, xs, Bm, Cm, dt = _split_proj(proj, d_inner, N, H)
+
+    xs, new_tail = _causal_conv(xs, params["conv_w"].astype(dt_),
+                                params["conv_b"].astype(dt_), state.conv)
+    xs = jax.nn.silu(xs.astype(jnp.float32))
+
+    xh = xs.reshape(B, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                    # (B,H)
+    xbar = xh * dt[..., None]                                  # (B,H,P)
+    Bf = Bm.astype(jnp.float32)[:, 0]                          # (B,N)
+    Cf = Cm.astype(jnp.float32)[:, 0]
+
+    h = state.h * decay[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bf, xbar)
+    y = jnp.einsum("bn,bhnp->bhp", Cf, h)
+    y = y + params["D_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, d_inner)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(params["norm"], y.astype(dt_))
+    out = dense(params["out_proj"], y, site=f"{site}/out_proj", quant=quant)
+    return out, SSMState(h=h, conv=new_tail)

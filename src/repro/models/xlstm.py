@@ -1,0 +1,338 @@
+"""xLSTM blocks: mLSTM (matrix memory) + sLSTM (scalar memory).
+
+* **mLSTM** is linear-attention-like: state ``C (dk, dv)`` with exponential
+  input gate and sigmoid-in-log-space forget gate, stabilized by a running
+  log-max ``m``.  Sequence processing runs as an exact per-timestep
+  ``lax.scan`` (recurrence in f32 — the paper's "keep
+  exponential/normalizing math in FP32" rule); the surrounding q/k/v/up/down
+  projections are batched matmuls and carry the INT8 quantized path.
+* **sLSTM** has per-channel scalar state and head-block recurrent weights —
+  inherently sequential, ``lax.scan`` over time.
+
+Both decode steps are O(1)-state updates; ``long_500k`` for xlstm-1.3b runs
+entirely through them.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calibration import Taps
+from repro.core.ptq import FP_CONTEXT, QuantContext
+from repro.models.layers import dense, dense_init, layernorm, norm_init
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array       # (B, H, dk, dv) f32
+    n: jax.Array       # (B, H, dk) f32
+    m: jax.Array       # (B, H) f32 — log stabilizer
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array       # (B, d_inner) f32
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array
+
+
+def _dims(cfg):
+    d_inner = 2 * cfg.d_model
+    H = cfg.n_heads
+    dh = d_inner // H
+    return d_inner, H, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg, *, stack: tuple = (), dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, H, dh = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], d, 2 * d_inner, dtype=dtype, stack=stack),
+        "q_proj": dense_init(ks[1], d_inner, d_inner, dtype=dtype, stack=stack),
+        "k_proj": dense_init(ks[2], d_inner, d_inner, dtype=dtype, stack=stack),
+        "v_proj": dense_init(ks[3], d_inner, d_inner, dtype=dtype, stack=stack),
+        "gate_ssm_if": dense_init(ks[4], d_inner, 2 * H, bias=True,
+                                  dtype=dtype, stack=stack),
+        "down_proj": dense_init(ks[5], d_inner, d, dtype=dtype, stack=stack),
+        "norm": norm_init(d_inner, "layernorm", stack=stack, dtype=dtype),
+    }
+
+
+def _mlstm_qkvg(params, x, *, site, quant, taps, cfg):
+    d_inner, H, dh = _dims(cfg)
+    B, S, _ = x.shape
+    up = dense(params["up_proj"], x, site=f"{site}/up_proj", quant=quant,
+               taps=taps)
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = dense(params["q_proj"], xi, site=f"{site}/q_proj", quant=quant,
+              taps=taps).reshape(B, S, H, dh)
+    k = dense(params["k_proj"], xi, site=f"{site}/k_proj", quant=quant,
+              taps=taps).reshape(B, S, H, dh) / jnp.sqrt(float(dh))
+    v = dense(params["v_proj"], xi, site=f"{site}/v_proj", quant=quant,
+              taps=taps).reshape(B, S, H, dh)
+    gates = dense(params["gate_ssm_if"], xi, site=f"{site}/gate_ssm_if",
+                  quant=quant, taps=taps).astype(jnp.float32)
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)       # (B, S, H)
+    return q, k, v, i_raw, f_raw, z
+
+
+def _mlstm_step(state: MLSTMState, q, k, v, i_raw, f_raw):
+    """One stabilized recurrence step.  All f32. Shapes: (B,H,dh) / (B,H)."""
+    log_f = -jax.nn.softplus(-f_raw)                 # log σ(f̃)
+    log_i = i_raw
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    f_s = jnp.exp(log_f + state.m - m_new)[..., None]
+    i_s = jnp.exp(log_i - m_new)[..., None]
+    C = state.C * f_s[..., None] + i_s[..., None] * (k[..., :, None]
+                                                     * v[..., None, :])
+    n = state.n * f_s + i_s * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)),
+                      jnp.exp(-m_new))[..., None]
+    h = num / den
+    return MLSTMState(C=C, n=n, m=m_new), h
+
+
+def mlstm_block_sequential(params, x, *, cfg, site,
+                           quant: QuantContext = FP_CONTEXT,
+                           taps: Optional[Taps] = None,
+                           state: Optional[MLSTMState] = None,
+                           return_state: bool = False
+                           ) -> Tuple[jax.Array, Optional[MLSTMState]]:
+    """Per-timestep reference (exact oracle for the chunked form; O(S) scan
+    steps and O(S·dk·dv) backward residuals — tests only, never training)."""
+    d_inner, H, dh = _dims(cfg)
+    B, S, _ = x.shape
+    dt = x.dtype
+    q, k, v, i_raw, f_raw, z = _mlstm_qkvg(params, x, site=site, quant=quant,
+                                           taps=taps, cfg=cfg)
+    if state is None:
+        state = _init_mlstm_state(B, H, dh)
+
+    def step(s, xs):
+        q_t, k_t, v_t, i_t, f_t = xs
+        s2, h = _mlstm_step(s, q_t.astype(jnp.float32),
+                            k_t.astype(jnp.float32),
+                            v_t.astype(jnp.float32), i_t, f_t)
+        return s2, h
+
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(i_raw, 1, 0),
+          jnp.moveaxis(f_raw, 1, 0))
+    final, hs = jax.lax.scan(step, state, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d_inner).astype(dt)
+    return _mlstm_out(params, h, z, site=site, quant=quant, taps=taps), \
+        (final if return_state else None)
+
+
+def _init_mlstm_state(B, H, dh):
+    return MLSTMState(
+        C=jnp.zeros((B, H, dh, dh), jnp.float32),
+        n=jnp.zeros((B, H, dh), jnp.float32),
+        m=jnp.full((B, H), -1e30, jnp.float32),
+    )
+
+
+def _mlstm_out(params, h, z, *, site, quant, taps):
+    dt = h.dtype
+    h = layernorm(params["norm"], h)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    return dense(params["down_proj"], h, site=f"{site}/down_proj",
+                 quant=quant, taps=taps)
+
+
+def mlstm_block(params, x, *, cfg, site, quant: QuantContext = FP_CONTEXT,
+                taps: Optional[Taps] = None, state: Optional[MLSTMState] = None,
+                return_state: bool = False, unroll: bool = False
+                ) -> Tuple[jax.Array, Optional[MLSTMState]]:
+    """Chunked-parallel mLSTM (exact, log-space stabilized).
+
+    Within a chunk the recurrence is an attention-like einsum against a
+    decay matrix; a ``lax.scan`` over chunks carries (C, n, m) — so training
+    saves O(S/Lc) states instead of O(S) (the per-timestep form would need
+    a (S, B, H, dk, dv) backward residual stack).
+    """
+    d_inner, H, dh = _dims(cfg)
+    B, S, _ = x.shape
+    dt = x.dtype
+    Lc = min(cfg.xlstm.chunk if cfg.xlstm else 256, S)
+    q, k, v, i_raw, f_raw, z = _mlstm_qkvg(params, x, site=site, quant=quant,
+                                           taps=taps, cfg=cfg)
+    if state is None:
+        state = _init_mlstm_state(B, H, dh)
+
+    pad = (-S) % Lc
+    if pad:
+        padfn = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) *
+                                  (a.ndim - 2))
+        q, k, v, i_raw, f_raw = map(padfn, (q, k, v, i_raw, f_raw))
+    Sp = S + pad
+    Nc = Sp // Lc
+    qc = q.astype(jnp.float32).reshape(B, Nc, Lc, H, dh)
+    kc = k.astype(jnp.float32).reshape(B, Nc, Lc, H, dh)
+    vc = v.astype(jnp.float32).reshape(B, Nc, Lc, H, dh)
+    log_f = -jax.nn.softplus(-f_raw.reshape(B, Nc, Lc, H))   # log σ(f̃)
+    log_i = i_raw.reshape(B, Nc, Lc, H)
+    if pad:  # padded steps: forget=1 (log 0), input=-inf (no contribution)
+        pos = jnp.arange(Sp).reshape(Nc, Lc)
+        valid = (pos < S)[None, :, :, None]
+        log_f = jnp.where(valid, log_f, 0.0)
+        log_i = jnp.where(valid, log_i, -1e30)
+    cum = jnp.cumsum(log_f, axis=2)                          # (B,Nc,Lc,H)
+    a = log_i - cum                                          # log i_j - cum_j
+
+    tril = jnp.tril(jnp.ones((Lc, Lc), bool))
+
+    def chunk_step(carry, xs):
+        C_hat, n_hat, m = carry              # (B,H,dk,dv),(B,H,dk),(B,H)
+        q_c, k_c, v_c, cum_c, a_c = xs       # (B,Lc,H,·)
+        # per-position stabilizer: b_i = max(m, cummax_j<=i a_j)
+        b = jnp.maximum(m[:, None, :],
+                        jax.lax.cummax(a_c, axis=1))         # (B,Lc,H)
+        scores = jnp.einsum("bihd,bjhd->bijh", q_c, k_c)     # (B,i,j,H)
+        W = jnp.exp(a_c[:, None, :, :] - b[:, :, None, :])
+        W = jnp.where(tril[None, :, :, None], W, 0.0)
+        sw = scores * W
+        num = jnp.einsum("bijh,bjhv->bihv", sw, v_c)
+        den = jnp.sum(sw, axis=2)                            # (B,i,H)
+        inter = jnp.exp(m[:, None, :] - b)                   # (B,Lc,H)
+        num = num + jnp.einsum("bihd,bhdv->bihv", q_c, C_hat) \
+            * inter[..., None]
+        den = den + jnp.einsum("bihd,bhd->bih", q_c, n_hat) * inter
+        m_i = cum_c + b                                      # full exponent
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+
+        # chunk-end state
+        F = cum_c[:, -1, :]                                  # (B,H)
+        b_L = jnp.maximum(m, jnp.max(a_c, axis=1))           # (B,H)
+        w_j = jnp.exp(a_c - b_L[:, None, :])                 # (B,Lc,H)
+        decay = jnp.exp(m - b_L)
+        C_new = C_hat * decay[..., None, None] + jnp.einsum(
+            "bjhd,bjh,bjhv->bhdv", k_c, w_j, v_c)
+        n_new = n_hat * decay[..., None] + jnp.einsum(
+            "bjhd,bjh->bhd", k_c, w_j)
+        m_new = F + b_L
+        return (C_new, n_new, m_new), h
+
+    xs = tuple(jnp.moveaxis(t, 1, 0)
+               for t in (qc, kc, vc, cum, a))
+    if unroll:  # roofline cost extraction (trace-time loop)
+        carry, hs_list = tuple(state), []
+        for i in range(Nc):
+            carry, h_i = chunk_step(carry, tuple(t[i] for t in xs))
+            hs_list.append(h_i)
+        (C_f, n_f, m_f), hs = carry, jnp.stack(hs_list)
+    else:
+        (C_f, n_f, m_f), hs = jax.lax.scan(jax.checkpoint(chunk_step),
+                                           tuple(state), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, Sp, H, dh)[:, :S]
+    h = h.reshape(B, S, d_inner).astype(dt)
+    out = _mlstm_out(params, h, z, site=site, quant=quant, taps=taps)
+    final = MLSTMState(C=C_f, n=n_f, m=m_f) if return_state else None
+    return out, final
+
+
+def mlstm_decode_step(params, x, state: MLSTMState, *, cfg, site,
+                      quant: QuantContext = FP_CONTEXT
+                      ) -> Tuple[jax.Array, MLSTMState]:
+    d_inner, H, dh = _dims(cfg)
+    B = x.shape[0]
+    dt = x.dtype
+    q, k, v, i_raw, f_raw, z = _mlstm_qkvg(params, x, site=site, quant=quant,
+                                           taps=None, cfg=cfg)
+    s2, h = _mlstm_step(state, q[:, 0].astype(jnp.float32),
+                        k[:, 0].astype(jnp.float32),
+                        v[:, 0].astype(jnp.float32),
+                        i_raw[:, 0], f_raw[:, 0])
+    h = h.reshape(B, 1, d_inner).astype(dt)
+    h = layernorm(params["norm"], h)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    out = dense(params["down_proj"], h, site=f"{site}/down_proj", quant=quant)
+    return out, s2
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg, *, stack: tuple = (), dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, H, dh = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, 4 * d_inner, bias=True, dtype=dtype,
+                              stack=stack),
+        # recurrent weights, block-diagonal per head: (H, dh, 4*dh)
+        "r_weight": jax.random.normal(ks[1], (*stack, H, dh, 4 * dh),
+                                      dtype) * 0.05,
+        "down_proj": dense_init(ks[2], d_inner, d, dtype=dtype, stack=stack),
+        "norm": norm_init(d_inner, "layernorm", stack=stack, dtype=dtype),
+    }
+
+
+def _slstm_step(s: SLSTMState, wx_t, r_w, H, dh):
+    """wx_t: (B, 4*d_inner) input contribution; r_w: (H, dh, 4*dh)."""
+    B = wx_t.shape[0]
+    h_heads = s.h.reshape(B, H, dh)
+    rh = jnp.einsum("bhd,hde->bhe", h_heads, r_w).reshape(B, -1)
+    raw = (wx_t + rh).reshape(B, H, 4, dh)
+    z_r, i_r, f_r, o_r = raw[:, :, 0], raw[:, :, 1], raw[:, :, 2], raw[:, :, 3]
+    z_r, i_r, f_r, o_r = (a.reshape(B, -1) for a in (z_r, i_r, f_r, o_r))
+
+    log_f = -jax.nn.softplus(-f_r)
+    m_new = jnp.maximum(log_f + s.m, i_r)
+    f_s = jnp.exp(log_f + s.m - m_new)
+    i_s = jnp.exp(i_r - m_new)
+    c = f_s * s.c + i_s * jnp.tanh(z_r)
+    n = f_s * s.n + i_s
+    h = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm_block(params, x, *, cfg, site, quant: QuantContext = FP_CONTEXT,
+                taps: Optional[Taps] = None, state: Optional[SLSTMState] = None,
+                return_state: bool = False
+                ) -> Tuple[jax.Array, Optional[SLSTMState]]:
+    d_inner, H, dh = _dims(cfg)
+    B, S, _ = x.shape
+    dt = x.dtype
+    wx = dense(params["in_proj"], x, site=f"{site}/in_proj", quant=quant,
+               taps=taps).astype(jnp.float32)               # (B, S, 4*d_inner)
+    if state is None:
+        z = jnp.zeros((B, d_inner), jnp.float32)
+        state = SLSTMState(c=z, n=z, h=z, m=jnp.full_like(z, -1e30))
+
+    r_w = params["r_weight"].astype(jnp.float32)
+
+    def step(s, wx_t):
+        s2 = _slstm_step(s, wx_t, r_w, H, dh)
+        return s2, s2.h
+
+    final, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(dt)                   # (B, S, d_inner)
+    h = layernorm(params["norm"], h)
+    out = dense(params["down_proj"], h, site=f"{site}/down_proj", quant=quant,
+                taps=taps)
+    return out, (final if return_state else None)
+
+
+def slstm_decode_step(params, x, state: SLSTMState, *, cfg, site,
+                      quant: QuantContext = FP_CONTEXT
+                      ) -> Tuple[jax.Array, SLSTMState]:
+    d_inner, H, dh = _dims(cfg)
+    B = x.shape[0]
+    dt = x.dtype
+    wx = dense(params["in_proj"], x, site=f"{site}/in_proj", quant=quant
+               ).astype(jnp.float32)[:, 0]
+    s2 = _slstm_step(state, wx, params["r_weight"].astype(jnp.float32), H, dh)
+    h = s2.h.reshape(B, 1, d_inner).astype(dt)
+    h = layernorm(params["norm"], h)
+    out = dense(params["down_proj"], h, site=f"{site}/down_proj", quant=quant)
+    return out, s2

@@ -1,0 +1,271 @@
+"""xLSTM LM (ssm family): pre-norm residual stack of mLSTM blocks with a
+sLSTM block every ``slstm_every`` layers (the xLSTM paper's [7:1] mix).
+
+Scan path groups layers as (slstm_every-1 mLSTM + 1 sLSTM) so parameters of
+each kind stack homogeneously.  All recurrent state is O(1) in sequence
+length → this arch runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calibration import Taps
+from repro.core.ptq import FP_CONTEXT, QuantContext
+from repro.distributed.context import constrain
+from repro.models.layers import embed, embedding_init, norm, norm_init, unembed
+from repro.models.xlstm import (
+    MLSTMState,
+    SLSTMState,
+    mlstm_block,
+    mlstm_decode_step,
+    mlstm_init,
+    slstm_block,
+    slstm_decode_step,
+    slstm_init,
+)
+
+
+class XLSTMLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.every = cfg.xlstm.slstm_every
+        assert cfg.n_layers % self.every == 0, \
+            "n_layers must divide by slstm_every for the scan path"
+        self.n_groups = cfg.n_layers // self.every
+        self.m_per_group = self.every - 1
+
+    def _is_slstm(self, i: int) -> bool:
+        return (i + 1) % self.every == 0
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_e, k_m, k_s = jax.random.split(key, 3)
+        params: Dict[str, Any] = {
+            "embed": embedding_init(k_e, cfg.vocab, cfg.d_model),
+            "final_norm": norm_init(cfg.d_model, cfg.norm),
+        }
+        if cfg.scan_layers:
+            params["mlstm"] = {
+                "pre_norm": norm_init(cfg.d_model, cfg.norm,
+                                      stack=(self.n_groups,
+                                             self.m_per_group)),
+                **mlstm_init(k_m, cfg, stack=(self.n_groups,
+                                              self.m_per_group)),
+            }
+            params["slstm"] = {
+                "pre_norm": norm_init(cfg.d_model, cfg.norm,
+                                      stack=(self.n_groups,)),
+                **slstm_init(k_s, cfg, stack=(self.n_groups,)),
+            }
+        else:
+            km = jax.random.split(k_m, cfg.n_layers)
+            for i in range(cfg.n_layers):
+                if self._is_slstm(i):
+                    params[f"blocks.{i}"] = {
+                        "pre_norm": norm_init(cfg.d_model, cfg.norm),
+                        **slstm_init(km[i], cfg),
+                    }
+                else:
+                    params[f"blocks.{i}"] = {
+                        "pre_norm": norm_init(cfg.d_model, cfg.norm),
+                        **mlstm_init(km[i], cfg),
+                    }
+        return params
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, batch, *, quant: QuantContext = FP_CONTEXT,
+                taps: Optional[Taps] = None, unroll: bool = False
+                ) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"], cfg.activation_dtype)
+
+        if cfg.scan_layers:
+            def group(x, gp):
+                mp, sp = gp
+
+                def inner(x, bp):
+                    f = lambda xx: xx + mlstm_block(
+                        bp, norm(bp["pre_norm"], xx, cfg.norm), cfg=cfg,
+                        site="blocks.*/mlstm", quant=quant, taps=taps,
+                        unroll=unroll)[0]
+                    if cfg.remat:
+                        f = jax.checkpoint(f)
+                    return f(constrain(x)), None
+
+                x, _ = jax.lax.scan(inner, x, mp)
+                g = lambda xx: xx + slstm_block(
+                    sp, norm(sp["pre_norm"], xx, cfg.norm), cfg=cfg,
+                    site="blocks.*/slstm", quant=quant, taps=taps)[0]
+                if cfg.remat:
+                    # without remat the 4096-step sLSTM scan's residuals for
+                    # every group stay live through the whole forward
+                    g = jax.checkpoint(g)
+                return g(x), None
+
+            x, _ = jax.lax.scan(group, x, (params["mlstm"], params["slstm"]))
+        else:
+            for i in range(cfg.n_layers):
+                bp = params[f"blocks.{i}"]
+                h = norm(bp["pre_norm"], x, cfg.norm)
+                if self._is_slstm(i):
+                    y, _ = slstm_block(bp, h, cfg=cfg,
+                                       site=f"blocks.{i}/slstm",
+                                       quant=quant, taps=taps)
+                else:
+                    y, _ = mlstm_block(bp, h, cfg=cfg,
+                                       site=f"blocks.{i}/mlstm",
+                                       quant=quant, taps=taps,
+                                       unroll=unroll)
+                x = x + y
+
+        x = norm(params["final_norm"], x, cfg.norm)
+        return unembed(params["embed"], x), {}
+
+    # ---------------------------------------------------------------- decode
+    def init_decode_state(self, batch: int, max_len: int, *,
+                          quantized: bool) -> Dict[str, Any]:
+        cfg = self.cfg
+        d_inner = 2 * cfg.d_model
+        H = cfg.n_heads
+        dh = d_inner // H
+        G, M = self.n_groups, self.m_per_group
+        return {
+            "mlstm": MLSTMState(
+                C=jnp.zeros((G, M, batch, H, dh, dh), jnp.float32),
+                n=jnp.zeros((G, M, batch, H, dh), jnp.float32),
+                m=jnp.full((G, M, batch, H), -1e30, jnp.float32),
+            ),
+            "slstm": SLSTMState(
+                c=jnp.zeros((G, batch, d_inner), jnp.float32),
+                n=jnp.zeros((G, batch, d_inner), jnp.float32),
+                h=jnp.zeros((G, batch, d_inner), jnp.float32),
+                m=jnp.full((G, batch, d_inner), -1e30, jnp.float32),
+            ),
+            "lengths": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def prefill(self, params, batch, state, *,
+                quant: QuantContext = FP_CONTEXT) -> Tuple[jax.Array, Dict]:
+        """Sequence prefill: run blocks with return_state (unrolled)."""
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"], cfg.activation_dtype)
+        B, S, _ = x.shape
+        lengths = batch.get("lengths", jnp.full((B,), S, jnp.int32))
+
+        G, M = self.n_groups, self.m_per_group
+        state = dict(state)
+        if cfg.scan_layers:
+            def group(x, gp):
+                mp, sp = gp
+
+                def inner(x, bp):
+                    h = norm(bp["pre_norm"], x, cfg.norm)
+                    y, st = mlstm_block(bp, h, cfg=cfg,
+                                        site="blocks.*/mlstm", quant=quant,
+                                        return_state=True)
+                    return x + y, st
+
+                x, msts = jax.lax.scan(inner, x, mp)
+                h = norm(sp["pre_norm"], x, cfg.norm)
+                y, sst = slstm_block(sp, h, cfg=cfg, site="blocks.*/slstm",
+                                     quant=quant, return_state=True)
+                return x + y, (msts, sst)
+
+            x, (m_st, s_st) = jax.lax.scan(
+                group, x, (params["mlstm"], params["slstm"]))
+            state["mlstm"], state["slstm"] = m_st, s_st
+        else:
+            m_states, s_states = [], []
+            for i in range(cfg.n_layers):
+                bp = params[f"blocks.{i}"]
+                h = norm(bp["pre_norm"], x, cfg.norm)
+                if self._is_slstm(i):
+                    y, st = slstm_block(bp, h, cfg=cfg,
+                                        site=f"blocks.{i}/slstm",
+                                        quant=quant, return_state=True)
+                    s_states.append(st)
+                else:
+                    y, st = mlstm_block(bp, h, cfg=cfg,
+                                        site=f"blocks.{i}/mlstm",
+                                        quant=quant, return_state=True)
+                    m_states.append(st)
+                x = x + y
+            stack = lambda xs: jax.tree_util.tree_map(
+                lambda *a: jnp.stack(a), *xs)
+            m_flat = stack(m_states)      # (G*M, ...) in layer order
+            state["mlstm"] = jax.tree_util.tree_map(
+                lambda a: a.reshape(G, M, *a.shape[1:]), m_flat)
+            state["slstm"] = stack(s_states)
+        state["lengths"] = lengths
+
+        x = norm(params["final_norm"], x, cfg.norm)
+        idx = jnp.maximum(lengths - 1, 0)
+        x_last = x[jnp.arange(B), idx]
+        return unembed(params["embed"], x_last[:, None, :])[:, 0], state
+
+    def decode_step(self, params, tokens, state, *,
+                    quant: QuantContext = FP_CONTEXT) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        x = embed(params["embed"], tokens[:, None], cfg.activation_dtype)
+
+        if cfg.scan_layers:
+            def group(x, xs):
+                mp, sp, mst, sst = xs
+
+                def inner(x, ys):
+                    bp, st = ys
+                    h = norm(bp["pre_norm"], x, cfg.norm)
+                    y, st2 = mlstm_decode_step(bp, h, st, cfg=cfg,
+                                               site="blocks.*/mlstm",
+                                               quant=quant)
+                    return x + y, st2
+
+                x, mst2 = jax.lax.scan(inner, x, (mp, mst))
+                h = norm(sp["pre_norm"], x, cfg.norm)
+                y, sst2 = slstm_decode_step(sp, h, sst, cfg=cfg,
+                                            site="blocks.*/slstm",
+                                            quant=quant)
+                return x + y, (mst2, sst2)
+
+            x, (m2, s2) = jax.lax.scan(
+                group, x, (params["mlstm"], params["slstm"],
+                           state["mlstm"], state["slstm"]))
+        else:
+            m_states, s_states = [], []
+            mi = si = 0
+            for i in range(cfg.n_layers):
+                g, j = divmod(i, self.every)
+                bp = params[f"blocks.{i}"]
+                h = norm(bp["pre_norm"], x, cfg.norm)
+                if self._is_slstm(i):
+                    st = jax.tree_util.tree_map(lambda a: a[g],
+                                                state["slstm"])
+                    y, st2 = slstm_decode_step(bp, h, st, cfg=cfg,
+                                               site=f"blocks.{i}/slstm",
+                                               quant=quant)
+                    s_states.append(st2)
+                else:
+                    st = jax.tree_util.tree_map(lambda a: a[g][j],
+                                                state["mlstm"])
+                    y, st2 = mlstm_decode_step(bp, h, st, cfg=cfg,
+                                               site=f"blocks.{i}/mlstm",
+                                               quant=quant)
+                    m_states.append(st2)
+                x = x + y
+            G, M = self.n_groups, self.m_per_group
+            stack = lambda xs: jax.tree_util.tree_map(
+                lambda *a: jnp.stack(a), *xs)
+            m2 = jax.tree_util.tree_map(
+                lambda a: a.reshape(G, M, *a.shape[1:]), stack(m_states))
+            s2 = stack(s_states)
+
+        state = dict(state)
+        state["mlstm"], state["slstm"] = m2, s2
+        state["lengths"] = state["lengths"] + 1
+        x = norm(params["final_norm"], x, cfg.norm)
+        return unembed(params["embed"], x)[:, 0], state

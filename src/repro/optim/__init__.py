@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW, AdamWState, global_norm  # noqa: F401
+from repro.optim.schedule import inverse_sqrt, warmup_cosine  # noqa: F401

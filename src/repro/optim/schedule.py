@@ -1,0 +1,23 @@
+"""LR schedules: transformer inverse-sqrt (Vaswani) and warmup-cosine."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def inverse_sqrt(d_model: int, warmup: int = 4000):
+    """The paper's model's original schedule."""
+    def lr(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return d_model ** -0.5 * jnp.minimum(s ** -0.5, s * warmup ** -1.5)
+    return lr
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr

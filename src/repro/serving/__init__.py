@@ -1,0 +1,3 @@
+from repro.serving.engine import GenerationResult, ServingEngine  # noqa: F401
+from repro.serving.scheduler import BatchQueue, TokenSortedScheduler, WorkItem  # noqa: F401
+from repro.serving.streams import ParallelStreams, simulate_streams  # noqa: F401

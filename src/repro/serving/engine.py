@@ -1,0 +1,192 @@
+"""Serving engine: prefill + auto-regressive decode (greedy & beam search).
+
+This is the paper's workload: batched NMT inference with a decoder
+while-loop.  Beam search reorders the KV cache every step through
+``kv_cache.gather_beams`` — the GatherNd the paper quantized (§5.3); with an
+INT8 cache the reorder moves 4× fewer bytes.
+
+The decode loop runs in Python calling jitted step functions (the standard
+serving pattern — state stays on device; only the finished-check syncs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ptq import FP_CONTEXT, QuantContext
+from repro.data.synthetic import EOS
+from repro.models import kv_cache as kvc
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: List[np.ndarray]          # per-sequence generated ids (no EOS)
+    steps: int
+    prefill_s: float
+    decode_s: float
+
+    @property
+    def total_s(self) -> float:
+        return self.prefill_s + self.decode_s
+
+    @property
+    def n_tokens(self) -> int:
+        return int(sum(len(t) for t in self.tokens))
+
+
+class ServingEngine:
+    def __init__(self, model, params, *, quant: QuantContext = FP_CONTEXT,
+                 max_len: int = 256, eos_id: int = EOS,
+                 donate_state: bool = True):
+        self.model = model
+        self.params = params
+        self.quant = quant
+        self.max_len = max_len
+        self.eos_id = eos_id
+
+        self._prefill = jax.jit(
+            lambda p, b, s: model.prefill(p, b, s, quant=quant))
+        donate = (2,) if donate_state else ()
+        self._decode = jax.jit(
+            lambda p, t, s: model.decode_step(p, t, s, quant=quant),
+            donate_argnums=donate)
+        self._gather = jax.jit(self._beam_gather_state)
+
+    # ------------------------------------------------------------------ util
+    def _init_state(self, batch_size: int):
+        return self.model.init_decode_state(
+            batch_size, self.max_len, quantized=self.quant.quantize_kv)
+
+    @staticmethod
+    def _beam_gather_state(state: Dict[str, Any], idx: jax.Array):
+        """Reorder every batch-major leaf of the decode state (paper §5.3)."""
+        def gather(leaf):
+            return jnp.take(leaf, idx, axis=0)
+
+        out = {}
+        for k, v in state.items():
+            if k == "cache" and isinstance(v, kvc.KVCache):
+                out[k] = kvc.gather_beams(v, idx)
+            elif v is None:
+                out[k] = None
+            else:
+                out[k] = jax.tree_util.tree_map(gather, v)
+        return out
+
+    # ---------------------------------------------------------------- greedy
+    def generate(self, batch: Dict[str, np.ndarray], *,
+                 max_new_tokens: int = 64) -> GenerationResult:
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        B = next(iter(batch.values())).shape[0]
+
+        t0 = time.perf_counter()
+        state = self._init_state(B)
+        logits, state = self._prefill(self.params, batch, state)
+        jax.block_until_ready(logits)
+        t1 = time.perf_counter()
+
+        tokens = jnp.argmax(logits, axis=-1)
+        out = [tokens]
+        finished = tokens == self.eos_id
+        steps = 1
+        for _ in range(max_new_tokens - 1):
+            logits, state = self._decode(self.params, tokens, state)
+            tokens = jnp.argmax(logits, axis=-1)
+            tokens = jnp.where(finished, self.eos_id, tokens)
+            out.append(tokens)
+            finished = finished | (tokens == self.eos_id)
+            steps += 1
+            if bool(jnp.all(finished)):
+                break
+        jax.block_until_ready(out[-1])
+        t2 = time.perf_counter()
+
+        grid = np.stack([np.asarray(t) for t in out], axis=1)   # (B, T)
+        seqs = []
+        for b in range(B):
+            row = grid[b]
+            stop = np.argmax(row == self.eos_id) if (row == self.eos_id).any() \
+                else len(row)
+            seqs.append(row[:stop])
+        return GenerationResult(tokens=seqs, steps=steps,
+                                prefill_s=t1 - t0, decode_s=t2 - t1)
+
+    # ------------------------------------------------------------------ beam
+    def generate_beam(self, batch: Dict[str, np.ndarray], *, beam: int = 4,
+                      max_new_tokens: int = 64, alpha: float = 0.6
+                      ) -> GenerationResult:
+        """Beam search with per-step cache reordering (paper's GatherNd)."""
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        B = next(iter(batch.values())).shape[0]
+
+        # expand each request to `beam` rows
+        def tile(a):
+            return jnp.repeat(a, beam, axis=0)
+        beam_batch = {k: tile(v) for k, v in batch.items()}
+        BB = B * beam
+
+        t0 = time.perf_counter()
+        state = self._init_state(BB)
+        logits, state = self._prefill(self.params, beam_batch, state)
+        jax.block_until_ready(logits)
+        t1 = time.perf_counter()
+
+        logprobs = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        V = logprobs.shape[-1]
+        # first step: take top-`beam` distinct tokens of beam 0 per request
+        first = logprobs.reshape(B, beam, V)[:, 0]              # (B, V)
+        scores, tok0 = jax.lax.top_k(first, beam)               # (B, beam)
+        scores = scores.reshape(BB)
+        tokens = tok0.reshape(BB)
+        seq = [np.asarray(tokens)]
+        reorders = 0
+        finished = tokens == self.eos_id
+
+        for _ in range(max_new_tokens - 1):
+            logits, state = self._decode(self.params, tokens, state)
+            lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            # finished beams only extend with EOS at no cost
+            eos_only = jnp.full_like(lp, -1e30).at[:, self.eos_id].set(0.0)
+            lp = jnp.where(finished[:, None], eos_only, lp)
+            cand = scores[:, None] + lp                          # (BB, V)
+            cand = cand.reshape(B, beam * V)
+            scores_new, flat_idx = jax.lax.top_k(cand, beam)     # (B, beam)
+            src_beam = flat_idx // V                             # (B, beam)
+            tokens = (flat_idx % V).reshape(BB)
+            gather_idx = (src_beam + jnp.arange(B)[:, None] * beam
+                          ).reshape(BB)
+            # ---- the paper's §5.3 hot op: cache reorder ----
+            state = self._gather(state, gather_idx)
+            reorders += 1
+            scores = scores_new.reshape(BB)
+            finished = jnp.take(finished, gather_idx, axis=0) | \
+                (tokens == self.eos_id)
+            seq = [s[np.asarray(gather_idx)] for s in seq]
+            seq.append(np.asarray(tokens))
+            if bool(jnp.all(finished)):
+                break
+        jax.block_until_ready(tokens)
+        t2 = time.perf_counter()
+
+        # best beam per request by length-penalized score
+        grid = np.stack(seq, axis=1)                             # (BB, T)
+        lengths = np.argmax(grid == self.eos_id, axis=1)
+        lengths = np.where((grid == self.eos_id).any(axis=1), lengths,
+                           grid.shape[1])
+        lp_pen = ((5 + lengths) / 6.0) ** alpha
+        final = np.asarray(scores).reshape(B, beam) / \
+            lp_pen.reshape(B, beam)
+        best = final.argmax(axis=1)
+        seqs = []
+        for b in range(B):
+            row = grid[b * beam + best[b]]
+            stop = lengths[b * beam + best[b]]
+            seqs.append(row[:stop])
+        return GenerationResult(tokens=seqs, steps=len(seq),
+                                prefill_s=t1 - t0, decode_s=t2 - t1)

@@ -1,0 +1,88 @@
+"""Serving-side batch composition (paper §5.4 + §5.6 front half).
+
+``TokenSortedScheduler`` orders incoming requests by **token count**
+(descending — long batches first keeps the stream pipeline busy at the
+tail), composes fixed-size batches padded to bucketed lengths, and exposes
+them through a thread-safe ``BatchQueue`` that the parallel streams
+(``streams.py``) drain asynchronously — the paper's parent-session batch
+queue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.data.sorting import make_batches, padding_stats
+from repro.data.synthetic import Sentence, pad_batch
+
+
+@dataclasses.dataclass
+class WorkItem:
+    batch_id: int
+    indices: List[int]                 # request ids in this batch
+    batch: Dict[str, np.ndarray]
+    n_real_tokens: int
+    n_padded_tokens: int
+
+
+class TokenSortedScheduler:
+    """Requests → ordered, padded batches (+ padding accounting)."""
+
+    def __init__(self, batch_size: int, *, sort_mode: str = "tokens",
+                 pad_to_multiple: int = 8):
+        self.batch_size = batch_size
+        self.sort_mode = sort_mode
+        self.pad_to_multiple = pad_to_multiple
+
+    def _round(self, n: int) -> int:
+        m = self.pad_to_multiple
+        return ((n + m - 1) // m) * m
+
+    def plan(self, requests: Sequence[Sentence]) -> List[WorkItem]:
+        batches = make_batches(requests, self.batch_size, self.sort_mode)
+        items = []
+        for bid, idx in enumerate(batches):
+            sents = [requests[i] for i in idx]
+            L = self._round(max(s.n_tokens for s in sents))
+            src, lens = pad_batch([s.src for s in sents], length=L)
+            items.append(WorkItem(
+                batch_id=bid,
+                indices=list(idx),
+                batch={"src_tokens": src, "src_lengths": lens},
+                n_real_tokens=int(lens.sum()),
+                n_padded_tokens=int(L * len(sents)),
+            ))
+        return items
+
+    def stats(self, requests: Sequence[Sentence]) -> dict:
+        batches = make_batches(requests, self.batch_size, self.sort_mode)
+        return padding_stats(requests, batches)
+
+
+class BatchQueue:
+    """Thread-safe queue feeding the worker streams (paper Fig. 6)."""
+
+    def __init__(self, items: Optional[Sequence[WorkItem]] = None):
+        self._q: queue.Queue = queue.Queue()
+        self._lock = threading.Lock()
+        self.enqueued = 0
+        if items:
+            for item in items:
+                self.put(item)
+
+    def put(self, item: WorkItem) -> None:
+        with self._lock:
+            self.enqueued += 1
+        self._q.put(item)
+
+    def close(self, n_consumers: int) -> None:
+        for _ in range(n_consumers):
+            self._q.put(None)
+
+    def get(self) -> Optional[WorkItem]:
+        return self._q.get()

@@ -1,0 +1,2 @@
+from repro.train.loop import train_loop  # noqa: F401
+from repro.train.step import make_loss_fn, make_train_step, softmax_cross_entropy  # noqa: F401

@@ -1,0 +1,73 @@
+"""Checkpointed, watchdogged training loop (fault-tolerant driver).
+
+Restores from the latest checkpoint on entry (so ``run_with_restarts`` can
+re-invoke it after a failure), saves every ``save_every`` steps including
+the data-iterator state, and tracks per-step wall-clock for straggler
+accounting.
+"""
+
+from __future__ import annotations
+
+import logging
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.distributed.fault import StepWatchdog
+
+log = logging.getLogger("repro.train")
+
+
+def train_loop(
+    *,
+    train_step: Callable,
+    params: Any,
+    opt_state: Any,
+    batches,                        # object with next_batch()/state_dict()
+    steps: int,
+    checkpointer: Optional[Checkpointer] = None,
+    save_every: int = 100,
+    log_every: int = 10,
+    watchdog: Optional[StepWatchdog] = None,
+    metrics_cb: Optional[Callable[[int, Dict], None]] = None,
+) -> Dict[str, Any]:
+    start = 0
+    if checkpointer is not None and checkpointer.latest_step() is not None:
+        meta = checkpointer.read_meta()
+        start = int(meta["step"])
+        state = checkpointer.restore((params, opt_state))
+        params, opt_state = state
+        if "data_state" in meta.get("extra", {}):
+            batches.load_state_dict(meta["extra"]["data_state"])
+        log.info("restored checkpoint at step %d", start)
+
+    watchdog = watchdog or StepWatchdog()
+    history = []
+    for step in range(start, steps):
+        batch = batches.next_batch()
+        batch = jax.tree_util.tree_map(jax.numpy.asarray, batch)
+        watchdog.start()
+        (params, opt_state), metrics = train_step(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        watchdog.stop()
+
+        if (step + 1) % log_every == 0 or step == start:
+            m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            history.append({"step": step + 1, **m})
+            log.info("step %d: %s", step + 1,
+                     {k: round(v, 4) for k, v in m.items()})
+            if metrics_cb is not None:
+                metrics_cb(step + 1, m)
+
+        if checkpointer is not None and (step + 1) % save_every == 0:
+            checkpointer.save(step + 1, (params, opt_state),
+                              extra={"data_state": batches.state_dict()})
+
+    if checkpointer is not None:
+        checkpointer.save(steps, (params, opt_state),
+                          extra={"data_state": batches.state_dict()})
+        checkpointer.wait()
+    return {"params": params, "opt_state": opt_state,
+            "history": history, "watchdog": watchdog.summary()}

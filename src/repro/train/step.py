@@ -1,0 +1,126 @@
+"""Training step: loss, grad accumulation, mixed precision, remat.
+
+``make_train_step`` builds the jit-able step for any model in the zoo:
+
+    step = make_train_step(model, optimizer, accum_steps=4)
+    (params, opt_state), metrics = step(params, opt_state, batch)
+
+Gradient accumulation runs as a ``lax.scan`` over microbatches (keeps the
+HLO compact), with grads in f32.  Params stay f32; activations run in the
+config's dtype (bf16 on TPU).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import PAD
+from repro.distributed.context import constrain, constrain_logits
+from repro.optim.adamw import AdamW, AdamWState, global_norm
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: jax.Array) -> jax.Array:
+    """Mean CE over mask; logits f32 (B, S, V); labels (B, S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * mask
+    return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _lm_loss(model, params, batch, quant) -> Tuple[jax.Array, Dict]:
+    logits, aux = model.forward(params, batch, quant=quant)
+    # (B, S, V@model): vocab-shard the f32 logits so the CE pass never
+    # materializes an unsharded (B, S, V) tensor (33 GiB/device at 128k vocab)
+    logits = constrain_logits(logits)
+    if "labels" in batch:
+        labels = batch["labels"]
+        mask = (labels != PAD).astype(jnp.float32)
+    else:
+        # enc-dec teacher forcing: predict tgt[t+1].  Shift the *labels*
+        # (small) rather than slicing the logits — slicing the seq-sharded
+        # (B, S@model, V) tensor forces an all-gather of the full logits.
+        labels = jnp.pad(batch["tgt_tokens"][:, 1:], ((0, 0), (0, 1)))
+        mask = (labels != PAD).astype(jnp.float32)
+    loss = softmax_cross_entropy(logits, labels, mask)
+    lb = aux.get("load_balance_loss", jnp.float32(0.0))
+    total = loss + 0.01 * lb
+    return total, {"ce_loss": loss, "load_balance_loss": lb}
+
+
+def make_loss_fn(model, quant=None) -> Callable:
+    from repro.core.ptq import FP_CONTEXT
+    quant = quant or FP_CONTEXT
+
+    def loss_fn(params, batch):
+        return _lm_loss(model, params, batch, quant)
+
+    return loss_fn
+
+
+def make_train_step(model, optimizer: AdamW, *, accum_steps: int = 1,
+                    quant=None, grad_shardings=None,
+                    mixed_precision: bool = False) -> Callable:
+    """``grad_shardings``: optional tree of NamedSharding matching params.
+    Constraining gradients to the FSDP parameter layout makes XLA emit
+    reduce-scatters for the weight-grad reductions instead of full
+    all-reduce + slice (≈2× wire traffic; see EXPERIMENTS.md §Perf).
+
+    ``mixed_precision``: compute with bf16 weight copies (f32 master stays
+    in the optimizer path) — halves the FSDP all-gather and grad-reduce
+    wire bytes (§Perf iteration B2)."""
+    base_loss = make_loss_fn(model, quant)
+    if mixed_precision:
+        def loss_fn(params, batch):
+            cast = jax.tree_util.tree_map(
+                lambda a: a.astype(jnp.bfloat16)
+                if (hasattr(a, "dtype") and a.dtype == jnp.float32
+                    and getattr(a, "ndim", 0) >= 2) else a, params)
+            return base_loss(cast, batch)
+    else:
+        loss_fn = base_loss
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain_grads(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, grads, grad_shardings)
+
+    def train_step(params, opt_state: AdamWState, batch
+                   ) -> Tuple[Tuple[Any, AdamWState], Dict[str, jax.Array]]:
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = constrain_grads(grads)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda a: a.reshape(accum_steps, a.shape[0] // accum_steps,
+                                    *a.shape[1:]), batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(params, mb)
+                g = constrain_grads(g)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), ms = jax.lax.scan(acc, (g0, jnp.float32(0.0)),
+                                             micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            metrics = jax.tree_util.tree_map(jnp.mean, ms)
+
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = global_norm(grads)
+        metrics["lr"] = optimizer._lr(new_opt.step)
+        return (new_params, new_opt), metrics
+
+    return train_step

@@ -1,0 +1,111 @@
+"""Calibration pipeline: histograms, classification, KL threshold search."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Calibrator,
+    QuantMode,
+    StreamingHistogram,
+    classify,
+    kl_threshold_search,
+    kl_thresholds,
+)
+
+
+def test_streaming_histogram_conserves_counts(rng):
+    h = StreamingHistogram()
+    total = 0
+    for scale in [1.0, 4.0, 0.5, 32.0]:     # forces range expansions
+        x = rng.normal(size=5000).astype(np.float32) * scale
+        h.observe(x)
+        total += x.size
+    assert h.total == total
+    assert h.counts.sum() == total
+
+
+def test_histogram_range_covers_observations(rng):
+    h = StreamingHistogram()
+    x = rng.normal(size=1000).astype(np.float32) * 7
+    h.observe(x)
+    assert h.range >= np.abs(x).max() * 0.999
+
+
+def test_classification_taxonomy(rng):
+    gaussian = StreamingHistogram()
+    gaussian.observe(rng.normal(size=20000).astype(np.float32))
+    assert classify(gaussian).kind == "gaussian"
+
+    sparse = StreamingHistogram()
+    x = np.zeros(20000, np.float32)
+    x[:50] = rng.normal(size=50) * 10
+    sparse.observe(x)
+    assert classify(sparse).kind == "sparse"
+
+    narrow = StreamingHistogram()
+    x = rng.normal(size=20000).astype(np.float32) * 0.01
+    x[0] = 5.0   # single outlier stretches the range
+    narrow.observe(x)
+    assert classify(narrow).kind == "narrow"
+
+
+def test_kl_clips_long_tails(rng):
+    """Paper §4.2: KL threshold sits well inside the absolute range for
+    long-tailed distributions."""
+    x = rng.standard_t(df=2, size=200_000).astype(np.float32)
+    h = StreamingHistogram()
+    h.observe(x)
+    thr = kl_thresholds(h, QuantMode.SYMMETRIC)
+    amax = np.abs(x).max()
+    assert thr.t_max < 0.5 * amax
+    assert thr.t_max > np.percentile(np.abs(x), 90)
+
+
+def test_kl_keeps_gaussian_nearly_whole(rng):
+    x = rng.normal(size=100_000).astype(np.float32)
+    h = StreamingHistogram()
+    h.observe(x)
+    thr = kl_thresholds(h, QuantMode.SYMMETRIC)
+    assert thr.t_max > 0.5 * np.abs(x).max()
+
+
+def test_mode_relationships(rng):
+    x = np.concatenate([rng.normal(size=50_000),
+                        -np.abs(rng.standard_t(df=2, size=50_000)) * 3]
+                       ).astype(np.float32)
+    h = StreamingHistogram()
+    h.observe(x)
+    ind = kl_thresholds(h, QuantMode.INDEPENDENT)
+    conj = kl_thresholds(h, QuantMode.CONJUGATE)
+    naive = kl_thresholds(h, QuantMode.NAIVE)
+    assert conj.symmetric
+    assert conj.t_max == pytest.approx(
+        max(abs(ind.t_min), abs(ind.t_max)), rel=1e-6)
+    assert naive.t_min <= ind.t_min <= ind.t_max <= naive.t_max
+
+
+def test_calibrator_end_to_end(rng):
+    cal = Calibrator()
+    for _ in range(5):
+        cal.observe_site("layer/ffn/in", rng.normal(size=4096))
+        sparse = np.zeros(4096, np.float32)
+        sparse[:5] = 10.0
+        cal.observe_site("layer/attn/probs", sparse)
+    recs = cal.compute("symmetric")
+    assert recs["layer/ffn/in"].quantize
+    assert not recs["layer/attn/probs"].quantize          # sparse → FP32
+    assert recs["layer/attn/probs"].classification.kind == "sparse"
+
+
+@given(st.integers(min_value=200, max_value=2000),
+       st.floats(min_value=0.5, max_value=50.0))
+@settings(max_examples=20, deadline=None)
+def test_prop_kl_threshold_positive_and_bounded(n, scale):
+    rng = np.random.default_rng(n)
+    x = (rng.normal(size=n) * scale).astype(np.float32)
+    h = StreamingHistogram()
+    h.observe(x)
+    counts, r = h.magnitude()
+    t = kl_threshold_search(counts, r)
+    assert 0 < t <= r * 1.0001

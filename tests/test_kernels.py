@@ -1,0 +1,157 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+with shape/dtype sweeps + hypothesis-generated shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.qtensor import QTensor
+from repro.kernels import ops, ref
+
+
+def _mk_qt(rng, shape, scale_shape):
+    data = jnp.asarray(rng.integers(-127, 128, shape), jnp.int8)
+    scale = jnp.asarray(rng.uniform(1e-3, 0.1, scale_shape), jnp.float32)
+    return QTensor(data, scale, jnp.zeros((), jnp.float32), None)
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N", [
+    (8, 128, 128), (37, 100, 65), (128, 512, 384), (1, 256, 32),
+    (130, 96, 200),
+])
+def test_int8_matmul_shapes(rng, M, K, N):
+    a = _mk_qt(rng, (M, K), (M, 1))
+    b = _mk_qt(rng, (K, N), (1, N))
+    bias = jnp.asarray(rng.normal(size=N), jnp.float32)
+    got = ops.int8_matmul(a, b, bias, impl="interpret")
+    want = ops.int8_matmul(a, b, bias, impl="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_matmul_out_dtypes(rng, out_dtype):
+    a = _mk_qt(rng, (16, 64), (16, 1))
+    b = _mk_qt(rng, (64, 32), (1, 32))
+    got = ops.int8_matmul(a, b, out_dtype=out_dtype, impl="interpret")
+    assert got.dtype == out_dtype
+
+
+def test_int8_matmul_zero_point(rng):
+    a = QTensor(jnp.asarray(rng.integers(-127, 128, (24, 48)), jnp.int8),
+                jnp.float32(0.03), jnp.float32(5.0), None)
+    b = _mk_qt(rng, (48, 40), (1, 40))
+    got = ops.int8_matmul(a, b, impl="interpret")
+    want = ops.int8_matmul(a, b, impl="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_int8_matmul_exact_vs_float_reference(rng):
+    """Int8 kernel must equal float math on exactly-representable values."""
+    a_f = rng.integers(-50, 50, (16, 32)).astype(np.float32)
+    b_f = rng.integers(-50, 50, (32, 24)).astype(np.float32)
+    a = QTensor(jnp.asarray(a_f.astype(np.int8)), jnp.float32(1.0),
+                jnp.zeros(()), None)
+    b = QTensor(jnp.asarray(b_f.astype(np.int8)), jnp.float32(1.0),
+                jnp.zeros(()), None)
+    got = np.asarray(ops.int8_matmul(a, b, impl="interpret"))
+    np.testing.assert_allclose(got, a_f @ b_f, rtol=0, atol=0)
+
+
+def test_int8_matmul_batched(rng):
+    a = _mk_qt(rng, (4, 24, 64), (4, 24, 1))
+    b = _mk_qt(rng, (4, 64, 48), (4, 1, 48))
+    got = ops.int8_matmul_batched(a, b, impl="interpret")
+    want = ops.int8_matmul_batched(a, b, impl="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@given(st.integers(1, 64), st.integers(1, 96), st.integers(1, 64))
+@settings(max_examples=12, deadline=None)
+def test_prop_int8_matmul_any_shape(M, K, N):
+    rng = np.random.default_rng(M * 1000 + K * 10 + N)
+    a = _mk_qt(rng, (M, K), (M, 1))
+    b = _mk_qt(rng, (K, N), (1, N))
+    got = ops.int8_matmul(a, b, impl="interpret")
+    want = ops.int8_matmul(a, b, impl="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# quantize kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K", [(8, 64), (50, 300), (1, 128), (129, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_rowwise(rng, M, K, dtype):
+    x = jnp.asarray(rng.normal(size=(M, K)) * 10, dtype)
+    got = ops.quantize_rowwise(x, impl="interpret")
+    want = ops.quantize_rowwise(x, impl="xla")
+    # bf16 inputs can land exactly on rounding boundaries: allow ±1 quantum
+    diff = np.abs(np.asarray(got.data, np.int32)
+                  - np.asarray(want.data, np.int32))
+    assert diff.max() <= 1
+    np.testing.assert_allclose(np.asarray(got.scale), np.asarray(want.scale),
+                               rtol=1e-6)
+
+
+def test_quantize_static(rng):
+    x = jnp.asarray(rng.normal(size=(40, 100)) * 5, jnp.float32)
+    got = ops.quantize_static(x, 3.0, impl="interpret")
+    want = ops.quantize_static(x, 3.0, impl="xla")
+    np.testing.assert_array_equal(np.asarray(got.data), np.asarray(want.data))
+    # clipping: all values map within [-127, 127]
+    assert int(jnp.max(jnp.abs(got.data))) <= 127
+
+
+# ---------------------------------------------------------------------------
+# decode attention (int8 KV cache)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,HKV,dh,S", [
+    (2, 8, 4, 64, 300), (1, 4, 1, 128, 64), (3, 8, 8, 32, 513),
+    (2, 16, 2, 64, 128),
+])
+def test_decode_attention(rng, B, H, HKV, dh, S):
+    q = jnp.asarray(rng.normal(size=(B, H, dh)), jnp.float32)
+    kq = jnp.asarray(rng.integers(-127, 128, (B, S, HKV, dh)), jnp.int8)
+    vq = jnp.asarray(rng.integers(-127, 128, (B, S, HKV, dh)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(1e-3, 2e-2, (B, S, HKV)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(1e-3, 2e-2, (B, S, HKV)), jnp.float32)
+    lengths = jnp.asarray(rng.integers(1, S + 1, (B,)), jnp.int32)
+    sm = 1.0 / np.sqrt(dh)
+    got = ops.decode_attention(q, kq, ks, vq, vs, lengths, sm_scale=sm,
+                               impl="interpret")
+    want = ops.decode_attention(q, kq, ks, vq, vs, lengths, sm_scale=sm,
+                                impl="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_decode_attention_respects_lengths(rng):
+    """Tokens beyond `lengths` must not influence the output."""
+    B, H, dh, S = 1, 4, 32, 64
+    q = jnp.asarray(rng.normal(size=(B, H, dh)), jnp.float32)
+    kq = jnp.asarray(rng.integers(-127, 128, (B, S, H, dh)), jnp.int8)
+    vq = jnp.asarray(rng.integers(-127, 128, (B, S, H, dh)), jnp.int8)
+    ks = jnp.ones((B, S, H), jnp.float32) * 0.01
+    vs = jnp.ones((B, S, H), jnp.float32) * 0.01
+    lengths = jnp.asarray([20], jnp.int32)
+    out1 = ops.decode_attention(q, kq, ks, vq, vs, lengths,
+                                sm_scale=0.1, impl="interpret")
+    # poison the out-of-range region
+    kq2 = kq.at[:, 20:].set(127)
+    vq2 = vq.at[:, 20:].set(-127)
+    out2 = ops.decode_attention(q, kq2, ks, vq2, vs, lengths,
+                                sm_scale=0.1, impl="interpret")
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)

@@ -1,0 +1,121 @@
+"""Unit + property tests for the core quantization math (paper §4)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    QuantMode,
+    Thresholds,
+    fake_quant,
+    quantize_dynamic,
+    quantize_naive,
+    quantize_weight,
+    quantize_with_thresholds,
+)
+from repro.core.qtensor import quantize_affine, quantize_symmetric
+
+
+def test_symmetric_round_trip_error_bound(rng):
+    x = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32))
+    qt = quantize_dynamic(x)
+    err = np.abs(np.asarray(qt.dequantize()) - np.asarray(x))
+    # quantization error is at most half a quantization step (per row)
+    step = np.asarray(qt.scale)
+    assert np.all(err <= step * 0.5 + 1e-7)
+
+
+def test_symmetric_zero_point_is_zero(rng):
+    x = jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32))
+    qt = quantize_symmetric(x, jnp.float32(np.abs(x).max()))
+    assert float(jnp.max(jnp.abs(qt.zero_point))) == 0.0
+
+
+def test_affine_maps_extremes(rng):
+    x = jnp.asarray(rng.uniform(-3.0, 9.0, size=(100,)).astype(np.float32))
+    x = x.at[0].set(-3.0).at[1].set(9.0)
+    qt = quantize_affine(x, -3.0, 9.0)
+    assert int(qt.data[0]) == -127
+    assert int(qt.data[1]) == 127
+
+
+def test_clipping_behaviour():
+    x = jnp.asarray([-100.0, -1.0, 0.0, 1.0, 100.0], jnp.float32)
+    thr = Thresholds(-2.0, 2.0)
+    y = np.asarray(fake_quant(x, thr))
+    assert y[0] == pytest.approx(-2.0, abs=0.02)
+    assert y[-1] == pytest.approx(2.0, abs=0.02)
+    assert y[2] == pytest.approx(0.0, abs=0.02)
+
+
+def test_weight_quantization_per_channel(rng):
+    # columns with very different scales must quantize independently
+    w = rng.normal(size=(64, 8)).astype(np.float32)
+    w[:, 0] *= 100.0
+    w[:, 7] *= 0.01
+    qw = quantize_weight(jnp.asarray(w))
+    rel = np.abs(np.asarray(qw.dequantize()) - w) / (np.abs(w).max(0) + 1e-12)
+    assert rel.max() < 0.01
+
+
+def test_naive_quantization_outlier_failure_mode(rng):
+    """Paper §4.1: one outlier destroys naive min/max precision."""
+    x = rng.normal(size=10_000).astype(np.float32)
+    x[0] = 1000.0
+    naive = np.asarray(quantize_naive(jnp.asarray(x)).dequantize())
+    clipped = np.asarray(
+        fake_quant(jnp.asarray(x), Thresholds(-4.0, 4.0)))
+    bulk = slice(1, None)
+    naive_err = np.abs(naive[bulk] - x[bulk]).mean()
+    clip_err = np.abs(clipped[bulk] - x[bulk]).mean()
+    assert clip_err < naive_err / 20  # calibrated clipping ≫ naive
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+
+finite_arrays = st.lists(
+    st.floats(min_value=-1e4, max_value=1e4, allow_nan=False,
+              width=32),
+    min_size=4, max_size=256)
+
+
+@given(finite_arrays)
+@settings(max_examples=50, deadline=None)
+def test_prop_quantized_values_in_range(vals):
+    x = jnp.asarray(np.asarray(vals, np.float32).reshape(1, -1))
+    qt = quantize_dynamic(x)
+    assert int(jnp.max(qt.data)) <= 127
+    assert int(jnp.min(qt.data)) >= -127
+
+
+@given(finite_arrays)
+@settings(max_examples=50, deadline=None)
+def test_prop_round_trip_monotone_error(vals):
+    """Dequantized values never exceed the observed max magnitude."""
+    x = jnp.asarray(np.asarray(vals, np.float32).reshape(1, -1))
+    qt = quantize_dynamic(x)
+    back = np.asarray(qt.dequantize())
+    assert np.all(np.abs(back) <= np.abs(np.asarray(x)).max() + 1e-6)
+
+
+@given(finite_arrays, st.floats(min_value=0.1, max_value=100.0))
+@settings(max_examples=50, deadline=None)
+def test_prop_scale_invariance(vals, scale):
+    """quant(s·x) ≈ s·quant(x) for symmetric dynamic quantization."""
+    x = np.asarray(vals, np.float32).reshape(1, -1)
+    q1 = np.asarray(quantize_dynamic(jnp.asarray(x)).dequantize())
+    q2 = np.asarray(quantize_dynamic(jnp.asarray(x * scale)).dequantize())
+    np.testing.assert_allclose(q1 * scale, q2, rtol=1e-3, atol=1e-3)
+
+
+@given(st.floats(min_value=0.01, max_value=100.0),
+       st.floats(min_value=0.01, max_value=100.0))
+@settings(max_examples=30, deadline=None)
+def test_prop_threshold_modes(t_neg, t_pos):
+    thr = Thresholds(-t_neg, t_pos)
+    env = thr.symmetric_envelope()
+    assert env.symmetric
+    assert env.t_max == pytest.approx(max(t_neg, t_pos))
