@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
 * bench_kv_gather          → §5.3     (quantized GatherNd / beam reorder)
 * bench_batching           → §5.4 + Figures 6/8 (sorting, parallel streams)
 * bench_op_distribution    → Figure 7 (op-class split FP32 vs INT8)
+* bench_continuous         → beyond §5.6 (static vs continuous batching)
 """
 
 import sys
@@ -18,6 +19,7 @@ def main() -> None:
     from benchmarks import (
         bench_batching,
         bench_calibration_modes,
+        bench_continuous,
         bench_int8_matmul,
         bench_kv_gather,
         bench_op_distribution,
@@ -28,6 +30,7 @@ def main() -> None:
         ("s5.3", bench_kv_gather),
         ("fig6/8", bench_batching),
         ("fig7", bench_op_distribution),
+        ("continuous", bench_continuous),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -2,7 +2,12 @@
 
 from repro.data.metrics import corpus_bleu  # noqa: F401
 from repro.data.pipeline import LMBatches, Prefetcher, TranslationBatches  # noqa: F401
-from repro.data.sorting import make_batches, order_indices, padding_stats  # noqa: F401
+from repro.data.sorting import (  # noqa: F401
+    make_batches,
+    order_indices,
+    pack_batches_token_budget,
+    padding_stats,
+)
 from repro.data.synthetic import (  # noqa: F401
     BOS,
     EOS,

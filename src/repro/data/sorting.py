@@ -1,9 +1,15 @@
-"""Input-pipeline sentence ordering (paper §5.4).
+"""Input-pipeline sentence ordering + bin packing (paper §5.4–§5.6).
 
 The paper: batching unsorted variable-length sentences wastes compute on pad
 tokens; sorting by **token** count beats sorting by **word** count by 28%
-throughput.  This module implements all three orders and the padding-waste
-accounting that ``benchmarks/bench_batching.py`` reports.
+throughput.  This module implements all three orders, the padding-waste
+accounting that ``benchmarks/bench_batching.py`` reports, and the
+**token-budget bin-packer** behind the continuous batching engine
+(``serving/engine.py``): instead of a fixed row count, batches are packed
+first-fit-decreasing so every bin's *padded token grid* (rows × padded
+length) stays under a budget — short sentences pack many-to-a-bin, long
+ones few-to-a-bin, and the per-step compute cost of every bin is roughly
+equal, which is what keeps the parallel streams saturated.
 """
 
 from __future__ import annotations
@@ -35,6 +41,45 @@ def make_batches(sentences: Sequence[Sentence], batch_size: int,
     idx = order_indices(sentences, mode)
     return [list(idx[i:i + batch_size])
             for i in range(0, len(idx), batch_size)]
+
+
+def pack_batches_token_budget(
+    sentences: Sequence[Sentence],
+    token_budget: int,
+    *,
+    max_rows: int | None = None,
+) -> List[List[int]]:
+    """First-fit-decreasing bin packing to a padded-token budget.
+
+    A bin holding rows of token lengths ``lens`` costs
+    ``max(lens) * len(lens)`` padded tokens (the grid the hardware actually
+    computes).  Sentences are placed longest-first into the first bin whose
+    grid stays ≤ ``token_budget`` (and, optionally, whose row count stays
+    ≤ ``max_rows``).  Because placement is in decreasing length order, a
+    bin's padded length is fixed by its first element, so adding a row
+    never re-inflates earlier decisions.
+
+    A sentence longer than the whole budget still gets its own bin (it has
+    to run *somewhere*); every index appears in exactly one bin.
+    """
+    if token_budget <= 0:
+        raise ValueError(f"token_budget must be positive, got {token_budget}")
+    order = order_indices(sentences, "tokens")
+    bins: List[List[int]] = []
+    bin_max: List[int] = []
+    for i in order:
+        t = sentences[i].n_tokens
+        for b in range(len(bins)):
+            mx = max(bin_max[b], t)
+            if mx * (len(bins[b]) + 1) <= token_budget and (
+                    max_rows is None or len(bins[b]) < max_rows):
+                bins[b].append(int(i))
+                bin_max[b] = mx
+                break
+        else:
+            bins.append([int(i)])
+            bin_max.append(t)
+    return bins
 
 
 def padding_stats(sentences: Sequence[Sentence],

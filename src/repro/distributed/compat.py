@@ -1,0 +1,42 @@
+"""Version-compat wrappers for jax sharding APIs.
+
+The repo targets current jax, but the hermetic containers pin older
+releases (0.4.x) where ``jax.shard_map`` still lives in
+``jax.experimental.shard_map`` (with ``check_rep`` instead of
+``check_vma``) and ``jax.make_mesh`` has no ``axis_types``/
+``jax.sharding.AxisType``.  Everything that touches those APIs goes
+through here so the rest of the codebase can be written against the
+modern surface.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None, explicit=False):
+    """``jax.make_mesh`` with ``axis_types`` when the install supports it."""
+    kw = {} if devices is None else {"devices": devices}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kind = axis_type.Explicit if explicit else axis_type.Auto
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=(kind,) * len(axis_names), **kw)
+        except TypeError:  # make_mesh predates axis_types
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across the 0.4 → 0.7 API renames."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check)
+        except TypeError:  # pre-rename: check_rep
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)

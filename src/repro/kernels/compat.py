@@ -1,0 +1,22 @@
+"""Version-compat for the Pallas TPU API (companion to
+``repro.distributed.compat`` on the sharding side).
+
+jax ≥0.5 renamed ``pltpu.TPUCompilerParams`` → ``pltpu.CompilerParams``;
+every kernel gets the resolved class from here so the version check lives
+in one place and fails loudly if a future pallas drops both names.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct pallas TPU compiler params across the rename."""
+    cls = getattr(pltpu, "CompilerParams",
+                  getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams; unsupported jax/pallas version")
+    return cls(**kwargs)

@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.distributed.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """v5e pod mesh: 16×16 = 256 chips; multi-pod adds a leading pod axis."""
@@ -19,9 +21,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     for s in shape:
         n *= s
     devices = jax.devices()[:n]     # dry-run exposes 512 host devices
-    return jax.make_mesh(
-        shape, axes, devices=devices,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=devices)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -29,9 +29,7 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = min(model, max(n // data, 1))
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple:

@@ -3,8 +3,15 @@
 ``python -m repro.launch.serve --arch transformer-base --requests 64
   --quant symmetric --streams 2 --beam 1``
 
-Pipeline: synthetic requests → token-sorted scheduler → (optional
-calibrated INT8 PTQ) → parallel stream workers → throughput report.
+Pipeline (``--mode static``, the paper's): synthetic requests →
+token-sorted scheduler → (optional calibrated INT8 PTQ) → parallel stream
+workers → throughput report.
+
+``--mode continuous`` swaps the back half for the continuous batching
+engine: requests are bin-packed to a token budget (FFD) for admission
+order, then stream through ``ServingEngine.serve``'s slot-refill decode
+loop, reporting per-request first-token/total latency and decode-grid
+utilization.
 """
 
 from __future__ import annotations
@@ -19,7 +26,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import Calibrator, QuantMode, QuantPolicy, Taps, quantize_model
 from repro.core.ptq import FP_CONTEXT
-from repro.data import corpus_bleu, make_corpus
+from repro.data import corpus_bleu, make_corpus, pack_batches_token_budget
 from repro.models import build_model
 from repro.serving import ParallelStreams, ServingEngine, TokenSortedScheduler
 
@@ -37,6 +44,13 @@ def main() -> None:
     ap.add_argument("--max-new-tokens", type=int, default=24)
     ap.add_argument("--sort", default="tokens",
                     choices=["none", "words", "tokens"])
+    ap.add_argument("--mode", default="static",
+                    choices=["static", "continuous"])
+    ap.add_argument("--slots", type=int, default=8,
+                    help="decode slots for --mode continuous")
+    ap.add_argument("--token-budget", type=int, default=256,
+                    help="FFD bin budget (padded tokens) for admission "
+                         "order in --mode continuous")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -64,6 +78,29 @@ def main() -> None:
         print(f"quantized with mode={args.quant}: "
               f"{sum(r.quantize for r in recs.values())}/{len(recs)} "
               "calibrated sites quantizable")
+
+    if args.mode == "continuous":
+        if args.beam > 1:
+            raise SystemExit("--mode continuous is greedy-only (beam=1)")
+        engine = ServingEngine(model, params, quant=qctx, max_len=96)
+        bins = pack_batches_token_budget(requests, args.token_budget)
+        order = [i for b in bins for i in b]     # FFD admission order
+        t0 = time.perf_counter()
+        res = engine.serve([requests[i] for i in order],
+                           n_slots=args.slots,
+                           max_new_tokens=args.max_new_tokens)
+        dt = time.perf_counter() - t0
+        met = res.metrics()
+        print(f"served {args.requests} requests in {dt:.2f}s "
+              f"({res.tokens_per_s:.1f} tok/s, "
+              f"slot utilization {res.utilization:.2f}, "
+              f"{res.prefill_rounds} prefill rounds)")
+        print(f"latency: first-token mean "
+              f"{met['first_token_latency_mean_s']:.3f}s "
+              f"p95 {met['first_token_latency_p95_s']:.3f}s; total mean "
+              f"{met['total_latency_mean_s']:.3f}s "
+              f"p95 {met['total_latency_p95_s']:.3f}s")
+        return
 
     engines = [ServingEngine(model, params, quant=qctx, max_len=96)
                for _ in range(args.streams)]

@@ -160,6 +160,53 @@ def append_token(
     return k_cache, v_cache, ks_cache, vs_cache
 
 
+def insert_at_slots(cache: KVCache, sub: KVCache,
+                    slots: jax.Array) -> KVCache:
+    """Scatter ``sub``'s batch rows into ``slots`` of the running cache.
+
+    The continuous-batching engine (``serving/engine.py``) prefills newly
+    admitted requests as a small side batch and splices the resulting rows
+    into the long-lived decode cache mid-flight, so a finished sequence's
+    slot is refilled instead of idling until the batch drains.
+
+    ``slots``: (B_sub,) int32 destination rows, unique.  Works for both FP
+    and INT8 caches (both sides must agree); out-of-range slot indices are
+    dropped (jax scatter semantics), which the engine uses to pad admission
+    groups to a fixed compile-stable width.
+    """
+    if cache.quantized != sub.quantized:
+        raise ValueError("cannot mix quantized and fp caches "
+                         f"(main quantized={cache.quantized}, "
+                         f"sub quantized={sub.quantized})")
+    if cache.capacity != sub.capacity:
+        raise ValueError(f"capacity mismatch: {cache.capacity} vs "
+                         f"{sub.capacity}")
+    slots = jnp.asarray(slots, jnp.int32)
+    put = lambda main, part: (None if main is None
+                              else main.at[:, slots].set(
+                                  part.astype(main.dtype)))
+    return KVCache(
+        k=put(cache.k, sub.k), v=put(cache.v, sub.v),
+        k_scale=put(cache.k_scale, sub.k_scale),
+        v_scale=put(cache.v_scale, sub.v_scale),
+        lengths=cache.lengths.at[slots].set(sub.lengths),
+    )
+
+
+def free_slots(cache: KVCache, slots: jax.Array) -> KVCache:
+    """Mark ``slots`` empty by resetting their write cursors to zero.
+
+    The payload is left in place — every read (attention, gathers) is
+    masked by ``lengths``, and the next ``insert_at_slots`` overwrites the
+    rows wholesale — so eviction is a (B,)-sized scatter, not a cache copy.
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    return KVCache(
+        k=cache.k, v=cache.v, k_scale=cache.k_scale, v_scale=cache.v_scale,
+        lengths=cache.lengths.at[slots].set(0),
+    )
+
+
 def gather_beams(cache: KVCache, beam_idx: jax.Array) -> KVCache:
     """Beam-search cache reorder along batch — the paper's GatherNd.
 

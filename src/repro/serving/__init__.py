@@ -1,3 +1,17 @@
-from repro.serving.engine import GenerationResult, ServingEngine  # noqa: F401
-from repro.serving.scheduler import BatchQueue, TokenSortedScheduler, WorkItem  # noqa: F401
-from repro.serving.streams import ParallelStreams, simulate_streams  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    GenerationResult,
+    ServeResult,
+    ServingEngine,
+)
+from repro.serving.scheduler import (  # noqa: F401
+    BatchQueue,
+    ContinuousScheduler,
+    Request,
+    TokenSortedScheduler,
+    WorkItem,
+)
+from repro.serving.streams import (  # noqa: F401
+    ParallelStreams,
+    simulate_continuous,
+    simulate_streams,
+)

@@ -1,9 +1,19 @@
-"""Serving engine: prefill + auto-regressive decode (greedy & beam search).
+"""Serving engine: prefill + auto-regressive decode (greedy, beam, continuous).
 
 This is the paper's workload: batched NMT inference with a decoder
 while-loop.  Beam search reorders the KV cache every step through
 ``kv_cache.gather_beams`` — the GatherNd the paper quantized (§5.3); with an
 INT8 cache the reorder moves 4× fewer bytes.
+
+Beyond the paper's static batches, :meth:`ServingEngine.serve` implements
+**continuous batching**: a fixed pool of ``n_slots`` decode rows runs one
+shared decode step; when a sequence finishes, its KV-cache slot is refilled
+by prefilling the next waiting request (``kv_cache.insert_at_slots``) while
+the other slots keep decoding.  Admission order and pacing come from
+``scheduler.ContinuousScheduler``; prefill side-batches are padded to
+power-of-two widths so the whole serve compiles O(log slots) programs.
+Greedy decode through ``serve`` is token-identical to per-request
+:meth:`generate` — every per-row computation is batch-independent.
 
 The decode loop runs in Python calling jitted step functions (the standard
 serving pattern — state stays on device; only the finished-check syncs).
@@ -13,15 +23,16 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ptq import FP_CONTEXT, QuantContext
-from repro.data.synthetic import EOS
+from repro.data.synthetic import EOS, pad_batch
 from repro.models import kv_cache as kvc
+from repro.serving.scheduler import ContinuousScheduler, Request
 
 
 @dataclasses.dataclass
@@ -38,6 +49,65 @@ class GenerationResult:
     @property
     def n_tokens(self) -> int:
         return int(sum(len(t) for t in self.tokens))
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Outcome of one continuous-batching serve."""
+
+    requests: List[Request]           # submission order, lifecycle filled in
+    n_slots: int
+    decode_steps: int
+    busy_slot_steps: int              # Σ over steps of occupied slots
+    prefill_rounds: int
+    wall_s: float
+
+    @property
+    def n_tokens(self) -> int:
+        return int(sum(len(r.tokens) for r in self.requests))
+
+    @property
+    def utilization(self) -> float:
+        """Occupied-slot fraction of the decode grid actually computed."""
+        return self.busy_slot_steps / max(self.n_slots * self.decode_steps, 1)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.n_tokens / max(self.wall_s, 1e-9)
+
+    def tokens_for(self, req_id: int) -> np.ndarray:
+        for r in self.requests:
+            if r.req_id == req_id:
+                return np.asarray(r.tokens, np.int32)
+        raise KeyError(req_id)
+
+    def metrics(self) -> Dict[str, float]:
+        first = [r.first_token_latency_s for r in self.requests
+                 if r.first_token_latency_s is not None]
+        total = [r.total_latency_s for r in self.requests
+                 if r.total_latency_s is not None]
+        return {
+            "n_requests": float(len(self.requests)),
+            "n_tokens": float(self.n_tokens),
+            "wall_s": self.wall_s,
+            "tokens_per_s": self.tokens_per_s,
+            "utilization": self.utilization,
+            "decode_steps": float(self.decode_steps),
+            "prefill_rounds": float(self.prefill_rounds),
+            "first_token_latency_mean_s": float(np.mean(first)) if first else 0.0,
+            "first_token_latency_p95_s":
+                float(np.percentile(first, 95)) if first else 0.0,
+            "total_latency_mean_s": float(np.mean(total)) if total else 0.0,
+            "total_latency_p95_s":
+                float(np.percentile(total, 95)) if total else 0.0,
+        }
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 class ServingEngine:
@@ -57,6 +127,10 @@ class ServingEngine:
             lambda p, t, s: model.decode_step(p, t, s, quant=quant),
             donate_argnums=donate)
         self._gather = jax.jit(self._beam_gather_state)
+        # continuous-batching row splice: scatter a prefilled side-batch into
+        # the long-lived decode state.  Donates the old state/token buffers —
+        # the caller always rebinds to the returned ones.
+        self._insert = jax.jit(self._insert_rows, donate_argnums=(0, 2))
 
     # ------------------------------------------------------------------ util
     def _init_state(self, batch_size: int):
@@ -78,6 +152,26 @@ class ServingEngine:
             else:
                 out[k] = jax.tree_util.tree_map(gather, v)
         return out
+
+    @staticmethod
+    def _insert_rows(state: Dict[str, Any], sub: Dict[str, Any],
+                     tokens: jax.Array, sub_tokens: jax.Array,
+                     slots: jax.Array):
+        """Splice a prefilled side-batch into the running decode state.
+
+        ``slots``: (B_sub,) destination rows; entries ≥ n_slots are padding
+        and dropped by jax scatter semantics (admission groups are padded to
+        a power-of-two width for compile stability).
+        """
+        out = dict(state)
+        out["cache"] = kvc.insert_at_slots(state["cache"], sub["cache"],
+                                           slots)
+        out["cross_k"] = state["cross_k"].at[:, slots].set(sub["cross_k"])
+        out["cross_v"] = state["cross_v"].at[:, slots].set(sub["cross_v"])
+        out["src_lengths"] = state["src_lengths"].at[slots].set(
+            sub["src_lengths"])
+        tokens = tokens.at[slots].set(sub_tokens)
+        return out, tokens
 
     # ---------------------------------------------------------------- greedy
     def generate(self, batch: Dict[str, np.ndarray], *,
@@ -116,6 +210,155 @@ class ServingEngine:
             seqs.append(row[:stop])
         return GenerationResult(tokens=seqs, steps=steps,
                                 prefill_s=t1 - t0, decode_s=t2 - t1)
+
+    # ------------------------------------------------------------ continuous
+    def _as_requests(
+        self, requests: Sequence[Any],
+        max_new_tokens: Union[int, Sequence[int]],
+    ) -> List[Request]:
+        per_req = (list(max_new_tokens)
+                   if isinstance(max_new_tokens, (list, tuple, np.ndarray))
+                   else [int(max_new_tokens)] * len(requests))
+        if len(per_req) != len(requests):
+            raise ValueError("max_new_tokens sequence length "
+                             f"{len(per_req)} != {len(requests)} requests")
+        out = []
+        for i, (r, m) in enumerate(zip(requests, per_req)):
+            if isinstance(r, Request):
+                out.append(r)
+                continue
+            src = r.src if hasattr(r, "src") else np.asarray(r, np.int32)
+            out.append(Request(req_id=i, src=np.asarray(src, np.int32),
+                               max_new_tokens=int(m)))
+        ids = [r.req_id for r in out]
+        if len(set(ids)) != len(ids):
+            raise ValueError("duplicate req_ids in serve() input (raw "
+                             "requests are numbered by position; supplied "
+                             "Request ids must not collide)")
+        return out
+
+    def serve(self, requests: Sequence[Any], *, n_slots: int = 8,
+              max_new_tokens: Union[int, Sequence[int]] = 64,
+              prefill_token_budget: Optional[int] = None,
+              admit_min_free: int = 1,
+              pad_to_multiple: int = 8) -> ServeResult:
+        """Continuous-batching greedy decode over a request stream.
+
+        ``requests`` may be ``Sentence``s, raw token arrays, or ``Request``
+        objects (the latter carry their own ``max_new_tokens``); submission
+        order is arrival order.  All ``n_slots`` rows share one jitted
+        decode step; finished rows are released mid-decode
+        (``kv_cache.free_slots``) and refilled from the waiting queue
+        (``kv_cache.insert_at_slots``), so the decode grid stays saturated
+        even when generation lengths are wildly skewed.  Greedy decode is
+        token-identical to per-request :meth:`generate`.
+
+        ``admit_min_free`` is admission hysteresis: wait until that many
+        slots are free before paying for a prefill round (larger values
+        amortize prefill dispatches at a small utilization/latency cost;
+        1 = refill immediately).  The last stragglers are always admitted.
+        """
+        reqs = self._as_requests(requests, max_new_tokens)
+        if not reqs:
+            return ServeResult(requests=[], n_slots=n_slots, decode_steps=0,
+                               busy_slot_steps=0, prefill_rounds=0,
+                               wall_s=0.0)
+        if max(r.max_new_tokens for r in reqs) > self.max_len:
+            raise ValueError("a request's max_new_tokens exceeds the "
+                             f"engine KV capacity {self.max_len}")
+        m = pad_to_multiple
+        enc_len = max(r.n_src_tokens for r in reqs)
+        enc_len = ((enc_len + m - 1) // m) * m
+
+        sched = ContinuousScheduler(
+            n_slots, prefill_token_budget=prefill_token_budget)
+        sched.submit_many(reqs)
+
+        quantized = self.quant.quantize_kv
+        state = self.model.init_decode_state(
+            n_slots, self.max_len, quantized=quantized, enc_len=enc_len)
+        tokens = jnp.zeros((n_slots,), jnp.int32)
+
+        t0 = time.perf_counter()
+        now = lambda: time.perf_counter() - t0
+        decode_steps = 0
+        busy_slot_steps = 0
+        prefill_rounds = 0
+
+        def prefill_into_slots(admitted, state, tokens):
+            """Prefill newly admitted requests and splice them in."""
+            g = len(admitted)
+            width = _next_pow2(g)
+            src_pad, lens = pad_batch([r.src for r in admitted],
+                                      length=enc_len)
+            if width > g:
+                # padding rows replay request 0 (results are discarded:
+                # their slot index is out of range → the scatter drops them)
+                pad_rows = np.broadcast_to(src_pad[0], (width - g, enc_len))
+                src_pad = np.concatenate([src_pad, pad_rows], axis=0)
+                lens = np.concatenate(
+                    [lens, np.broadcast_to(lens[0], (width - g,))])
+            sub = self.model.init_decode_state(
+                width, self.max_len, quantized=quantized)
+            logits, sub = self._prefill(
+                self.params,
+                {"src_tokens": jnp.asarray(src_pad),
+                 "src_lengths": jnp.asarray(lens)},
+                sub)
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            slots = np.full((width,), n_slots, np.int32)   # OOB sentinel
+            slots[:g] = [r.slot for r in admitted]
+            state, tokens = self._insert(state, sub, tokens, first,
+                                         jnp.asarray(slots))
+            first_host = np.asarray(first[:g])
+            t = now()
+            for r, tok in zip(admitted, first_host):
+                r.first_token_s = t
+                tok = int(tok)
+                if r.max_new_tokens <= 0 or tok == self.eos_id:
+                    sched.release(r, t)    # zero budget / empty translation
+                else:
+                    r.tokens.append(tok)
+                    if r.max_new_tokens <= 1:
+                        sched.release(r, t)
+            return state, tokens
+
+        while not sched.all_done:
+            admitted = []
+            if sched.n_free >= min(max(admit_min_free, 1), sched.n_waiting,
+                                   n_slots) and sched.n_waiting:
+                admitted = sched.admit(now())
+            if admitted:
+                prefill_rounds += 1
+                state, tokens = prefill_into_slots(admitted, state, tokens)
+            if not sched.slot_map:
+                continue        # every admitted request finished on token 1
+
+            logits, state = self._decode(self.params, tokens, state)
+            tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            toks = np.asarray(tokens)              # host sync per step
+            decode_steps += 1
+            busy_slot_steps += len(sched.slot_map)
+
+            t = now()
+            freed = []
+            for slot, req in list(sched.slot_map.items()):
+                tok = int(toks[slot])
+                if tok == self.eos_id:
+                    freed.append(sched.release(req, t))
+                else:
+                    req.tokens.append(tok)
+                    if len(req.tokens) >= req.max_new_tokens:
+                        freed.append(sched.release(req, t))
+            if freed:
+                state = dict(state)
+                state["cache"] = kvc.free_slots(
+                    state["cache"], np.asarray(freed, np.int32))
+
+        return ServeResult(requests=reqs, n_slots=n_slots,
+                           decode_steps=decode_steps,
+                           busy_slot_steps=busy_slot_steps,
+                           prefill_rounds=prefill_rounds, wall_s=now())
 
     # ------------------------------------------------------------------ beam
     def generate_beam(self, batch: Dict[str, np.ndarray], *, beam: int = 4,

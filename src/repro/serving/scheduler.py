@@ -1,19 +1,31 @@
 """Serving-side batch composition (paper §5.4 + §5.6 front half).
 
-``TokenSortedScheduler`` orders incoming requests by **token count**
-(descending — long batches first keeps the stream pipeline busy at the
-tail), composes fixed-size batches padded to bucketed lengths, and exposes
-them through a thread-safe ``BatchQueue`` that the parallel streams
-(``streams.py``) drain asynchronously — the paper's parent-session batch
-queue.
+Two generations of scheduler live here:
+
+* ``TokenSortedScheduler`` — the paper's static composer: orders incoming
+  requests by **token count** (descending — long batches first keeps the
+  stream pipeline busy at the tail), composes fixed-size batches padded to
+  bucketed lengths, and exposes them through a thread-safe ``BatchQueue``
+  that the parallel streams (``streams.py``) drain asynchronously — the
+  paper's parent-session batch queue.
+
+* ``ContinuousScheduler`` — the request-lifecycle manager behind
+  ``ServingEngine.serve``: requests flow *waiting → running → finished*
+  through a fixed pool of decode **slots**.  Admission is strict FIFO (no
+  starvation by construction) with an optional per-round prefill token
+  budget; a slot freed by a finished sequence is refilled mid-decode
+  instead of idling until the whole batch drains.  Per-request arrival /
+  first-token / finish timestamps feed the latency metrics the benchmarks
+  report.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
-from typing import Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -62,6 +74,131 @@ class TokenSortedScheduler:
     def stats(self, requests: Sequence[Sentence]) -> dict:
         batches = make_batches(requests, self.batch_size, self.sort_mode)
         return padding_stats(requests, batches)
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request and its measured lifecycle."""
+
+    req_id: int
+    src: np.ndarray                     # (S,) int32 source tokens
+    max_new_tokens: int = 64
+    arrival_s: float = 0.0
+
+    # lifecycle (scheduler/engine-maintained)
+    status: str = "waiting"             # waiting | running | finished
+    slot: Optional[int] = None
+    admitted_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_src_tokens(self) -> int:
+        return int(len(self.src))
+
+    @property
+    def first_token_latency_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def total_latency_s(self) -> Optional[float]:
+        if self.finish_s is None:
+            return None
+        return self.finish_s - self.arrival_s
+
+
+class ContinuousScheduler:
+    """Admission control + slot lifecycle for continuous batching.
+
+    ``n_slots`` decode rows exist for the whole serve; a request occupies
+    exactly one slot from admission to finish.  ``admit`` hands out free
+    slots to waiting requests in strict FIFO order — bounded per round by
+    ``prefill_token_budget`` (sum of source tokens prefillable in one go)
+    so a burst of long requests cannot monopolize a prefill round.  The
+    first waiting request is always admitted when a slot is free, so no
+    request can starve regardless of the length mix.
+    """
+
+    def __init__(self, n_slots: int, *,
+                 prefill_token_budget: Optional[int] = None):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self.n_slots = n_slots
+        self.prefill_token_budget = prefill_token_budget
+        self._waiting: Deque[Request] = collections.deque()
+        self._free: List[int] = list(range(n_slots))
+        self.slot_map: Dict[int, Request] = {}
+        self.finished: List[Request] = []
+
+    # ------------------------------------------------------------- lifecycle
+    def submit(self, req: Request) -> None:
+        # reset the whole lifecycle so a Request object can be re-served
+        req.status = "waiting"
+        req.slot = None
+        req.admitted_s = None
+        req.first_token_s = None
+        req.finish_s = None
+        req.tokens = []
+        self._waiting.append(req)
+
+    def submit_many(self, reqs: Sequence[Request]) -> None:
+        for r in reqs:
+            self.submit(r)
+
+    def admit(self, now: float = 0.0) -> List[Request]:
+        """Move waiting requests into free slots (one prefill round)."""
+        admitted: List[Request] = []
+        budget = self.prefill_token_budget
+        used = 0
+        while self._waiting and self._free:
+            req = self._waiting[0]
+            if (admitted and budget is not None
+                    and used + req.n_src_tokens > budget):
+                break                    # next round; FIFO order preserved
+            self._waiting.popleft()
+            slot = self._free.pop(0)
+            req.status = "running"
+            req.slot = slot
+            req.admitted_s = now
+            self.slot_map[slot] = req
+            used += req.n_src_tokens
+            admitted.append(req)
+        return admitted
+
+    def release(self, req: Request, now: float = 0.0) -> int:
+        """Finish a running request and return its freed slot."""
+        if req.status != "running" or req.slot is None:
+            raise ValueError(f"request {req.req_id} is not running "
+                             f"(status={req.status})")
+        slot = req.slot
+        req.status = "finished"
+        req.finish_s = now
+        req.slot = None
+        del self.slot_map[slot]
+        self._free.append(slot)
+        self._free.sort()
+        self.finished.append(req)
+        return slot
+
+    # ------------------------------------------------------------ inspection
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_running(self) -> int:
+        return len(self.slot_map)
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self._waiting)
+
+    @property
+    def all_done(self) -> bool:
+        return not self._waiting and not self.slot_map
 
 
 class BatchQueue:

@@ -12,6 +12,10 @@ worker mechanism is identical, and jax releases the GIL during compute.
 ``simulate_streams`` additionally provides the deterministic queueing model
 used by ``benchmarks/bench_batching.py`` to report the serial-vs-parallel
 scaling the paper shows in Figure 6/8 (wall-clock on 1 CPU core cannot).
+``simulate_continuous`` is the same idea for the slot-refill engine
+(``ServingEngine.serve``): it predicts the decode-grid utilization gap
+between static and continuous batching from the decode-length distribution
+alone.
 """
 
 from __future__ import annotations
@@ -76,6 +80,50 @@ class ParallelStreams:
             "utilization": busy / max(makespan * self.n_streams, 1e-9),
             "records": self.records,
         }
+
+
+def simulate_continuous(decode_lengths: Sequence[int], n_slots: int,
+                        *, static_batch: Optional[int] = None) -> Dict:
+    """Deterministic slot-refill model of continuous vs static batching.
+
+    Cost unit = one decode step of one slot row (the decode grid is computed
+    for every slot whether or not it holds a live request).  Continuous
+    batching finishes a request after exactly ``decode_lengths[i]`` steps in
+    its slot and refills immediately; static batching (``static_batch``
+    rows per batch, FIFO) holds every row until the *longest* request in
+    the batch finishes.  Returns slot-steps and utilization for both, the
+    analogue of the paper's Fig. 6 queueing model for the refill engine —
+    used by ``benchmarks/bench_continuous.py`` and the scheduler tests.
+    """
+    lens = [int(x) for x in decode_lengths]
+    useful = sum(lens)
+
+    # --- continuous: each slot is a server; request occupies it `len` steps
+    free = np.zeros(n_slots)
+    for ln in lens:                      # FIFO admission
+        s = int(np.argmin(free))
+        free[s] += ln
+    cont_steps = int(free.max())         # decode steps of the shared grid
+    cont_grid = cont_steps * n_slots
+
+    # --- static: batches of `static_batch` rows run max(len) steps each
+    # (a partial final batch is charged its actual rows, matching how the
+    # measured baseline in bench_continuous.py accounts its grid)
+    bsz = static_batch or n_slots
+    static_grid = 0
+    static_steps = 0
+    for i in range(0, len(lens), bsz):
+        chunk = lens[i:i + bsz]
+        static_steps += max(chunk)
+        static_grid += max(chunk) * len(chunk)
+    return {
+        "useful_slot_steps": useful,
+        "continuous_steps": cont_steps,
+        "continuous_utilization": useful / max(cont_grid, 1),
+        "static_steps": static_steps,
+        "static_utilization": useful / max(static_grid, 1),
+        "speedup_steps": static_steps / max(cont_steps, 1),
+    }
 
 
 def simulate_streams(batch_costs: Sequence[float], n_streams: int,

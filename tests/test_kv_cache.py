@@ -1,0 +1,136 @@
+"""Slot-based KV-cache insert/evict round-trips (ISSUE 1): quantized and
+unquantized caches, interaction with gather_beams."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import kv_cache as kvc
+
+L, B, S, HKV, DH = 2, 6, 8, 2, 4
+
+
+def _rand_cache(rng, batch, *, quantized, lengths=None):
+    cache = kvc.init_cache(L, batch, S, HKV, DH, quantized=quantized,
+                           dtype=jnp.float32)
+    shape = (L, batch, S, HKV, DH)
+    if quantized:
+        k = rng.integers(-127, 128, shape).astype(np.int8)
+        v = rng.integers(-127, 128, shape).astype(np.int8)
+        ks = rng.uniform(1e-3, 0.1, shape[:-1]).astype(np.float32)
+        vs = rng.uniform(1e-3, 0.1, shape[:-1]).astype(np.float32)
+        cache = kvc.KVCache(k=jnp.asarray(k), v=jnp.asarray(v),
+                            k_scale=jnp.asarray(ks), v_scale=jnp.asarray(vs),
+                            lengths=cache.lengths)
+    else:
+        k = rng.normal(size=shape).astype(np.float32)
+        v = rng.normal(size=shape).astype(np.float32)
+        cache = kvc.KVCache(k=jnp.asarray(k), v=jnp.asarray(v),
+                            k_scale=None, v_scale=None, lengths=cache.lengths)
+    if lengths is not None:
+        cache = kvc.KVCache(k=cache.k, v=cache.v, k_scale=cache.k_scale,
+                            v_scale=cache.v_scale,
+                            lengths=jnp.asarray(lengths, jnp.int32))
+    return cache
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_insert_at_slots_round_trip(rng, quantized):
+    main = _rand_cache(rng, B, quantized=quantized,
+                       lengths=np.arange(B) + 1)
+    sub = _rand_cache(rng, 2, quantized=quantized, lengths=[5, 7])
+    slots = np.asarray([1, 4], np.int32)
+
+    out = kvc.insert_at_slots(main, sub, jnp.asarray(slots))
+
+    for j, s in enumerate(slots):
+        np.testing.assert_array_equal(np.asarray(out.k[:, s]),
+                                      np.asarray(sub.k[:, j]))
+        np.testing.assert_array_equal(np.asarray(out.v[:, s]),
+                                      np.asarray(sub.v[:, j]))
+        if quantized:
+            np.testing.assert_array_equal(np.asarray(out.k_scale[:, s]),
+                                          np.asarray(sub.k_scale[:, j]))
+            np.testing.assert_array_equal(np.asarray(out.v_scale[:, s]),
+                                          np.asarray(sub.v_scale[:, j]))
+        assert int(out.lengths[s]) == int(sub.lengths[j])
+    untouched = [b for b in range(B) if b not in slots]
+    for b in untouched:
+        np.testing.assert_array_equal(np.asarray(out.k[:, b]),
+                                      np.asarray(main.k[:, b]))
+        assert int(out.lengths[b]) == int(main.lengths[b])
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_free_slots_resets_cursors_only(rng, quantized):
+    main = _rand_cache(rng, B, quantized=quantized,
+                       lengths=np.arange(B) + 1)
+    out = kvc.free_slots(main, jnp.asarray([0, 3], jnp.int32))
+    want = np.arange(B) + 1
+    want[[0, 3]] = 0
+    np.testing.assert_array_equal(np.asarray(out.lengths), want)
+    # payload untouched — reads are masked by lengths
+    np.testing.assert_array_equal(np.asarray(out.k), np.asarray(main.k))
+    np.testing.assert_array_equal(np.asarray(out.v), np.asarray(main.v))
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_insert_free_reinsert_cycle(rng, quantized):
+    """The engine's slot lifecycle: fill → evict → refill the same slot."""
+    main = _rand_cache(rng, B, quantized=quantized, lengths=[2] * B)
+    first = _rand_cache(rng, 1, quantized=quantized, lengths=[4])
+    second = _rand_cache(rng, 1, quantized=quantized, lengths=[6])
+    slot = jnp.asarray([2], jnp.int32)
+
+    main = kvc.insert_at_slots(main, first, slot)
+    assert int(main.lengths[2]) == 4
+    main = kvc.free_slots(main, slot)
+    assert int(main.lengths[2]) == 0
+    main = kvc.insert_at_slots(main, second, slot)
+    assert int(main.lengths[2]) == 6
+    np.testing.assert_array_equal(np.asarray(main.k[:, 2]),
+                                  np.asarray(second.k[:, 0]))
+
+
+def test_insert_out_of_range_slot_is_dropped(rng):
+    """The engine pads admission groups with an OOB sentinel slot."""
+    main = _rand_cache(rng, B, quantized=False, lengths=[1] * B)
+    sub = _rand_cache(rng, 2, quantized=False, lengths=[5, 9])
+    out = kvc.insert_at_slots(main, sub, jnp.asarray([3, B], jnp.int32))
+    assert int(out.lengths[3]) == 5
+    np.testing.assert_array_equal(
+        np.asarray(out.lengths)[[0, 1, 2, 4, 5]], [1, 1, 1, 1, 1])
+
+
+def test_insert_rejects_mixed_quantization_and_capacity(rng):
+    fp = _rand_cache(rng, B, quantized=False)
+    q = _rand_cache(rng, 2, quantized=True)
+    with pytest.raises(ValueError):
+        kvc.insert_at_slots(fp, q, jnp.asarray([0, 1], jnp.int32))
+    small = kvc.init_cache(L, 2, S // 2, HKV, DH, quantized=False,
+                           dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        kvc.insert_at_slots(fp, small, jnp.asarray([0, 1], jnp.int32))
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_insert_then_gather_beams(rng, quantized):
+    """Beam reorder composes with slot insertion: gather after insert sees
+    the inserted rows."""
+    main = _rand_cache(rng, B, quantized=quantized,
+                       lengths=np.arange(B) + 1)
+    sub = _rand_cache(rng, 2, quantized=quantized, lengths=[3, 5])
+    out = kvc.insert_at_slots(main, sub, jnp.asarray([0, 5], jnp.int32))
+    idx = jnp.asarray([5, 5, 1, 0, 2, 4], jnp.int32)
+    g = kvc.gather_beams(out, idx)
+    np.testing.assert_array_equal(np.asarray(g.k[:, 0]),
+                                  np.asarray(sub.k[:, 1]))
+    np.testing.assert_array_equal(np.asarray(g.k[:, 3]),
+                                  np.asarray(sub.k[:, 0]))
+    np.testing.assert_array_equal(np.asarray(g.k[:, 2]),
+                                  np.asarray(main.k[:, 1]))
+    np.testing.assert_array_equal(
+        np.asarray(g.lengths), [5, 5, 2, 3, 3, 5])
+    if quantized:
+        np.testing.assert_array_equal(np.asarray(g.k_scale[:, 0]),
+                                      np.asarray(sub.k_scale[:, 1]))

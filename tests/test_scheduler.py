@@ -1,0 +1,193 @@
+"""Bin-packer invariants + ContinuousScheduler lifecycle (ISSUE 1)."""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.data import (
+    make_batches,
+    make_corpus,
+    pack_batches_token_budget,
+    padding_stats,
+)
+from repro.serving import ContinuousScheduler, Request, simulate_continuous
+
+
+# ---------------------------------------------------------------------------
+# first-fit-decreasing bin packing
+# ---------------------------------------------------------------------------
+
+def _flat(bins):
+    return sorted(i for b in bins for i in b)
+
+
+def test_ffd_places_every_request_exactly_once():
+    corpus = make_corpus(200, vocab=64, seed=2)
+    bins = pack_batches_token_budget(corpus, token_budget=128)
+    assert _flat(bins) == list(range(len(corpus)))
+
+
+def test_ffd_respects_token_budget():
+    corpus = make_corpus(150, vocab=64, seed=3)
+    budget = 96
+    for b in pack_batches_token_budget(corpus, budget):
+        grid = max(corpus[i].n_tokens for i in b) * len(b)
+        if len(b) > 1:
+            assert grid <= budget
+        else:
+            # singleton bins may exceed the budget only because the single
+            # sentence itself does
+            assert grid <= budget or corpus[b[0]].n_tokens > budget
+
+
+def test_ffd_oversized_sentence_gets_own_bin():
+    corpus = make_corpus(40, vocab=64, seed=4, min_words=20, max_words=30)
+    # budget below every sentence's token count → all singletons
+    bins = pack_batches_token_budget(corpus, token_budget=2)
+    assert all(len(b) == 1 for b in bins)
+    assert _flat(bins) == list(range(len(corpus)))
+
+
+def test_ffd_max_rows_cap():
+    corpus = make_corpus(100, vocab=64, seed=5, min_words=2, max_words=3)
+    bins = pack_batches_token_budget(corpus, token_budget=10_000, max_rows=8)
+    assert all(len(b) <= 8 for b in bins)
+    assert _flat(bins) == list(range(len(corpus)))
+
+
+def test_ffd_rejects_nonpositive_budget():
+    corpus = make_corpus(4, vocab=64, seed=0)
+    with pytest.raises(ValueError):
+        pack_batches_token_budget(corpus, token_budget=0)
+
+
+def test_ffd_pad_waste_no_worse_than_greedy():
+    """FFD budget bins beat unsorted greedy fixed-size batches on pad waste
+    and stay close to token-sorted greedy (both place in descending order,
+    but FFD trades a little padding for fewer, budget-equalized bins)."""
+    corpus = make_corpus(400, vocab=64, seed=6)
+    unsorted = padding_stats(corpus, make_batches(corpus, 32, "none"))
+    sorted_ = padding_stats(corpus, make_batches(corpus, 32, "tokens"))
+    ffd = padding_stats(corpus, pack_batches_token_budget(corpus, 32 * 40))
+    assert ffd["pad_waste"] <= unsorted["pad_waste"] + 1e-9
+    assert ffd["pad_waste"] <= sorted_["pad_waste"] + 0.05
+
+
+@given(st.integers(min_value=1, max_value=400),
+       st.integers(min_value=32, max_value=4096))
+@settings(max_examples=25, deadline=None)
+def test_prop_ffd_partition(n, budget):
+    corpus = make_corpus(n, vocab=64, seed=n)
+    bins = pack_batches_token_budget(corpus, token_budget=budget)
+    assert _flat(bins) == list(range(n))
+    for b in bins:
+        if len(b) > 1:
+            assert max(corpus[i].n_tokens for i in b) * len(b) <= budget
+
+
+# ---------------------------------------------------------------------------
+# ContinuousScheduler lifecycle
+# ---------------------------------------------------------------------------
+
+def _mk_requests(lengths, max_new=8):
+    return [Request(req_id=i, src=np.arange(3, 3 + n, dtype=np.int32),
+                    max_new_tokens=max_new)
+            for i, n in enumerate(lengths)]
+
+
+def test_lifecycle_waiting_running_finished():
+    sched = ContinuousScheduler(2)
+    reqs = _mk_requests([4, 5, 6])
+    sched.submit_many(reqs)
+    assert [r.status for r in reqs] == ["waiting"] * 3
+
+    admitted = sched.admit(now=1.0)
+    assert [r.req_id for r in admitted] == [0, 1]          # FIFO
+    assert {r.slot for r in admitted} == {0, 1}            # distinct slots
+    assert all(r.status == "running" and r.admitted_s == 1.0
+               for r in admitted)
+    assert sched.n_free == 0 and sched.n_waiting == 1
+    assert sched.admit(now=2.0) == []                      # no free slot
+
+    slot = sched.release(reqs[0], now=3.0)
+    assert reqs[0].status == "finished" and reqs[0].finish_s == 3.0
+    assert sched.n_free == 1
+
+    nxt = sched.admit(now=4.0)
+    assert [r.req_id for r in nxt] == [2]
+    assert nxt[0].slot == slot                             # slot reuse
+    sched.release(reqs[1], now=5.0)
+    sched.release(reqs[2], now=5.0)
+    assert sched.all_done
+    assert len(sched.finished) == 3
+
+
+def test_release_requires_running():
+    sched = ContinuousScheduler(1)
+    req = _mk_requests([3])[0]
+    sched.submit(req)
+    with pytest.raises(ValueError):
+        sched.release(req)
+
+
+def test_no_starvation_under_adversarial_length_mix():
+    """Long/short interleave + tight prefill budget: strict FIFO still
+    admits every request within n_requests rounds."""
+    lengths = [40, 1, 40, 1, 40, 1, 40, 1, 40, 1] * 4
+    reqs = _mk_requests(lengths)
+    sched = ContinuousScheduler(3, prefill_token_budget=8)
+    sched.submit_many(reqs)
+    admitted_order = []
+    rounds = 0
+    while not sched.all_done:
+        rounds += 1
+        assert rounds <= 10 * len(reqs), "scheduler livelocked"
+        batch = sched.admit(now=float(rounds))
+        admitted_order.extend(r.req_id for r in batch)
+        # finish one running request per round to keep slots cycling
+        if sched.slot_map:
+            slot = min(sched.slot_map)
+            sched.release(sched.slot_map[slot], now=float(rounds))
+    assert admitted_order == list(range(len(reqs)))        # FIFO, none starved
+
+
+def test_prefill_budget_limits_round_but_first_always_admitted():
+    sched = ContinuousScheduler(4, prefill_token_budget=10)
+    reqs = _mk_requests([30, 2, 2])                        # first exceeds budget
+    sched.submit_many(reqs)
+    first = sched.admit()
+    assert [r.req_id for r in first] == [0]                # admitted anyway
+    second = sched.admit()
+    assert [r.req_id for r in second] == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# continuous queueing model
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.integers(min_value=1, max_value=40), min_size=2,
+                max_size=60),
+       st.integers(min_value=1, max_value=8))
+@settings(max_examples=40, deadline=None)
+def test_prop_simulate_continuous_invariants(lens, n_slots):
+    out = simulate_continuous(lens, n_slots, static_batch=n_slots)
+    assert out["continuous_steps"] >= max(lens)            # critical path
+    assert out["continuous_steps"] >= -(-sum(lens) // n_slots)  # work bound
+    assert 0 < out["continuous_utilization"] <= 1.0 + 1e-9
+    assert 0 < out["static_utilization"] <= 1.0 + 1e-9
+    # slot refill never loses to batch-synchronized execution
+    assert out["speedup_steps"] >= 1.0 - 1e-9
+    if len(lens) % n_slots == 0:
+        # with equal grid widths (no partial final batch) refill also wins
+        # on utilization; a partial static batch is charged only its actual
+        # rows, so its utilization can exceed the always-full-width grid
+        assert (out["continuous_utilization"]
+                >= out["static_utilization"] - 1e-9)
+
+
+def test_simulate_continuous_skewed_gap():
+    """The benchmark regime: skewed decode lengths *interleaved in arrival
+    order* (lengths are unknown at schedule time) → big utilization gap."""
+    lens = [4, 4, 4, 24] * 8
+    out = simulate_continuous(lens, 8, static_batch=8)
+    assert out["speedup_steps"] > 1.5
