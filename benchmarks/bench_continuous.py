@@ -8,10 +8,17 @@ length — at schedule time real decode lengths are unknown), which is the
 regime where a static batch idles most of its rows waiting for the longest
 request.
 
+Both engines run with ``burst_len=1`` (the per-step decode loop) so the
+comparison isolates *scheduling*; the decode-burst dimension is swept by
+``bench_decode_burst.py``.  Warmup passes absorb jit compilation and are
+reported as their own row instead of being folded into wall time.
+
 Rows:
 
 * ``pack_pad_waste_*``     — prefill pad waste: fixed-size token-sorted
   batches vs first-fit-decreasing token-budget bins.
+* ``compile_warmup``       — jit compile + warmup seconds per path
+  (excluded from every measured row below).
 * ``serve_static_sorted``  — measured tokens/s + decode-grid utilization for
   the paper's static path (token-sorted fixed batches via ``generate``).
 * ``serve_continuous``     — measured tokens/s + utilization for the
@@ -20,15 +27,19 @@ Rows:
   model's prediction (``simulate_continuous``).
 * ``token_identity``       — continuous greedy output equals per-request
   ``generate`` output, token for token.
+
+``--smoke`` shrinks the request count and measurement passes for CI.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import numpy as np
 
+from benchmarks.common import measure
 from repro.configs import get_config
 from repro.data import make_corpus, pack_batches_token_budget, padding_stats
 from repro.data.sorting import make_batches
@@ -45,16 +56,16 @@ P_SHORT = 0.75
 MEASURE_PASSES = 3          # paired passes; median ratio damps load noise
 
 
-def _engine_and_requests():
+def _engine_and_requests(n_requests: int):
     cfg = get_config("transformer-base").reduced(
         vocab=64, d_model=96, n_layers=2, n_enc_layers=2, d_ff=192,
         n_heads=4, n_kv_heads=4, head_dim=24)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(model, params, max_len=64)
-    requests = make_corpus(N_REQUESTS, cfg.vocab, seed=9)
+    engine = ServingEngine(model, params, max_len=64, burst_len=1)
+    requests = make_corpus(n_requests, cfg.vocab, seed=9)
     rng = np.random.default_rng(0)
-    budgets = np.where(rng.random(N_REQUESTS) < P_SHORT,
+    budgets = np.where(rng.random(n_requests) < P_SHORT,
                        SHORT_BUDGET, LONG_BUDGET).astype(int)
     return engine, requests, budgets
 
@@ -87,9 +98,11 @@ def _run_continuous(engine, requests, budgets):
     return res, order, wall
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
-    engine, requests, budgets = _engine_and_requests()
+    n_requests = 24 if smoke else N_REQUESTS
+    passes = 1 if smoke else MEASURE_PASSES
+    engine, requests, budgets = _engine_and_requests(n_requests)
 
     # 1 — prefill pad waste: fixed-size sorted batches vs FFD budget bins
     fixed = padding_stats(requests, make_batches(requests, BATCH_SIZE,
@@ -100,14 +113,21 @@ def run() -> list:
     rows.append(("pack_pad_waste_ffd256", 0.0,
                  f"pad_waste={ffd['pad_waste']:.4f}"))
 
-    # 2 — warmup both paths (jit compile), then measure in interleaved
-    # pairs: each pass runs static then continuous back-to-back so shared-
-    # machine load noise hits both; the median paired ratio is the speedup
-    _run_static(engine, requests, budgets)
-    _run_continuous(engine, requests, budgets)
+    # 2 — warmup both paths (jit compile, timed and reported separately),
+    # then measure in interleaved pairs: each pass runs static then
+    # continuous back-to-back so shared-machine load noise hits both; the
+    # median paired ratio is the speedup
+    _, _, warm_static_s = measure(
+        lambda: _run_static(engine, requests, budgets), warmup=1, passes=0)
+    _, _, warm_cont_s = measure(
+        lambda: _run_continuous(engine, requests, budgets), warmup=1,
+        passes=0)
+    rows.append(("compile_warmup", 0.0,
+                 f"static_s={warm_static_s:.2f} "
+                 f"continuous_s={warm_cont_s:.2f} (excluded from rows below)"))
 
     statics, continuous, ratios = [], [], []
-    for _ in range(MEASURE_PASSES):
+    for _ in range(passes):
         s = _run_static(engine, requests, budgets)
         c = _run_continuous(engine, requests, budgets)
         statics.append(s)
@@ -115,11 +135,11 @@ def run() -> list:
         ratios.append((c[0].n_tokens / c[2]) / (s[0] / s[1]))
 
     s_tok, s_wall, s_util = min(statics, key=lambda r: r[1])
-    rows.append(("serve_static_sorted", s_wall * 1e6 / N_REQUESTS,
+    rows.append(("serve_static_sorted", s_wall * 1e6 / n_requests,
                  f"tok_per_s={s_tok / s_wall:.1f} grid_util={s_util:.3f}"))
 
     res, order, c_wall = min(continuous, key=lambda r: r[2])
-    rows.append(("serve_continuous", c_wall * 1e6 / N_REQUESTS,
+    rows.append(("serve_continuous", c_wall * 1e6 / n_requests,
                  f"tok_per_s={res.n_tokens / c_wall:.1f} "
                  f"grid_util={res.utilization:.3f} "
                  f"first_tok_p95_s={res.metrics()['first_token_latency_p95_s']:.3f}"))
@@ -135,7 +155,7 @@ def run() -> list:
 
     # 3 — token identity: serve() output == per-request generate()
     mismatches = 0
-    for i in range(0, N_REQUESTS, 12):
+    for i in range(0, n_requests, 12):
         src, lens = pad_batch([requests[i].src])
         g = engine.generate({"src_tokens": src, "src_lengths": lens},
                             max_new_tokens=int(budgets[i]))
@@ -143,10 +163,14 @@ def run() -> list:
                 order.index(i))):
             mismatches += 1
     rows.append(("token_identity", 0.0,
-                 f"mismatches={mismatches}/{len(range(0, N_REQUESTS, 12))}"))
+                 f"mismatches={mismatches}/{len(range(0, n_requests, 12))}"))
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast configuration for CI")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke):
         print(",".join(str(x) for x in r))

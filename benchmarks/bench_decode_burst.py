@@ -1,0 +1,132 @@
+"""Decode-burst sweep: host-sync overhead vs slot-refill latency.
+
+The per-token serving loop pays one jitted dispatch plus one device→host
+synchronization per generated token; the decode-burst engine fuses up to
+``K`` steps into one on-device ``lax.while_loop`` and returns to the host
+only at burst boundaries.  This benchmark sweeps ``K ∈ {1,2,4,8,16,32}``
+over ``ServingEngine.serve`` (continuous batching, skewed generation
+lengths) and ``generate`` (one static batch) on a deliberately small
+**CPU test config**, where per-step device compute is tiny and framework
+dispatch dominates — the regime the paper's §5.5 and Quinn & Ballesteros
+(arXiv:1804.05038) identify for small per-step work.
+
+The tradeoff the sweep exposes: larger bursts cut ``host_syncs`` linearly
+but delay slot refill to burst edges, so rows that finish mid-burst idle
+(masked to EOS) and ``decode_steps``/utilization degrade.  Throughput
+peaks at a middle ``K``; ``K=1`` reproduces the pre-burst per-step path.
+
+Rows (per K): measured serve tokens/s, speedup vs ``K=1``, host syncs,
+decode steps, grid utilization — plus greedy **token identity** vs the
+``K=1`` output for every swept K, a ``generate`` sweep, and a best-K
+summary.  Compile/warmup is timed separately (``compile_warmup`` row) and
+excluded from every measured number.  ``--smoke`` shrinks the sweep for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.common import measure
+from repro.configs import get_config
+from repro.data import make_corpus
+from repro.data.synthetic import pad_batch
+from repro.models import build_model
+from repro.serving import ServingEngine
+
+KS = (1, 2, 4, 8, 16, 32)
+N_REQUESTS = 48
+N_SLOTS = 8
+SHORT_BUDGET, LONG_BUDGET = 4, 48
+P_SHORT = 0.75
+MEASURE_PASSES = 3
+
+
+def _setup(n_requests: int):
+    # test-scale model: per-step compute is small, so the per-token
+    # dispatch+sync tax is visible (the regime bursts are built for)
+    cfg = get_config("transformer-base").reduced(
+        vocab=32, d_model=48, n_layers=1, n_enc_layers=1, d_ff=96,
+        n_heads=2, n_kv_heads=2, head_dim=24)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, max_len=64)
+    requests = make_corpus(n_requests, cfg.vocab, seed=9, max_words=8)
+    rng = np.random.default_rng(0)
+    budgets = [int(b) for b in np.where(rng.random(n_requests) < P_SHORT,
+                                        SHORT_BUDGET, LONG_BUDGET)]
+    return engine, requests, budgets
+
+
+def run(smoke: bool = False) -> list:
+    rows = []
+    ks = (1, 8) if smoke else KS
+    n_requests = 16 if smoke else N_REQUESTS
+    passes = 1 if smoke else MEASURE_PASSES
+    engine, requests, budgets = _setup(n_requests)
+
+    # ---- serve sweep -----------------------------------------------------
+    warm_total = 0.0
+    results = {}
+    reference = None            # K=1 token streams (pre-burst per-step path)
+    for k in ks:
+        serve = lambda: engine.serve(requests, n_slots=N_SLOTS,
+                                     max_new_tokens=budgets, burst_len=k)
+        res, times, warm_s = measure(serve, warmup=1, passes=passes)
+        warm_total += warm_s
+        wall = min(times)
+        tps = res.n_tokens / wall
+        results[k] = (res, tps)
+        if reference is None:
+            reference = [res.tokens_for(i) for i in range(n_requests)]
+        mismatches = sum(
+            not np.array_equal(res.tokens_for(i), reference[i])
+            for i in range(n_requests))
+        base_tps = results[ks[0]][1]
+        rows.append((f"serve_burst_k{k}", wall * 1e6 / n_requests,
+                     f"tok_per_s={tps:.1f} speedup={tps / base_tps:.2f}x "
+                     f"host_syncs={res.host_syncs} "
+                     f"decode_steps={res.decode_steps} "
+                     f"grid_util={res.utilization:.3f} "
+                     f"identical_to_k1={mismatches == 0}"))
+
+    best_k = max(results, key=lambda k: results[k][1])
+    base_tps = results[ks[0]][1]
+    rows.append(("serve_burst_best", 0.0,
+                 f"best_k={best_k} "
+                 f"speedup={results[best_k][1] / base_tps:.2f}x "
+                 f"(tok_per_s {base_tps:.1f} -> {results[best_k][1]:.1f})"))
+
+    # ---- generate sweep (one static batch, uniform budget) ---------------
+    src, lens = pad_batch([s.src for s in requests[:N_SLOTS]])
+    batch = {"src_tokens": src, "src_lengths": lens}
+    gen_ref = None
+    for k in ks:
+        gen = lambda: engine.generate(batch, max_new_tokens=LONG_BUDGET,
+                                      burst_len=k)
+        res, times, warm_s = measure(gen, warmup=1, passes=passes)
+        warm_total += warm_s
+        tps = res.n_tokens / min(times) if res.n_tokens else 0.0
+        if gen_ref is None:
+            gen_ref = res.tokens
+        mismatches = sum(not np.array_equal(a, b)
+                         for a, b in zip(res.tokens, gen_ref))
+        rows.append((f"generate_burst_k{k}", min(times) * 1e6,
+                     f"tok_per_s={tps:.1f} host_syncs={res.host_syncs} "
+                     f"steps_per_s={res.decode_steps_per_s:.0f} "
+                     f"identical_to_k1={mismatches == 0}"))
+
+    rows.append(("compile_warmup", 0.0,
+                 f"total_s={warm_total:.2f} (excluded from rows above)"))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast configuration for CI")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke):
+        print(",".join(str(x) for x in r))

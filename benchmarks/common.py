@@ -24,6 +24,29 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
     return float(np.median(times))
 
 
+def measure(fn: Callable, *, warmup: int = 1, passes: int = 3):
+    """Time a serving-level callable, keeping compile out of the measurement.
+
+    The first ``warmup`` calls absorb jit compilation (and are timed so the
+    caller can *report* compile cost separately instead of folding it into
+    throughput); the next ``passes`` calls are measured.  Returns
+    ``(last_result, measured_times_list, warmup_s)`` — callers typically
+    take ``min`` or ``median`` of the times.  ``fn`` must return host-side
+    results (e.g. ``ServeResult``/``GenerationResult``), so each call is
+    already synchronized.
+    """
+    t0 = time.perf_counter()
+    for _ in range(warmup):
+        fn()
+    warmup_s = time.perf_counter() - t0
+    times, out = [], None
+    for _ in range(passes):
+        t0 = time.perf_counter()
+        out = fn()
+        times.append(time.perf_counter() - t0)
+    return out, times, warmup_s
+
+
 @functools.lru_cache(maxsize=1)
 def trained_tiny_nmt(steps: int = 900):
     """Train the paper's model (reduced) on the synthetic corpus once."""
@@ -54,14 +77,28 @@ def trained_tiny_nmt(steps: int = 900):
 
 
 def translate_all(model, params, qctx, requests, *, batch_size=16,
-                  max_new=24) -> Tuple[List[list], float]:
-    """Translate requests with the serving engine; returns (hyps, seconds)."""
+                  max_new=24, warmup: bool = True
+                  ) -> Tuple[List[list], float]:
+    """Translate requests with the serving engine; returns (hyps, seconds).
+
+    ``warmup`` runs one short generate per distinct batch shape first, so
+    jit compilation is excluded from the reported seconds (each engine has
+    its own jit cache — without this, the first call per shape folds
+    compile into the throughput numbers).
+    """
     from repro.core.ptq import FP_CONTEXT
     from repro.serving import ServingEngine, TokenSortedScheduler
     engine = ServingEngine(model, params, quant=qctx or FP_CONTEXT,
                            max_len=96)
     sched = TokenSortedScheduler(batch_size=batch_size)
     items = sched.plan(requests)
+    if warmup:
+        seen = set()
+        for item in items:
+            shape = item.batch["src_tokens"].shape
+            if shape not in seen:
+                seen.add(shape)
+                engine.generate(item.batch, max_new_tokens=2)
     hyps = {}
     t0 = time.perf_counter()
     for item in items:

@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
 * bench_batching           → §5.4 + Figures 6/8 (sorting, parallel streams)
 * bench_op_distribution    → Figure 7 (op-class split FP32 vs INT8)
 * bench_continuous         → beyond §5.6 (static vs continuous batching)
+* bench_decode_burst       → beyond §5.5 (on-device decode bursts vs
+                             per-token host dispatch)
 """
 
 import sys
@@ -20,6 +22,7 @@ def main() -> None:
         bench_batching,
         bench_calibration_modes,
         bench_continuous,
+        bench_decode_burst,
         bench_int8_matmul,
         bench_kv_gather,
         bench_op_distribution,
@@ -31,6 +34,7 @@ def main() -> None:
         ("fig6/8", bench_batching),
         ("fig7", bench_op_distribution),
         ("continuous", bench_continuous),
+        ("burst", bench_decode_burst),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -88,6 +88,20 @@ def main() -> None:
           f"{sim['continuous_utilization']:.2f} "
           f"({sim['speedup_steps']:.2f}x fewer decode steps)")
 
+    print("\n=== decode bursts (host syncs vs slot-refill latency) ===")
+    for k in (1, 8):
+        engine.serve([requests[i] for i in order], n_slots=8,  # warm jit
+                     max_new_tokens=[int(budgets[i]) for i in order],
+                     burst_len=k)
+        t0 = time.perf_counter()
+        res = engine.serve([requests[i] for i in order], n_slots=8,
+                           max_new_tokens=[int(budgets[i]) for i in order],
+                           burst_len=k)
+        dt = time.perf_counter() - t0
+        print(f"  burst_len={k}: {res.n_tokens / dt:.0f} tok/s, "
+              f"{res.host_syncs} host syncs for {res.decode_steps} decode "
+              f"steps, slot utilization {res.utilization:.2f}")
+
 
 if __name__ == "__main__":
     main()

@@ -4,6 +4,7 @@ from repro.data.metrics import corpus_bleu  # noqa: F401
 from repro.data.pipeline import LMBatches, Prefetcher, TranslationBatches  # noqa: F401
 from repro.data.sorting import (  # noqa: F401
     make_batches,
+    next_pow2,
     order_indices,
     pack_batches_token_budget,
     padding_stats,

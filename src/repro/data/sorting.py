@@ -21,6 +21,17 @@ import numpy as np
 from repro.data.synthetic import Sentence
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two ≥ ``n`` (``n ≤ 1`` → 1).
+
+    Shared bucketing helper: the serving engine pads prefill side-batches
+    to power-of-two widths and buckets decode-burst lengths to power-of-two
+    compiled widths, so the number of distinct XLA programs stays
+    O(log n) regardless of the request mix.
+    """
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
 def order_indices(sentences: Sequence[Sentence], mode: str) -> np.ndarray:
     """mode: 'none' | 'words' | 'tokens' (descending, stable)."""
     n = len(sentences)

@@ -51,6 +51,10 @@ def main() -> None:
     ap.add_argument("--token-budget", type=int, default=256,
                     help="FFD bin budget (padded tokens) for admission "
                          "order in --mode continuous")
+    ap.add_argument("--burst-len", type=int, default=8,
+                    help="decode steps fused on device per host round trip "
+                         "(1 = per-step loop; larger bursts cut dispatch "
+                         "overhead but delay slot refill to burst edges)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -82,7 +86,8 @@ def main() -> None:
     if args.mode == "continuous":
         if args.beam > 1:
             raise SystemExit("--mode continuous is greedy-only (beam=1)")
-        engine = ServingEngine(model, params, quant=qctx, max_len=96)
+        engine = ServingEngine(model, params, quant=qctx, max_len=96,
+                               burst_len=args.burst_len)
         bins = pack_batches_token_budget(requests, args.token_budget)
         order = [i for b in bins for i in b]     # FFD admission order
         t0 = time.perf_counter()
@@ -95,6 +100,9 @@ def main() -> None:
               f"({res.tokens_per_s:.1f} tok/s, "
               f"slot utilization {res.utilization:.2f}, "
               f"{res.prefill_rounds} prefill rounds)")
+        print(f"burst_len={res.burst_len}: {res.host_syncs} host syncs for "
+              f"{res.decode_steps} decode steps "
+              f"({res.decode_steps_per_s:.0f} steps/s)")
         print(f"latency: first-token mean "
               f"{met['first_token_latency_mean_s']:.3f}s "
               f"p95 {met['first_token_latency_p95_s']:.3f}s; total mean "

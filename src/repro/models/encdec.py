@@ -260,7 +260,11 @@ class EncDecLM:
         B = tokens.shape[0]
         x = embed(params["embed"], tokens[:, None], dt) * math.sqrt(cfg.d_model)
         pe = sinusoidal_positions(cache.capacity, cfg.d_model, dt)
-        x = x + pe[cache.lengths][:, None, :]
+        # clamp explicitly: inside a decode burst (lax.while_loop in the
+        # serving engine) finished rows keep stepping past their cursor;
+        # their reads must stay in bounds (outputs are EOS-masked anyway)
+        pos = jnp.minimum(cache.lengths, cache.capacity - 1)
+        x = x + pe[pos][:, None, :]
 
         def block_with_cache(x, bparams, kl, vl, ksl, vsl, ck, cv, site):
             view = kvc.LayerCacheView(k=kl, v=vl, k_scale=ksl, v_scale=vsl,

@@ -143,20 +143,27 @@ def append_token(
     v_new: jax.Array,
     lengths: jax.Array,                  # (B,) per-sequence cursors
 ):
-    """Scatter one new token per sequence at its own cursor (ragged decode)."""
+    """Scatter one new token per sequence at its own cursor (ragged decode).
+
+    ``mode="drop"`` is load-bearing for decode bursts: rows that finished
+    mid-burst keep stepping with cursors at/past capacity until the burst
+    edge, and their writes must vanish rather than clamp onto the last
+    valid position (which could corrupt a still-live neighbour of a
+    shared-capacity cache on backends where clamping is the default).
+    """
     b_idx = jnp.arange(k_cache.shape[0])
     if ks_cache is not None:
         kq, ks = quantize_kv(k_new)
         vq, vs = quantize_kv(v_new)
-        k_cache = k_cache.at[b_idx, lengths].set(kq[:, 0])
-        v_cache = v_cache.at[b_idx, lengths].set(vq[:, 0])
-        ks_cache = ks_cache.at[b_idx, lengths].set(ks[:, 0])
-        vs_cache = vs_cache.at[b_idx, lengths].set(vs[:, 0])
+        k_cache = k_cache.at[b_idx, lengths].set(kq[:, 0], mode="drop")
+        v_cache = v_cache.at[b_idx, lengths].set(vq[:, 0], mode="drop")
+        ks_cache = ks_cache.at[b_idx, lengths].set(ks[:, 0], mode="drop")
+        vs_cache = vs_cache.at[b_idx, lengths].set(vs[:, 0], mode="drop")
     else:
         k_cache = k_cache.at[b_idx, lengths].set(
-            k_new[:, 0].astype(k_cache.dtype))
+            k_new[:, 0].astype(k_cache.dtype), mode="drop")
         v_cache = v_cache.at[b_idx, lengths].set(
-            v_new[:, 0].astype(v_cache.dtype))
+            v_new[:, 0].astype(v_cache.dtype), mode="drop")
     return k_cache, v_cache, ks_cache, vs_cache
 
 

@@ -15,21 +15,37 @@ power-of-two widths so the whole serve compiles O(log slots) programs.
 Greedy decode through ``serve`` is token-identical to per-request
 :meth:`generate` — every per-row computation is batch-independent.
 
-The decode loop runs in Python calling jitted step functions (the standard
-serving pattern — state stays on device; only the finished-check syncs).
+**Decode bursts.**  The per-token serving loop used to dispatch one jitted
+step per token and synchronize with the host every step (``np.asarray`` of
+the argmax) — framework dispatch, not math, dominated small per-step work
+(the paper §5.5; Quinn & Ballesteros arXiv:1804.05038 for CPU NMT).  All
+three decode paths now run **bursts of up to ``burst_len`` steps entirely
+on device** inside one jitted ``lax.while_loop``: argmax, EOS masking,
+per-row budget countdown, and a ``(rows, K)`` token ring buffer live in the
+loop carry, and the host is touched only at burst boundaries, where the
+scheduler drains tokens, releases finished slots and refills them.  A burst
+exits early once every row is finished, so ``burst_len=1`` exactly
+reproduces the per-step loop (token-identical for every ``burst_len``);
+rows that finish mid-burst keep computing but are masked to EOS — the
+utilization cost ``benchmarks/bench_decode_burst.py`` quantifies against
+the saved host round trips.  Burst lengths are bucketed to powers of two
+(``data.sorting.next_pow2``): the compiled ring-buffer width is the bucket,
+the *actual* step cap is a device scalar, so sweeping ``burst_len`` costs
+O(log K) compiles.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ptq import FP_CONTEXT, QuantContext
+from repro.data.sorting import next_pow2
 from repro.data.synthetic import EOS, pad_batch
 from repro.models import kv_cache as kvc
 from repro.serving.scheduler import ContinuousScheduler, Request
@@ -41,6 +57,7 @@ class GenerationResult:
     steps: int
     prefill_s: float
     decode_s: float
+    host_syncs: int = 0               # device→host round trips (prefill + bursts)
 
     @property
     def total_s(self) -> float:
@@ -49,6 +66,16 @@ class GenerationResult:
     @property
     def n_tokens(self) -> int:
         return int(sum(len(t) for t in self.tokens))
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.n_tokens / max(self.total_s, 1e-9)
+
+    @property
+    def decode_steps_per_s(self) -> float:
+        # steps counts grid columns; the first column is emitted by prefill,
+        # outside the decode_s window, so it is discounted here
+        return max(self.steps - 1, 0) / max(self.decode_s, 1e-9)
 
 
 @dataclasses.dataclass
@@ -61,6 +88,8 @@ class ServeResult:
     busy_slot_steps: int              # Σ over steps of occupied slots
     prefill_rounds: int
     wall_s: float
+    host_syncs: int = 0               # device→host round trips (prefill + bursts)
+    burst_len: int = 1
 
     @property
     def n_tokens(self) -> int:
@@ -74,6 +103,10 @@ class ServeResult:
     @property
     def tokens_per_s(self) -> float:
         return self.n_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def decode_steps_per_s(self) -> float:
+        return self.decode_steps / max(self.wall_s, 1e-9)
 
     def tokens_for(self, req_id: int) -> np.ndarray:
         for r in self.requests:
@@ -93,6 +126,9 @@ class ServeResult:
             "tokens_per_s": self.tokens_per_s,
             "utilization": self.utilization,
             "decode_steps": float(self.decode_steps),
+            "decode_steps_per_s": self.decode_steps_per_s,
+            "host_syncs": float(self.host_syncs),
+            "burst_len": float(self.burst_len),
             "prefill_rounds": float(self.prefill_rounds),
             "first_token_latency_mean_s": float(np.mean(first)) if first else 0.0,
             "first_token_latency_p95_s":
@@ -103,39 +139,41 @@ class ServeResult:
         }
 
 
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
-
-
 class ServingEngine:
     def __init__(self, model, params, *, quant: QuantContext = FP_CONTEXT,
                  max_len: int = 256, eos_id: int = EOS,
-                 donate_state: bool = True):
+                 donate_state: bool = True, burst_len: int = 8):
         self.model = model
         self.params = params
         self.quant = quant
         self.max_len = max_len
         self.eos_id = eos_id
+        if burst_len < 1:
+            raise ValueError(f"burst_len must be ≥ 1, got {burst_len}")
+        self.burst_len = burst_len
+        self._donate_state = donate_state
 
         self._prefill = jax.jit(
             lambda p, b, s: model.prefill(p, b, s, quant=quant))
-        donate = (2,) if donate_state else ()
-        self._decode = jax.jit(
-            lambda p, t, s: model.decode_step(p, t, s, quant=quant),
-            donate_argnums=donate)
-        self._gather = jax.jit(self._beam_gather_state)
         # continuous-batching row splice: scatter a prefilled side-batch into
         # the long-lived decode state.  Donates the old state/token buffers —
         # the caller always rebinds to the returned ones.
         self._insert = jax.jit(self._insert_rows, donate_argnums=(0, 2))
+        # burst programs, keyed by compiled ring-buffer width (greedy) or
+        # (width, beam) — power-of-two bucketed, so O(log K) entries.
+        self._burst_jits: Dict[int, Callable] = {}
+        self._beam_burst_jits: Dict[Tuple[int, int], Callable] = {}
 
     # ------------------------------------------------------------------ util
     def _init_state(self, batch_size: int):
         return self.model.init_decode_state(
             batch_size, self.max_len, quantized=self.quant.quantize_kv)
+
+    def _resolve_burst(self, burst_len: Optional[int]) -> int:
+        k = self.burst_len if burst_len is None else int(burst_len)
+        if k < 1:
+            raise ValueError(f"burst_len must be ≥ 1, got {k}")
+        return k
 
     @staticmethod
     def _beam_gather_state(state: Dict[str, Any], idx: jax.Array):
@@ -149,6 +187,9 @@ class ServingEngine:
                 out[k] = kvc.gather_beams(v, idx)
             elif v is None:
                 out[k] = None
+            elif k in ("cross_k", "cross_v"):
+                # layer-major (L, B, S, H, dh): the batch axis is 1
+                out[k] = jnp.take(v, idx, axis=1)
             else:
                 out[k] = jax.tree_util.tree_map(gather, v)
         return out
@@ -173,9 +214,125 @@ class ServingEngine:
         tokens = tokens.at[slots].set(sub_tokens)
         return out, tokens
 
+    # ---------------------------------------------------------------- bursts
+    def _greedy_burst_fn(self, width: int) -> Callable:
+        fn = self._burst_jits.get(width)
+        if fn is None:
+            fn = self._make_greedy_burst(width)
+            self._burst_jits[width] = fn
+        return fn
+
+    def _make_greedy_burst(self, width: int) -> Callable:
+        """Jitted ``while_loop`` running up to ``steps_cap ≤ width`` greedy
+        decode steps on device.
+
+        Carry: step counter, current tokens, per-row ``remaining`` budgets,
+        decode state (KV cache updated in place each step), and a
+        ``(rows, width)`` token ring buffer.  A row is *active* while
+        ``remaining > 0``; emitting EOS or exhausting the budget zeroes it.
+        Inactive rows keep stepping (the grid is one fused program) but
+        their outputs are masked to EOS and their cache writes land past
+        their cursor (dropped by ``kv_cache.append_token`` scatter
+        semantics).  The loop exits early once no row is active, so
+        ``steps_cap=1`` reproduces the per-step path exactly.
+        """
+        model, quant, eos = self.model, self.quant, self.eos_id
+
+        def burst(params, tokens, remaining, steps_cap, state):
+            buf0 = jnp.full((tokens.shape[0], width), eos, jnp.int32)
+
+            def cond(carry):
+                step, _, remaining, _, _ = carry
+                return (step < steps_cap) & jnp.any(remaining > 0)
+
+            def body(carry):
+                step, tokens, remaining, state, buf = carry
+                logits, state = model.decode_step(params, tokens, state,
+                                                  quant=quant)
+                active = remaining > 0
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                nxt = jnp.where(active, nxt, eos)
+                buf = buf.at[:, step].set(nxt)
+                remaining = jnp.where(active & (nxt != eos), remaining - 1,
+                                      jnp.zeros_like(remaining))
+                return (step + 1, nxt, remaining, state, buf)
+
+            carry = (jnp.int32(0), tokens,
+                     jnp.asarray(remaining, jnp.int32), state, buf0)
+            step, tokens, remaining, state, buf = jax.lax.while_loop(
+                cond, body, carry)
+            return tokens, remaining, state, buf, step
+
+        donate = (1, 4) if self._donate_state else ()
+        return jax.jit(burst, donate_argnums=donate)
+
+    def _beam_burst_fn(self, width: int, beam: int) -> Callable:
+        fn = self._beam_burst_jits.get((width, beam))
+        if fn is None:
+            fn = self._make_beam_burst(width, beam)
+            self._beam_burst_jits[(width, beam)] = fn
+        return fn
+
+    def _make_beam_burst(self, width: int, beam: int) -> Callable:
+        """Beam-search burst: top-k, score update, **cache reorder** (the
+        paper's §5.3 GatherNd) all inside the scanned body.
+
+        Besides the token ring buffer it carries ``comp`` — the composition
+        of this burst's beam-reorder permutations — so the host can apply
+        one gather to the token history per *burst* instead of one per
+        step.  Ring-buffer rows are reordered alongside the state, so at
+        burst exit the buffer is already in final beam order.
+        """
+        model, quant, eos = self.model, self.quant, self.eos_id
+        gather_state = self._beam_gather_state
+
+        def burst(params, tokens, scores, finished, steps_cap, state):
+            BB = tokens.shape[0]
+            B = BB // beam
+            buf0 = jnp.full((BB, width), eos, jnp.int32)
+            comp0 = jnp.arange(BB, dtype=jnp.int32)
+
+            def cond(carry):
+                step, _, _, finished, _, _, _ = carry
+                return (step < steps_cap) & ~jnp.all(finished)
+
+            def body(carry):
+                step, tokens, scores, finished, comp, state, buf = carry
+                logits, state = model.decode_step(params, tokens, state,
+                                                  quant=quant)
+                lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+                V = lp.shape[-1]
+                # finished beams only extend with EOS at no cost
+                eos_only = jnp.full_like(lp, -1e30).at[:, eos].set(0.0)
+                lp = jnp.where(finished[:, None], eos_only, lp)
+                cand = (scores[:, None] + lp).reshape(B, beam * V)
+                scores_new, flat_idx = jax.lax.top_k(cand, beam)
+                src_beam = flat_idx // V
+                tokens = (flat_idx % V).reshape(BB).astype(jnp.int32)
+                gidx = (src_beam + jnp.arange(B)[:, None] * beam
+                        ).reshape(BB)
+                state = gather_state(state, gidx)
+                scores = scores_new.reshape(BB)
+                finished = jnp.take(finished, gidx, axis=0) | (tokens == eos)
+                comp = jnp.take(comp, gidx, axis=0)
+                buf = jnp.take(buf, gidx, axis=0).at[:, step].set(tokens)
+                return (step + 1, tokens, scores, finished, comp, state, buf)
+
+            carry = (jnp.int32(0), tokens, scores, finished, comp0, state,
+                     buf0)
+            (step, tokens, scores, finished, comp, state, buf) = \
+                jax.lax.while_loop(cond, body, carry)
+            return tokens, scores, finished, comp, state, buf, step
+
+        donate = (1, 5) if self._donate_state else ()
+        return jax.jit(burst, donate_argnums=donate)
+
     # ---------------------------------------------------------------- greedy
     def generate(self, batch: Dict[str, np.ndarray], *,
-                 max_new_tokens: int = 64) -> GenerationResult:
+                 max_new_tokens: int = 64,
+                 burst_len: Optional[int] = None) -> GenerationResult:
+        K = self._resolve_burst(burst_len)
+        burst = self._greedy_burst_fn(next_pow2(K))
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         B = next(iter(batch.values())).shape[0]
 
@@ -185,23 +342,27 @@ class ServingEngine:
         jax.block_until_ready(logits)
         t1 = time.perf_counter()
 
-        tokens = jnp.argmax(logits, axis=-1)
-        out = [tokens]
-        finished = tokens == self.eos_id
+        tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        first = np.asarray(tokens)
+        host_syncs = 1
+        cols = [first]
+        remaining_np = np.where(first == self.eos_id, 0,
+                                max(max_new_tokens - 1, 0)).astype(np.int32)
+        remaining = jnp.asarray(remaining_np)
         steps = 1
-        for _ in range(max_new_tokens - 1):
-            logits, state = self._decode(self.params, tokens, state)
-            tokens = jnp.argmax(logits, axis=-1)
-            tokens = jnp.where(finished, self.eos_id, tokens)
-            out.append(tokens)
-            finished = finished | (tokens == self.eos_id)
-            steps += 1
-            if bool(jnp.all(finished)):
-                break
-        jax.block_until_ready(out[-1])
+        cap = jnp.asarray(K, jnp.int32)
+        while remaining_np.any():
+            tokens, remaining, state, buf, s = burst(
+                self.params, tokens, remaining, cap, state)
+            buf_host = np.asarray(buf)             # one host sync per burst
+            s = int(s)
+            remaining_np = np.asarray(remaining)
+            host_syncs += 1
+            cols.extend(buf_host[:, i] for i in range(s))
+            steps += s
         t2 = time.perf_counter()
 
-        grid = np.stack([np.asarray(t) for t in out], axis=1)   # (B, T)
+        grid = np.stack(cols, axis=1)                           # (B, T)
         seqs = []
         for b in range(B):
             row = grid[b]
@@ -209,7 +370,8 @@ class ServingEngine:
                 else len(row)
             seqs.append(row[:stop])
         return GenerationResult(tokens=seqs, steps=steps,
-                                prefill_s=t1 - t0, decode_s=t2 - t1)
+                                prefill_s=t1 - t0, decode_s=t2 - t1,
+                                host_syncs=host_syncs)
 
     # ------------------------------------------------------------ continuous
     def _as_requests(
@@ -241,31 +403,39 @@ class ServingEngine:
               max_new_tokens: Union[int, Sequence[int]] = 64,
               prefill_token_budget: Optional[int] = None,
               admit_min_free: int = 1,
-              pad_to_multiple: int = 8) -> ServeResult:
+              pad_to_multiple: int = 8,
+              burst_len: Optional[int] = None) -> ServeResult:
         """Continuous-batching greedy decode over a request stream.
 
         ``requests`` may be ``Sentence``s, raw token arrays, or ``Request``
         objects (the latter carry their own ``max_new_tokens``); submission
         order is arrival order.  All ``n_slots`` rows share one jitted
-        decode step; finished rows are released mid-decode
-        (``kv_cache.free_slots``) and refilled from the waiting queue
-        (``kv_cache.insert_at_slots``), so the decode grid stays saturated
-        even when generation lengths are wildly skewed.  Greedy decode is
-        token-identical to per-request :meth:`generate`.
+        decode burst of up to ``burst_len`` steps (engine default if None);
+        the host is touched only at burst boundaries, where finished rows
+        are released (``kv_cache.free_slots``) and refilled from the
+        waiting queue (``kv_cache.insert_at_slots``), so the decode grid
+        stays saturated even when generation lengths are wildly skewed.
+        Greedy decode is token-identical to per-request :meth:`generate`
+        for every ``burst_len``; ``burst_len=1`` reproduces the per-step
+        loop (slot refill and latency observation every token), larger
+        bursts amortize host round trips at the cost of finished rows
+        idling (masked to EOS) until the next burst edge.
 
         ``admit_min_free`` is admission hysteresis: wait until that many
         slots are free before paying for a prefill round (larger values
         amortize prefill dispatches at a small utilization/latency cost;
         1 = refill immediately).  The last stragglers are always admitted.
         """
+        K = self._resolve_burst(burst_len)
         reqs = self._as_requests(requests, max_new_tokens)
         if not reqs:
             return ServeResult(requests=[], n_slots=n_slots, decode_steps=0,
                                busy_slot_steps=0, prefill_rounds=0,
-                               wall_s=0.0)
+                               wall_s=0.0, host_syncs=0, burst_len=K)
         if max(r.max_new_tokens for r in reqs) > self.max_len:
             raise ValueError("a request's max_new_tokens exceeds the "
                              f"engine KV capacity {self.max_len}")
+        burst = self._greedy_burst_fn(next_pow2(K))
         m = pad_to_multiple
         enc_len = max(r.n_src_tokens for r in reqs)
         enc_len = ((enc_len + m - 1) // m) * m
@@ -284,11 +454,13 @@ class ServingEngine:
         decode_steps = 0
         busy_slot_steps = 0
         prefill_rounds = 0
+        host_syncs = 0
+        cap = jnp.asarray(K, jnp.int32)
 
         def prefill_into_slots(admitted, state, tokens):
             """Prefill newly admitted requests and splice them in."""
             g = len(admitted)
-            width = _next_pow2(g)
+            width = next_pow2(g)
             src_pad, lens = pad_batch([r.src for r in admitted],
                                       length=enc_len)
             if width > g:
@@ -316,40 +488,58 @@ class ServingEngine:
                 r.first_token_s = t
                 tok = int(tok)
                 if r.max_new_tokens <= 0 or tok == self.eos_id:
-                    sched.release(r, t)    # zero budget / empty translation
+                    sched.release(r, t, step=decode_steps)
+                    # zero budget / empty translation
                 else:
                     r.tokens.append(tok)
                     if r.max_new_tokens <= 1:
-                        sched.release(r, t)
+                        sched.release(r, t, step=decode_steps)
             return state, tokens
 
         while not sched.all_done:
             admitted = []
             if sched.n_free >= min(max(admit_min_free, 1), sched.n_waiting,
                                    n_slots) and sched.n_waiting:
-                admitted = sched.admit(now())
+                admitted = sched.admit(now(), step=decode_steps)
             if admitted:
                 prefill_rounds += 1
+                host_syncs += 1           # first-token drain syncs the host
                 state, tokens = prefill_into_slots(admitted, state, tokens)
             if not sched.slot_map:
                 continue        # every admitted request finished on token 1
 
-            logits, state = self._decode(self.params, tokens, state)
-            tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            toks = np.asarray(tokens)              # host sync per step
-            decode_steps += 1
-            busy_slot_steps += len(sched.slot_map)
+            # per-row budgets: every occupied slot has ≥1 token left to emit
+            remaining = np.zeros((n_slots,), np.int32)
+            for slot, req in sched.slot_map.items():
+                remaining[slot] = req.max_new_tokens - len(req.tokens)
+            tokens, _, state, buf, steps_dev = burst(
+                self.params, tokens, jnp.asarray(remaining), cap, state)
+            buf_host = np.asarray(buf)         # ONE host sync per burst
+            steps = int(steps_dev)
+            host_syncs += 1
+            step_base = decode_steps
+            decode_steps += steps
 
+            # drain the ring buffer: release at EOS / budget exhaustion;
+            # latencies are observed at the burst edge (burst granularity)
             t = now()
             freed = []
             for slot, req in list(sched.slot_map.items()):
-                tok = int(toks[slot])
-                if tok == self.eos_id:
-                    freed.append(sched.release(req, t))
-                else:
+                used = steps
+                for s in range(steps):
+                    tok = int(buf_host[slot, s])
+                    if tok == self.eos_id:
+                        used = s + 1
+                        freed.append(sched.release(req, t,
+                                                   step=step_base + s + 1))
+                        break
                     req.tokens.append(tok)
                     if len(req.tokens) >= req.max_new_tokens:
-                        freed.append(sched.release(req, t))
+                        used = s + 1
+                        freed.append(sched.release(req, t,
+                                                   step=step_base + s + 1))
+                        break
+                busy_slot_steps += used
             if freed:
                 state = dict(state)
                 state["cache"] = kvc.free_slots(
@@ -358,13 +548,21 @@ class ServingEngine:
         return ServeResult(requests=reqs, n_slots=n_slots,
                            decode_steps=decode_steps,
                            busy_slot_steps=busy_slot_steps,
-                           prefill_rounds=prefill_rounds, wall_s=now())
+                           prefill_rounds=prefill_rounds, wall_s=now(),
+                           host_syncs=host_syncs, burst_len=K)
 
     # ------------------------------------------------------------------ beam
     def generate_beam(self, batch: Dict[str, np.ndarray], *, beam: int = 4,
-                      max_new_tokens: int = 64, alpha: float = 0.6
-                      ) -> GenerationResult:
-        """Beam search with per-step cache reordering (paper's GatherNd)."""
+                      max_new_tokens: int = 64, alpha: float = 0.6,
+                      burst_len: Optional[int] = None) -> GenerationResult:
+        """Beam search with per-step cache reordering (paper's GatherNd).
+
+        The whole per-step body — log-softmax, top-k, score update, cache
+        gather — runs inside the jitted burst; the host reorders the token
+        history once per burst via the composed beam permutation.
+        """
+        K = self._resolve_burst(burst_len)
+        bfn = self._beam_burst_fn(next_pow2(K), beam)
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         B = next(iter(batch.values())).shape[0]
 
@@ -386,35 +584,28 @@ class ServingEngine:
         first = logprobs.reshape(B, beam, V)[:, 0]              # (B, V)
         scores, tok0 = jax.lax.top_k(first, beam)               # (B, beam)
         scores = scores.reshape(BB)
-        tokens = tok0.reshape(BB)
+        tokens = tok0.reshape(BB).astype(jnp.int32)
         seq = [np.asarray(tokens)]
-        reorders = 0
+        host_syncs = 1
         finished = tokens == self.eos_id
+        all_done = bool(jnp.all(finished))
 
-        for _ in range(max_new_tokens - 1):
-            logits, state = self._decode(self.params, tokens, state)
-            lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-            # finished beams only extend with EOS at no cost
-            eos_only = jnp.full_like(lp, -1e30).at[:, self.eos_id].set(0.0)
-            lp = jnp.where(finished[:, None], eos_only, lp)
-            cand = scores[:, None] + lp                          # (BB, V)
-            cand = cand.reshape(B, beam * V)
-            scores_new, flat_idx = jax.lax.top_k(cand, beam)     # (B, beam)
-            src_beam = flat_idx // V                             # (B, beam)
-            tokens = (flat_idx % V).reshape(BB)
-            gather_idx = (src_beam + jnp.arange(B)[:, None] * beam
-                          ).reshape(BB)
-            # ---- the paper's §5.3 hot op: cache reorder ----
-            state = self._gather(state, gather_idx)
-            reorders += 1
-            scores = scores_new.reshape(BB)
-            finished = jnp.take(finished, gather_idx, axis=0) | \
-                (tokens == self.eos_id)
-            seq = [s[np.asarray(gather_idx)] for s in seq]
-            seq.append(np.asarray(tokens))
-            if bool(jnp.all(finished)):
-                break
-        jax.block_until_ready(tokens)
+        steps_left = max_new_tokens - 1
+        while steps_left > 0 and not all_done:
+            cap = jnp.asarray(min(K, steps_left), jnp.int32)
+            tokens, scores, finished, comp, state, buf, s = bfn(
+                self.params, tokens, scores, finished, cap, state)
+            s = int(s)
+            comp_host = np.asarray(comp)
+            buf_host = np.asarray(buf)
+            all_done = bool(np.asarray(finished).all())
+            host_syncs += 1
+            # ---- the paper's §5.3 hot op happened on device; replay the
+            # composed reorder over the host-side history once per burst
+            seq = [c[comp_host] for c in seq]
+            seq.extend(buf_host[:, i] for i in range(s))
+            steps_left -= s
+        jax.block_until_ready(scores)
         t2 = time.perf_counter()
 
         # best beam per request by length-penalized score
@@ -432,4 +623,5 @@ class ServingEngine:
             stop = lengths[b * beam + best[b]]
             seqs.append(row[:stop])
         return GenerationResult(tokens=seqs, steps=len(seq),
-                                prefill_s=t1 - t0, decode_s=t2 - t1)
+                                prefill_s=t1 - t0, decode_s=t2 - t1,
+                                host_syncs=host_syncs)

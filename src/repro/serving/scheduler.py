@@ -92,6 +92,11 @@ class Request:
     first_token_s: Optional[float] = None
     finish_s: Optional[float] = None
     tokens: List[int] = dataclasses.field(default_factory=list)
+    # decode-step attribution: with burst decode, wall-clock latencies are
+    # observed at burst *edges*, so the step counters carry the exact
+    # position — admission and release in global decode-step time.
+    admitted_step: Optional[int] = None
+    finish_step: Optional[int] = None
 
     @property
     def n_src_tokens(self) -> int:
@@ -142,14 +147,22 @@ class ContinuousScheduler:
         req.first_token_s = None
         req.finish_s = None
         req.tokens = []
+        req.admitted_step = None
+        req.finish_step = None
         self._waiting.append(req)
 
     def submit_many(self, reqs: Sequence[Request]) -> None:
         for r in reqs:
             self.submit(r)
 
-    def admit(self, now: float = 0.0) -> List[Request]:
-        """Move waiting requests into free slots (one prefill round)."""
+    def admit(self, now: float = 0.0, *,
+              step: Optional[int] = None) -> List[Request]:
+        """Move waiting requests into free slots (one prefill round).
+
+        With burst decode, admission happens only at burst edges; ``step``
+        records the global decode-step count at that edge so queueing can
+        be attributed exactly even though ``now`` is burst-granular.
+        """
         admitted: List[Request] = []
         budget = self.prefill_token_budget
         used = 0
@@ -163,19 +176,27 @@ class ContinuousScheduler:
             req.status = "running"
             req.slot = slot
             req.admitted_s = now
+            req.admitted_step = step
             self.slot_map[slot] = req
             used += req.n_src_tokens
             admitted.append(req)
         return admitted
 
-    def release(self, req: Request, now: float = 0.0) -> int:
-        """Finish a running request and return its freed slot."""
+    def release(self, req: Request, now: float = 0.0, *,
+                step: Optional[int] = None) -> int:
+        """Finish a running request and return its freed slot.
+
+        ``step``: the exact global decode step the request finished at —
+        inside a burst this is finer-grained than ``now``, which is only
+        observed at the burst edge.
+        """
         if req.status != "running" or req.slot is None:
             raise ValueError(f"request {req.req_id} is not running "
                              f"(status={req.status})")
         slot = req.slot
         req.status = "finished"
         req.finish_s = now
+        req.finish_step = step
         req.slot = None
         del self.slot_map[slot]
         self._free.append(slot)

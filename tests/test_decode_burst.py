@@ -1,0 +1,191 @@
+"""Decode bursts (ISSUE 2): serve/generate/generate_beam fused into an
+on-device ``lax.while_loop`` must stay token-identical to the per-step
+path for every burst length — including mid-burst EOS, zero-budget
+requests, slot refill, and beam reordering."""
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config
+from repro.data import make_corpus
+from repro.data.sorting import next_pow2
+from repro.data.synthetic import pad_batch
+from repro.models import build_model
+from repro.serving import ServingEngine
+
+BURST_LENS = [1, 2, 7, 64]
+BUDGETS = [3, 7, 0, 5, 7, 2, 6, 4, 7, 3]       # incl. zero-budget request
+
+
+def _make_engine():
+    """One tiny dispatch-dominated config for every test in this module."""
+    cfg = get_config("transformer-base").reduced(
+        vocab=32, d_model=48, n_layers=1, n_enc_layers=1, d_ff=96,
+        n_heads=2, n_kv_heads=2, head_dim=24)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params, ServingEngine(model, params, max_len=32)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg, model, params, engine = _make_engine()
+    requests = make_corpus(10, cfg.vocab, seed=11, max_words=8)
+    return cfg, model, params, requests, engine
+
+
+_CACHED = {}
+
+
+def _module_engine():
+    """Engine accessor for property tests (the hypothesis-compat fallback
+    wraps tests into zero-arg callables, so pytest fixtures are not
+    available there)."""
+    if "engine" not in _CACHED:
+        cfg, _, _, engine = _make_engine()
+        _CACHED["engine"] = engine
+        _CACHED["requests"] = make_corpus(8, cfg.vocab, seed=3, max_words=8)
+    return _CACHED["engine"], _CACHED["requests"]
+
+
+def _generate_each(engine, requests, budgets):
+    outs = []
+    for s, cap in zip(requests, budgets):
+        src, lens = pad_batch([s.src])
+        res = engine.generate({"src_tokens": src, "src_lengths": lens},
+                              max_new_tokens=int(cap), burst_len=1)
+        outs.append(np.asarray(res.tokens[0])[:int(cap)])
+    return outs
+
+
+@pytest.fixture(scope="module")
+def reference_outputs(setup):
+    """Per-request per-step generate() outputs for BUDGETS (computed once —
+    every swept burst length is compared against the same reference)."""
+    cfg, model, params, requests, engine = setup
+    return _generate_each(engine, requests, BUDGETS)
+
+
+def test_next_pow2():
+    assert [next_pow2(n) for n in (0, 1, 2, 3, 4, 5, 7, 8, 9, 64, 65)] == \
+        [1, 1, 2, 4, 4, 8, 8, 8, 16, 64, 128]
+
+
+@pytest.mark.parametrize("burst_len", BURST_LENS)
+def test_serve_burst_token_identical_to_generate(setup, reference_outputs,
+                                                 burst_len):
+    """serve(burst_len=K) == per-request generate() for K ∈ {1, 2, 7, 64},
+    over heterogeneous budgets (incl. zero-budget) with slot refill."""
+    cfg, model, params, requests, engine = setup
+    res = engine.serve(requests, n_slots=3, max_new_tokens=BUDGETS,
+                       burst_len=burst_len)
+    want = reference_outputs
+    for i in range(len(requests)):
+        np.testing.assert_array_equal(res.tokens_for(i), want[i])
+    assert all(r.status == "finished" for r in res.requests)
+    assert res.tokens_for(2).size == 0          # zero-budget stayed empty
+    assert res.burst_len == burst_len
+    # slot refill happened: 10 requests through 3 slots needs ≥ 4 prefills
+    assert res.prefill_rounds >= 4
+
+
+def test_mid_burst_eos(setup):
+    """Redefine eos_id to a token the model actually emits so sequences
+    finish *inside* a burst; outputs must still match the per-step path
+    and freed slots must be refilled at burst edges."""
+    cfg, model, params, requests, engine = setup
+    probe = engine.serve(requests, n_slots=2, max_new_tokens=8, burst_len=1)
+    emitted = [t for r in probe.requests for t in r.tokens[1:]]
+    assert emitted, "probe produced no tokens"
+    fake_eos = int(np.bincount(emitted).argmax())
+
+    eng = ServingEngine(model, params, eos_id=fake_eos, max_len=32)
+    per_step = eng.serve(requests, n_slots=2, max_new_tokens=8, burst_len=1)
+    burst = eng.serve(requests, n_slots=2, max_new_tokens=8, burst_len=8)
+    stopped_early = 0
+    for i in range(len(requests)):
+        np.testing.assert_array_equal(burst.tokens_for(i),
+                                      per_step.tokens_for(i))
+        if len(per_step.tokens_for(i)) < 8:
+            stopped_early += 1
+    assert stopped_early > 0                    # EOS actually fired mid-run
+    # bursts trade host syncs for wasted masked steps at burst edges
+    assert burst.host_syncs < per_step.host_syncs
+    assert burst.decode_steps >= per_step.decode_steps
+
+
+def test_generate_burst_identity(setup):
+    cfg, model, params, requests, engine = setup
+    src, lens = pad_batch([s.src for s in requests[:4]], length=16)
+    batch = {"src_tokens": src, "src_lengths": lens}
+    ref = engine.generate(batch, max_new_tokens=12, burst_len=1)
+    for k in [2, 7, 64]:
+        got = engine.generate(batch, max_new_tokens=12, burst_len=k)
+        assert len(got.tokens) == len(ref.tokens)
+        for a, b in zip(ref.tokens, got.tokens):
+            np.testing.assert_array_equal(a, b)
+        assert got.host_syncs <= ref.host_syncs
+    assert ref.tokens_per_s >= 0 and ref.decode_steps_per_s >= 0
+
+
+@pytest.mark.parametrize("burst_len", [1, 4])
+def test_beam_burst_identity(setup, burst_len):
+    """Beam burst (top-k + cache gather inside the scanned body) matches
+    the per-step beam path at K ∈ {1, 4}."""
+    cfg, model, params, requests, engine = setup
+    src, lens = pad_batch([s.src for s in requests[:3]], length=16)
+    batch = {"src_tokens": src, "src_lengths": lens}
+    ref = engine.generate_beam(batch, beam=3, max_new_tokens=8, burst_len=1)
+    got = engine.generate_beam(batch, beam=3, max_new_tokens=8,
+                               burst_len=burst_len)
+    assert len(got.tokens) == len(ref.tokens)
+    for a, b in zip(ref.tokens, got.tokens):
+        np.testing.assert_array_equal(a, b)
+    if burst_len > 1:
+        assert got.host_syncs <= ref.host_syncs
+
+
+def test_burst_metrics_and_syncs(setup):
+    cfg, model, params, requests, engine = setup
+    per_step = engine.serve(requests, n_slots=4, max_new_tokens=6,
+                            burst_len=1)
+    burst = engine.serve(requests, n_slots=4, max_new_tokens=6, burst_len=8)
+    m1, m8 = per_step.metrics(), burst.metrics()
+    for m in (m1, m8):
+        assert m["host_syncs"] >= 1
+        assert m["decode_steps_per_s"] > 0
+        assert m["tokens_per_s"] > 0
+    assert m1["burst_len"] == 1 and m8["burst_len"] == 8
+    # per-step pays ≥ one sync per decode step; bursts amortize them
+    assert per_step.host_syncs >= per_step.decode_steps
+    assert burst.host_syncs < per_step.host_syncs
+    # step attribution is exact even though wall latency is burst-edge
+    for r in burst.requests:
+        assert r.finish_step is not None and r.admitted_step is not None
+        assert r.finish_step >= r.admitted_step
+
+
+def test_burst_rejects_bad_length(setup):
+    cfg, model, params, requests, engine = setup
+    with pytest.raises(ValueError):
+        engine.serve(requests[:2], n_slots=2, burst_len=0)
+    with pytest.raises(ValueError):
+        ServingEngine(model, params, max_len=32, burst_len=0)
+
+
+@given(st.integers(min_value=1, max_value=11),
+       st.integers(min_value=0, max_value=9))
+@settings(max_examples=8, deadline=None)
+def test_property_serve_burst_identity(burst_len, seed):
+    """Random burst lengths × random budget mixes: serve(burst_len=K) is
+    token-identical to the per-step per-request path."""
+    engine, requests = _module_engine()
+    rng = np.random.default_rng(seed)
+    budgets = [int(b) for b in rng.integers(0, 9, size=len(requests))]
+    res = engine.serve(requests, n_slots=3, max_new_tokens=budgets,
+                       burst_len=burst_len)
+    want = _generate_each(engine, requests, budgets)
+    for i in range(len(requests)):
+        np.testing.assert_array_equal(res.tokens_for(i), want[i])
