@@ -1,0 +1,148 @@
+"""Continuous beam serving vs per-request beam search, FP and INT8 cache.
+
+The paper's serving story is INT8 inference under batching with the
+beam-search GatherNd quantized (§5.3); ``ServingEngine.serve(beam=B)``
+closes the last decode mode the continuous engine didn't cover by running
+beam groups — ``B`` contiguous rows per request — through the slot-refill
+grid.  This sweep measures what that buys on the skewed-length workload
+(75% short / 25% long budgets) where per-request beam search leaves the
+machine idle on every short request's tail:
+
+* ``beam_serve_{fp,int8}_b{B}``     — continuous beam groups: measured
+  tokens/s, grid utilization, refill (prefill) rounds, and **token
+  identity** against the per-request ``generate_beam`` reference (the
+  winning hypothesis of every request must match exactly — FP and INT8
+  engines each against their own reference).
+* ``beam_per_request_{fp,int8}_b{B}`` — the baseline: one
+  ``generate_beam`` call per request (batch of one group), same budgets.
+* ``beam_serve_best``               — best configuration summary.
+* ``compile_warmup``                — jit compile + warmup seconds,
+  excluded from every measured row.
+
+The INT8 rows quantize weights per-channel and the KV cache per-token
+per-head (``core/ptq.quantize_model`` with dynamic activation
+quantization), so the beam reorder moves int8 payloads — the paper's 4×
+GatherNd traffic cut — while the sweep asserts the output stream is still
+identical to that engine's own per-request beam decode.
+
+``--smoke`` shrinks the sweep for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.common import measure
+from repro.configs import get_config
+from repro.core import QuantPolicy, quantize_model
+from repro.data import make_corpus
+from repro.data.synthetic import pad_batch
+from repro.models import build_model
+from repro.serving import ServingEngine
+
+BEAMS = (2, 4)
+N_REQUESTS = 32
+N_SLOTS = 8                  # rows: beam groups per grid = N_SLOTS // beam
+BURST_LEN = 8
+SHORT_BUDGET, LONG_BUDGET = 4, 24
+P_SHORT = 0.75
+MEASURE_PASSES = 3
+
+
+def _setup(n_requests: int):
+    # test-scale model (dispatch-dominated on CPU): the regime where both
+    # bursts and continuous refill pay — and where identity bugs surface
+    cfg = get_config("transformer-base").reduced(
+        vocab=32, d_model=48, n_layers=1, n_enc_layers=1, d_ff=96,
+        n_heads=2, n_kv_heads=2, head_dim=24)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qparams, qctx = quantize_model(params, {},
+                                   QuantPolicy(act_quant="dynamic"))
+    engines = {
+        "fp": ServingEngine(model, params, max_len=64),
+        "int8": ServingEngine(model, qparams, quant=qctx, max_len=64),
+    }
+    requests = make_corpus(n_requests, cfg.vocab, seed=9, max_words=8)
+    rng = np.random.default_rng(0)
+    budgets = [int(b) for b in np.where(rng.random(n_requests) < P_SHORT,
+                                        SHORT_BUDGET, LONG_BUDGET)]
+    return engines, requests, budgets
+
+
+def _per_request_beam(engine, requests, budgets, beam):
+    """One generate_beam call per request — the baseline serving loop."""
+    outs, n_tok = [], 0
+    for s, cap in zip(requests, budgets):
+        src, lens = pad_batch([s.src])
+        res = engine.generate_beam(
+            {"src_tokens": src, "src_lengths": lens}, beam=beam,
+            max_new_tokens=cap, burst_len=BURST_LEN)
+        outs.append(np.asarray(res.tokens[0])[:cap])
+        n_tok += res.n_tokens
+    return outs, n_tok
+
+
+def run(smoke: bool = False) -> list:
+    rows = []
+    beams = (2,) if smoke else BEAMS
+    n_requests = 12 if smoke else N_REQUESTS
+    passes = 1 if smoke else MEASURE_PASSES
+    engines, requests, budgets = _setup(n_requests)
+
+    warm_total = 0.0
+    best = (None, 0.0)
+    for qname, engine in engines.items():
+        for beam in beams:
+            ref_fn = lambda: _per_request_beam(engine, requests, budgets,
+                                               beam)
+            (reference, ref_tok), times, warm_s = measure(
+                ref_fn, warmup=1, passes=passes)
+            warm_total += warm_s
+            ref_tps = ref_tok / min(times)
+            rows.append((f"beam_per_request_{qname}_b{beam}",
+                         min(times) * 1e6 / n_requests,
+                         f"tok_per_s={ref_tps:.1f}"))
+
+            serve = lambda: engine.serve(requests, n_slots=N_SLOTS,
+                                         max_new_tokens=budgets,
+                                         burst_len=BURST_LEN, beam=beam)
+            res, times, warm_s = measure(serve, warmup=1, passes=passes)
+            warm_total += warm_s
+            tps = res.n_tokens / min(times)
+            mismatches = sum(
+                not np.array_equal(res.tokens_for(i), reference[i])
+                for i in range(n_requests))
+            # identity is a hard invariant, not a report: fail the run (and
+            # the CI bench-smoke step) if continuous beam ever diverges
+            assert mismatches == 0, (
+                f"{qname} beam={beam}: {mismatches}/{n_requests} requests "
+                "diverged from per-request generate_beam")
+            rows.append((f"beam_serve_{qname}_b{beam}",
+                         min(times) * 1e6 / n_requests,
+                         f"tok_per_s={tps:.1f} "
+                         f"speedup_vs_per_request={tps / ref_tps:.2f}x "
+                         f"groups={res.n_groups} "
+                         f"grid_util={res.utilization:.3f} "
+                         f"refill_rounds={res.prefill_rounds} "
+                         f"identical_to_generate_beam={mismatches == 0}"))
+            if tps / ref_tps > best[1]:
+                best = (f"{qname}_b{beam}", tps / ref_tps)
+
+    rows.append(("beam_serve_best", 0.0,
+                 f"best={best[0]} speedup_vs_per_request={best[1]:.2f}x"))
+    rows.append(("compile_warmup", 0.0,
+                 f"total_s={warm_total:.2f} (excluded from rows above)"))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast configuration for CI")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke):
+        print(",".join(str(x) for x in r))

@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
 * bench_continuous         → beyond §5.6 (static vs continuous batching)
 * bench_decode_burst       → beyond §5.5 (on-device decode bursts vs
                              per-token host dispatch)
+* bench_beam_serve         → §5.3 serving-side (continuous beam groups vs
+                             per-request beam search, FP and INT8 cache)
 """
 
 import sys
@@ -20,6 +22,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_batching,
+        bench_beam_serve,
         bench_calibration_modes,
         bench_continuous,
         bench_decode_burst,
@@ -35,6 +38,7 @@ def main() -> None:
         ("fig7", bench_op_distribution),
         ("continuous", bench_continuous),
         ("burst", bench_decode_burst),
+        ("beam", bench_beam_serve),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -15,6 +15,7 @@ from repro.configs import get_config
 from repro.core import QuantPolicy, quantize_model
 from repro.core.ptq import FP_CONTEXT
 from repro.data import make_corpus, pack_batches_token_budget, padding_stats
+from repro.data.synthetic import pad_batch
 from repro.models import build_model
 from repro.serving import (
     ParallelStreams,
@@ -101,6 +102,34 @@ def main() -> None:
         print(f"  burst_len={k}: {res.n_tokens / dt:.0f} tok/s, "
               f"{res.host_syncs} host syncs for {res.decode_steps} decode "
               f"steps, slot utilization {res.utilization:.2f}")
+
+    print("\n=== continuous beam serving (beam groups in the decode grid) ===")
+    beam = 2
+    few = [requests[i] for i in order[:24]]
+    caps = [int(budgets[i]) for i in order[:24]]
+    # per-request baseline: one generate_beam call per request
+    for _ in range(2):                                      # 2nd pass is warm
+        t0 = time.perf_counter()
+        n_tok = 0
+        for s, cap in zip(few, caps):
+            src, lens = pad_batch([s.src])
+            n_tok += engine.generate_beam(
+                {"src_tokens": src, "src_lengths": lens}, beam=beam,
+                max_new_tokens=cap, burst_len=8).n_tokens
+        per_req_s = time.perf_counter() - t0
+    print(f"  per-request generate_beam: {n_tok / per_req_s:.0f} tok/s")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        res = engine.serve(few, n_slots=8, max_new_tokens=caps,
+                           burst_len=8, beam=beam)
+        cont_s = time.perf_counter() - t0
+    print(f"  continuous beam groups:    {res.n_tokens / cont_s:.0f} tok/s "
+          f"({res.n_groups} groups of {beam} rows, grid utilization "
+          f"{res.utilization:.2f}, {res.prefill_rounds} refill rounds)")
+    sim = simulate_continuous(caps, 8, static_batch=4, beam=beam)
+    print(f"  queue model: static util {sim['static_utilization']:.2f} vs "
+          f"continuous {sim['continuous_utilization']:.2f} with "
+          f"{sim['n_groups']} group servers")
 
 
 if __name__ == "__main__":

@@ -11,7 +11,10 @@ workers → throughput report.
 engine: requests are bin-packed to a token budget (FFD) for admission
 order, then stream through ``ServingEngine.serve``'s slot-refill decode
 loop, reporting per-request first-token/total latency and decode-grid
-utilization.
+utilization.  ``--beam B`` (B > 1) with ``--mode continuous`` serves beam
+search through the same engine: each request takes a group of B contiguous
+decode rows (`--slots // B` groups), finished groups free all B rows
+atomically and are refilled mid-decode.
 """
 
 from __future__ import annotations
@@ -40,7 +43,10 @@ def main() -> None:
                     choices=["none", "naive", "symmetric", "independent",
                              "conjugate"])
     ap.add_argument("--streams", type=int, default=2)
-    ap.add_argument("--beam", type=int, default=1)
+    ap.add_argument("--beam", type=int, default=1,
+                    help="beam width (1 = greedy); with --mode continuous, "
+                         "each request occupies a group of `beam` decode "
+                         "rows (--slots // beam groups)")
     ap.add_argument("--max-new-tokens", type=int, default=24)
     ap.add_argument("--sort", default="tokens",
                     choices=["none", "words", "tokens"])
@@ -84,22 +90,28 @@ def main() -> None:
               "calibrated sites quantizable")
 
     if args.mode == "continuous":
-        if args.beam > 1:
-            raise SystemExit("--mode continuous is greedy-only (beam=1)")
         engine = ServingEngine(model, params, quant=qctx, max_len=96,
                                burst_len=args.burst_len)
         bins = pack_batches_token_budget(requests, args.token_budget)
         order = [i for b in bins for i in b]     # FFD admission order
+        beam = args.beam if args.beam > 1 else None
         t0 = time.perf_counter()
         res = engine.serve([requests[i] for i in order],
                            n_slots=args.slots,
-                           max_new_tokens=args.max_new_tokens)
+                           max_new_tokens=args.max_new_tokens,
+                           beam=beam)
         dt = time.perf_counter() - t0
         met = res.metrics()
         print(f"served {args.requests} requests in {dt:.2f}s "
               f"({res.tokens_per_s:.1f} tok/s, "
               f"slot utilization {res.utilization:.2f}, "
               f"{res.prefill_rounds} prefill rounds)")
+        if beam:
+            print(f"beam={res.beam}: {res.n_groups} groups of {res.beam} "
+                  f"rows in a {res.n_slots}-row grid"
+                  + (f" ({args.slots - res.n_slots} rows stranded — "
+                     f"beam does not divide --slots)"
+                     if res.n_slots != args.slots else ""))
         print(f"burst_len={res.burst_len}: {res.host_syncs} host syncs for "
               f"{res.decode_steps} decode steps "
               f"({res.decode_steps_per_s:.0f} steps/s)")

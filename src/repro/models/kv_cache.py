@@ -214,6 +214,40 @@ def free_slots(cache: KVCache, slots: jax.Array) -> KVCache:
     )
 
 
+def group_rows(base_slots: jax.Array, group: int) -> jax.Array:
+    """Expand group base rows to the strided row set they own.
+
+    ``base_slots``: (G,) int32 group base rows (multiples of ``group`` for
+    in-range entries) → (G * group,) row indices ``base + [0, group)``.
+    An out-of-range sentinel base (≥ the cache batch) expands to ``group``
+    out-of-range rows, so the padding convention of ``insert_at_slots``
+    (OOB rows are dropped by jax scatter semantics) carries over to whole
+    groups.
+    """
+    base = jnp.asarray(base_slots, jnp.int32)
+    return (base[:, None] + jnp.arange(group, dtype=jnp.int32)[None, :]
+            ).reshape(-1)
+
+
+def insert_at_groups(cache: KVCache, sub: KVCache, base_slots: jax.Array,
+                     group: int) -> KVCache:
+    """Group-strided ``insert_at_slots``: splice whole beam groups.
+
+    ``sub`` holds ``len(base_slots) * group`` batch rows — ``group``
+    contiguous rows per admitted request — scattered into rows
+    ``[base, base + group)`` of each base slot.  Works for FP and INT8
+    caches exactly like ``insert_at_slots`` (it is one).
+    """
+    return insert_at_slots(cache, sub, group_rows(base_slots, group))
+
+
+def free_groups(cache: KVCache, base_slots: jax.Array, group: int) -> KVCache:
+    """Group-strided ``free_slots``: a finishing beam group frees all
+    ``group`` of its rows atomically (cursor reset only — see
+    ``free_slots`` for why no payload copy happens)."""
+    return free_slots(cache, group_rows(base_slots, group))
+
+
 def gather_beams(cache: KVCache, beam_idx: jax.Array) -> KVCache:
     """Beam-search cache reorder along batch — the paper's GatherNd.
 

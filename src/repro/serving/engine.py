@@ -15,6 +15,15 @@ power-of-two widths so the whole serve compiles O(log slots) programs.
 Greedy decode through ``serve`` is token-identical to per-request
 :meth:`generate` — every per-row computation is batch-independent.
 
+``serve(beam=B)`` extends continuous batching to **beam search**: a request
+occupies a *group* of ``B`` contiguous rows, the scheduler admits/releases
+whole groups, and the decode burst runs the beam-search body (top-k +
+device-side cache reorder — the paper's §5.3 GatherNd) with per-group
+budget/finished masks so groups at different lifecycle stages share one
+grid.  Finished groups are drained and refilled at burst edges; output is
+token-identical to per-request :meth:`generate_beam` for every
+``burst_len``, with FP or INT8 KV cache.
+
 **Decode bursts.**  The per-token serving loop used to dispatch one jitted
 step per token and synchronize with the host every step (``np.asarray`` of
 the argmax) — framework dispatch, not math, dominated small per-step work
@@ -80,16 +89,30 @@ class GenerationResult:
 
 @dataclasses.dataclass
 class ServeResult:
-    """Outcome of one continuous-batching serve."""
+    """Outcome of one continuous-batching serve.
+
+    With ``beam > 1`` every request occupied a group of ``beam`` decode
+    rows: ``n_slots`` still counts *rows*, ``busy_slot_steps`` counts all
+    rows of a busy group (so ``utilization`` stays an occupied-row
+    fraction of the computed grid), and each ``Request.tokens`` holds the
+    group's *winning* hypothesis (``Request.score`` its length-penalized
+    log-prob).
+    """
 
     requests: List[Request]           # submission order, lifecycle filled in
     n_slots: int
     decode_steps: int
-    busy_slot_steps: int              # Σ over steps of occupied slots
+    busy_slot_steps: int              # Σ over steps of occupied rows
     prefill_rounds: int
     wall_s: float
     host_syncs: int = 0               # device→host round trips (prefill + bursts)
     burst_len: int = 1
+    beam: int = 1                     # rows per request group (1 = greedy)
+
+    @property
+    def n_groups(self) -> int:
+        """Request groups the decode grid holds (== n_slots for greedy)."""
+        return self.n_slots // self.beam
 
     @property
     def n_tokens(self) -> int:
@@ -97,7 +120,16 @@ class ServeResult:
 
     @property
     def utilization(self) -> float:
-        """Occupied-slot fraction of the decode grid actually computed."""
+        """Occupied-row fraction of the decode grid actually computed.
+
+        Beam-group aware: a busy group accounts for all ``beam`` of its
+        rows.  ``n_slots`` is the *computed* grid — rows a non-dividing
+        ``beam`` would strand are trimmed before the serve (``n_slots``
+        here is already the trimmed row count), so the starvation cost of
+        a coarse beam shows up as fewer group servers (and in
+        ``simulate_continuous(..., beam=B)``'s ``idle_rows``), not as a
+        deflated utilization.
+        """
         return self.busy_slot_steps / max(self.n_slots * self.decode_steps, 1)
 
     @property
@@ -109,6 +141,8 @@ class ServeResult:
         return self.decode_steps / max(self.wall_s, 1e-9)
 
     def tokens_for(self, req_id: int) -> np.ndarray:
+        """Generated ids for one request — the winning hypothesis when the
+        serve ran with ``beam > 1`` (one row per request otherwise)."""
         for r in self.requests:
             if r.req_id == req_id:
                 return np.asarray(r.tokens, np.int32)
@@ -122,6 +156,8 @@ class ServeResult:
         return {
             "n_requests": float(len(self.requests)),
             "n_tokens": float(self.n_tokens),
+            "beam": float(self.beam),
+            "n_groups": float(self.n_groups),
             "wall_s": self.wall_s,
             "tokens_per_s": self.tokens_per_s,
             "utilization": self.utilization,
@@ -163,6 +199,7 @@ class ServingEngine:
         # (width, beam) — power-of-two bucketed, so O(log K) entries.
         self._burst_jits: Dict[int, Callable] = {}
         self._beam_burst_jits: Dict[Tuple[int, int], Callable] = {}
+        self._beam_serve_jits: Dict[Tuple[int, int], Callable] = {}
 
     # ------------------------------------------------------------------ util
     def _init_state(self, batch_size: int):
@@ -195,6 +232,25 @@ class ServingEngine:
         return out
 
     @staticmethod
+    def _winner(grid: np.ndarray, scores: np.ndarray, alpha: float,
+                eos_id: int) -> Tuple[np.ndarray, float]:
+        """Pick one beam group's length-penalized best hypothesis.
+
+        ``grid``: (beam, T) host-side token history in final beam order;
+        ``scores``: (beam,) final log-probs.  Returns ``(tokens, score)``
+        with ``tokens`` truncated before EOS.  Shared by
+        :meth:`generate_beam` and the continuous beam serve's group drain
+        — one implementation, so the two paths cannot drift apart.
+        """
+        hit = grid == eos_id
+        lengths = np.where(hit.any(axis=1), np.argmax(hit, axis=1),
+                           grid.shape[1])
+        pen = ((5.0 + lengths) / 6.0) ** alpha
+        final = scores / pen
+        best = int(final.argmax())
+        return grid[best, :lengths[best]], float(final[best])
+
+    @staticmethod
     def _insert_rows(state: Dict[str, Any], sub: Dict[str, Any],
                      tokens: jax.Array, sub_tokens: jax.Array,
                      slots: jax.Array):
@@ -213,6 +269,45 @@ class ServingEngine:
             sub["src_lengths"])
         tokens = tokens.at[slots].set(sub_tokens)
         return out, tokens
+
+    # ------------------------------------------------------- prefill splice
+    def _prefill_padded(self, src_rows: np.ndarray, len_rows: np.ndarray):
+        """Prefill a side batch padded to a power-of-two width.
+
+        Padding rows replay row 0 — their results are discarded because
+        ``_splice_rows`` gives them out-of-range destinations — so prefill
+        compiles one program per pow2 width, not per admission-group size.
+        Returns ``(logits, sub_state, width)``.
+        """
+        n, enc_len = src_rows.shape
+        width = next_pow2(n)
+        if width > n:
+            pad_r = np.broadcast_to(src_rows[0], (width - n, enc_len))
+            src_rows = np.concatenate([src_rows, pad_r], axis=0)
+            len_rows = np.concatenate(
+                [len_rows, np.broadcast_to(len_rows[0], (width - n,))])
+        sub = self.model.init_decode_state(
+            width, self.max_len, quantized=self.quant.quantize_kv)
+        logits, sub = self._prefill(
+            self.params,
+            {"src_tokens": jnp.asarray(src_rows),
+             "src_lengths": jnp.asarray(len_rows)},
+            sub)
+        return logits, sub, width
+
+    def _splice_rows(self, state, tokens, sub, sub_tokens, rows: np.ndarray,
+                     width: int):
+        """Splice the first ``len(rows)`` rows of a prefilled side batch
+        into the running decode state at ``rows``; the side batch's
+        padding rows get an out-of-range sentinel destination (the total
+        row count) and are dropped by jax scatter semantics.
+        ``sub_tokens`` is already ``width``-long (padding-row entries are
+        discarded with their rows), keeping every device shape a function
+        of the pow2 bucket, never of the admission-group size."""
+        slots = np.full((width,), tokens.shape[0], np.int32)  # OOB sentinel
+        slots[:len(rows)] = rows
+        return self._insert(state, sub, tokens, sub_tokens,
+                            jnp.asarray(slots))
 
     # ---------------------------------------------------------------- bursts
     def _greedy_burst_fn(self, width: int) -> Callable:
@@ -273,6 +368,51 @@ class ServingEngine:
             self._beam_burst_jits[(width, beam)] = fn
         return fn
 
+    def _make_beam_step(self, beam: int) -> Callable:
+        """One beam-search decode step — log-softmax, finished-beam EOS
+        masking, per-group top-k, score update, and the **cache reorder**
+        (the paper's §5.3 GatherNd) — shared by both beam burst builders
+        so the token-identity-critical math exists exactly once.
+
+        ``act_r`` is a per-row activity mask: rows of inactive groups
+        gather themselves (identity permutation) and keep their tokens /
+        scores / finished / permutation-composition / ring-buffer entries
+        frozen while their decode state advances with garbage (nothing
+        reads it).  An all-True mask reproduces the unmasked
+        ``generate_beam`` step exactly.
+        """
+        model, quant, eos = self.model, self.quant, self.eos_id
+        gather_state = self._beam_gather_state
+
+        def step_fn(params, tokens, scores, finished, comp, state, buf,
+                    step, act_r):
+            R = tokens.shape[0]
+            G = R // beam
+            logits, state = model.decode_step(params, tokens, state,
+                                              quant=quant)
+            lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            V = lp.shape[-1]
+            # finished beams only extend with EOS at no cost
+            eos_only = jnp.full_like(lp, -1e30).at[:, eos].set(0.0)
+            lp = jnp.where(finished[:, None], eos_only, lp)
+            cand = (scores[:, None] + lp).reshape(G, beam * V)
+            scores_new, flat_idx = jax.lax.top_k(cand, beam)
+            src_beam = flat_idx // V
+            tok_new = (flat_idx % V).reshape(R).astype(jnp.int32)
+            gidx = (src_beam + jnp.arange(G)[:, None] * beam).reshape(R)
+            gidx = jnp.where(act_r, gidx, jnp.arange(R, dtype=jnp.int32))
+            state = gather_state(state, gidx)
+            tokens = jnp.where(act_r, tok_new, tokens)
+            scores = jnp.where(act_r, scores_new.reshape(R), scores)
+            finished = jnp.take(finished, gidx, axis=0) | \
+                (act_r & (tokens == eos))
+            comp = jnp.take(comp, gidx, axis=0)
+            buf = jnp.take(buf, gidx, axis=0)
+            buf = buf.at[:, step].set(jnp.where(act_r, tokens, eos))
+            return tokens, scores, finished, comp, state, buf
+
+        return step_fn
+
     def _make_beam_burst(self, width: int, beam: int) -> Callable:
         """Beam-search burst: top-k, score update, **cache reorder** (the
         paper's §5.3 GatherNd) all inside the scanned body.
@@ -283,14 +423,14 @@ class ServingEngine:
         step.  Ring-buffer rows are reordered alongside the state, so at
         burst exit the buffer is already in final beam order.
         """
-        model, quant, eos = self.model, self.quant, self.eos_id
-        gather_state = self._beam_gather_state
+        eos = self.eos_id
+        step_fn = self._make_beam_step(beam)
 
         def burst(params, tokens, scores, finished, steps_cap, state):
             BB = tokens.shape[0]
-            B = BB // beam
             buf0 = jnp.full((BB, width), eos, jnp.int32)
             comp0 = jnp.arange(BB, dtype=jnp.int32)
+            all_rows = jnp.ones((BB,), bool)
 
             def cond(carry):
                 step, _, _, finished, _, _, _ = carry
@@ -298,24 +438,9 @@ class ServingEngine:
 
             def body(carry):
                 step, tokens, scores, finished, comp, state, buf = carry
-                logits, state = model.decode_step(params, tokens, state,
-                                                  quant=quant)
-                lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-                V = lp.shape[-1]
-                # finished beams only extend with EOS at no cost
-                eos_only = jnp.full_like(lp, -1e30).at[:, eos].set(0.0)
-                lp = jnp.where(finished[:, None], eos_only, lp)
-                cand = (scores[:, None] + lp).reshape(B, beam * V)
-                scores_new, flat_idx = jax.lax.top_k(cand, beam)
-                src_beam = flat_idx // V
-                tokens = (flat_idx % V).reshape(BB).astype(jnp.int32)
-                gidx = (src_beam + jnp.arange(B)[:, None] * beam
-                        ).reshape(BB)
-                state = gather_state(state, gidx)
-                scores = scores_new.reshape(BB)
-                finished = jnp.take(finished, gidx, axis=0) | (tokens == eos)
-                comp = jnp.take(comp, gidx, axis=0)
-                buf = jnp.take(buf, gidx, axis=0).at[:, step].set(tokens)
+                tokens, scores, finished, comp, state, buf = step_fn(
+                    params, tokens, scores, finished, comp, state, buf,
+                    step, all_rows)
                 return (step + 1, tokens, scores, finished, comp, state, buf)
 
             carry = (jnp.int32(0), tokens, scores, finished, comp0, state,
@@ -325,6 +450,74 @@ class ServingEngine:
             return tokens, scores, finished, comp, state, buf, step
 
         donate = (1, 5) if self._donate_state else ()
+        return jax.jit(burst, donate_argnums=donate)
+
+    def _beam_serve_burst_fn(self, width: int, beam: int) -> Callable:
+        fn = self._beam_serve_jits.get((width, beam))
+        if fn is None:
+            fn = self._make_beam_serve_burst(width, beam)
+            self._beam_serve_jits[(width, beam)] = fn
+        return fn
+
+    def _make_beam_serve_burst(self, width: int, beam: int) -> Callable:
+        """Continuous-batching beam burst: ``_make_beam_burst``'s body with
+        **per-group** lifecycle masks, so requests at different stages of
+        their budgets share one decode grid.
+
+        The grid is ``G = rows // beam`` independent beam groups.  Each
+        group carries its own ``remaining`` step budget; a group is
+        *active* while ``remaining > 0`` and not all of its rows have
+        finished.  Inactive groups (budget exhausted, fully finished, or
+        unoccupied rows) keep stepping — the grid is one fused program —
+        but their tokens / scores / finished / permutation-composition /
+        ring-buffer rows are frozen by the per-row mask (see
+        ``_make_beam_step``), so at the burst edge the host drains each
+        group exactly as ``generate_beam`` would have left it at its own
+        early exit.  Groups only *deactivate* mid-burst (admission happens
+        at burst edges), so every group active at step ``s`` has taken
+        exactly ``s`` steps and the global ring column doubles as the
+        per-group one; per-group steps taken are recovered on the host as
+        ``remaining_in - remaining_out``.
+        """
+        eos = self.eos_id
+        step_fn = self._make_beam_step(beam)
+
+        def burst(params, tokens, scores, finished, remaining, steps_cap,
+                  state):
+            R = tokens.shape[0]
+            G = R // beam
+            buf0 = jnp.full((R, width), eos, jnp.int32)
+            ident = jnp.arange(R, dtype=jnp.int32)
+
+            def active_groups(finished, remaining):
+                alive = ~jnp.all(finished.reshape(G, beam), axis=1)
+                return (remaining > 0) & alive                    # (G,)
+
+            def cond(carry):
+                step, _, _, finished, remaining, _, _, _ = carry
+                return (step < steps_cap) & \
+                    jnp.any(active_groups(finished, remaining))
+
+            def body(carry):
+                (step, tokens, scores, finished, remaining, comp, state,
+                 buf) = carry
+                act_g = active_groups(finished, remaining)        # (G,)
+                act_r = jnp.repeat(act_g, beam)                   # (R,)
+                tokens, scores, finished, comp, state, buf = step_fn(
+                    params, tokens, scores, finished, comp, state, buf,
+                    step, act_r)
+                remaining = remaining - act_g.astype(remaining.dtype)
+                return (step + 1, tokens, scores, finished, remaining, comp,
+                        state, buf)
+
+            carry = (jnp.int32(0), tokens, scores.astype(jnp.float32),
+                     finished, jnp.asarray(remaining, jnp.int32), ident,
+                     state, buf0)
+            (step, tokens, scores, finished, remaining, comp, state, buf) = \
+                jax.lax.while_loop(cond, body, carry)
+            return tokens, scores, finished, remaining, comp, state, buf, step
+
+        donate = (1, 6) if self._donate_state else ()
         return jax.jit(burst, donate_argnums=donate)
 
     # ---------------------------------------------------------------- greedy
@@ -404,8 +597,10 @@ class ServingEngine:
               prefill_token_budget: Optional[int] = None,
               admit_min_free: int = 1,
               pad_to_multiple: int = 8,
-              burst_len: Optional[int] = None) -> ServeResult:
-        """Continuous-batching greedy decode over a request stream.
+              burst_len: Optional[int] = None,
+              beam: Optional[int] = None,
+              alpha: float = 0.6) -> ServeResult:
+        """Continuous-batching decode over a request stream.
 
         ``requests`` may be ``Sentence``s, raw token arrays, or ``Request``
         objects (the latter carry their own ``max_new_tokens``); submission
@@ -421,11 +616,32 @@ class ServingEngine:
         bursts amortize host round trips at the cost of finished rows
         idling (masked to EOS) until the next burst edge.
 
+        ``beam`` switches the grid to continuous **beam search**: each
+        request occupies a group of ``beam`` contiguous rows (so the grid
+        holds ``n_slots // beam`` groups), the burst runs the beam-search
+        body — top-k, score update, on-device cache reorder (the paper's
+        §5.3 GatherNd) — with per-group budget/finished masks, finished
+        groups are drained and their ``beam`` rows refilled at burst
+        edges, and each request's ``tokens`` is the winning hypothesis
+        under the ``alpha`` length penalty.  Token-identical to
+        per-request :meth:`generate_beam` for every ``burst_len``, FP and
+        INT8 KV cache alike.  ``beam=None`` (default) is the greedy path;
+        ``beam=1`` runs the beam machinery with single-row groups (same
+        tokens as greedy, but with scores and the beam drain path).
+
         ``admit_min_free`` is admission hysteresis: wait until that many
-        slots are free before paying for a prefill round (larger values
-        amortize prefill dispatches at a small utilization/latency cost;
-        1 = refill immediately).  The last stragglers are always admitted.
+        slot groups are free before paying for a prefill round (larger
+        values amortize prefill dispatches at a small utilization/latency
+        cost; 1 = refill immediately).  The last stragglers are always
+        admitted.
         """
+        if beam is not None:
+            return self._serve_beam(
+                requests, n_slots=n_slots, beam=int(beam), alpha=alpha,
+                max_new_tokens=max_new_tokens,
+                prefill_token_budget=prefill_token_budget,
+                admit_min_free=admit_min_free,
+                pad_to_multiple=pad_to_multiple, burst_len=burst_len)
         K = self._resolve_burst(burst_len)
         reqs = self._as_requests(requests, max_new_tokens)
         if not reqs:
@@ -460,29 +676,16 @@ class ServingEngine:
         def prefill_into_slots(admitted, state, tokens):
             """Prefill newly admitted requests and splice them in."""
             g = len(admitted)
-            width = next_pow2(g)
             src_pad, lens = pad_batch([r.src for r in admitted],
                                       length=enc_len)
-            if width > g:
-                # padding rows replay request 0 (results are discarded:
-                # their slot index is out of range → the scatter drops them)
-                pad_rows = np.broadcast_to(src_pad[0], (width - g, enc_len))
-                src_pad = np.concatenate([src_pad, pad_rows], axis=0)
-                lens = np.concatenate(
-                    [lens, np.broadcast_to(lens[0], (width - g,))])
-            sub = self.model.init_decode_state(
-                width, self.max_len, quantized=quantized)
-            logits, sub = self._prefill(
-                self.params,
-                {"src_tokens": jnp.asarray(src_pad),
-                 "src_lengths": jnp.asarray(lens)},
-                sub)
+            logits, sub, width = self._prefill_padded(src_pad, lens)
+            # argmax at the padded width: device shapes depend only on the
+            # pow2 bucket; the admission-group size g appears host-side
             first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            slots = np.full((width,), n_slots, np.int32)   # OOB sentinel
-            slots[:g] = [r.slot for r in admitted]
-            state, tokens = self._insert(state, sub, tokens, first,
-                                         jnp.asarray(slots))
-            first_host = np.asarray(first[:g])
+            state, tokens = self._splice_rows(
+                state, tokens, sub, first,
+                np.asarray([r.slot for r in admitted], np.int32), width)
+            first_host = np.asarray(first)[:g]
             t = now()
             for r, tok in zip(admitted, first_host):
                 r.first_token_s = t
@@ -551,6 +754,201 @@ class ServingEngine:
                            prefill_rounds=prefill_rounds, wall_s=now(),
                            host_syncs=host_syncs, burst_len=K)
 
+    # ------------------------------------------------- continuous beam search
+    def _serve_beam(self, requests: Sequence[Any], *, n_slots: int,
+                    beam: int, alpha: float,
+                    max_new_tokens: Union[int, Sequence[int]],
+                    prefill_token_budget: Optional[int],
+                    admit_min_free: int, pad_to_multiple: int,
+                    burst_len: Optional[int]) -> ServeResult:
+        """Continuous beam search: beam-group slot lifecycle.
+
+        Structure mirrors the greedy ``serve`` loop, at group granularity:
+
+        * a request is admitted into ``beam`` contiguous rows; its source
+          is prefilled replicated across the group (exactly as
+          ``generate_beam`` tiles its batch) and its first ``beam`` tokens
+          come from one top-k over the group's beam-0 logits;
+        * each burst runs ``_make_beam_serve_burst``'s group-masked body;
+          at the edge the host replays the group's composed beam
+          permutation over its token history, appends the new ring-buffer
+          columns, and — when the group's budget is spent or every row has
+          finished — picks the length-penalized winner, releases the
+          request, and frees all ``beam`` rows atomically
+          (``kv_cache.free_groups``) so the next waiting request can take
+          the group mid-decode.
+
+        Host-visible per-group state (scores, finished mask) round-trips
+        through float32/bool numpy between bursts — bit-exact, which is
+        what keeps the output token-identical to per-request
+        :meth:`generate_beam` at every ``burst_len``.
+        """
+        if beam < 1:
+            raise ValueError(f"beam must be ≥ 1, got {beam}")
+        K = self._resolve_burst(burst_len)
+        reqs = self._as_requests(requests, max_new_tokens)
+        n_groups = n_slots // beam
+        if n_groups < 1:
+            raise ValueError(f"n_slots={n_slots} rows cannot hold a "
+                             f"beam-{beam} group")
+        R = n_groups * beam                 # rows actually in the grid
+        if not reqs:
+            return ServeResult(requests=[], n_slots=R, decode_steps=0,
+                               busy_slot_steps=0, prefill_rounds=0,
+                               wall_s=0.0, host_syncs=0, burst_len=K,
+                               beam=beam)
+        if max(r.max_new_tokens for r in reqs) > self.max_len:
+            raise ValueError("a request's max_new_tokens exceeds the "
+                             f"engine KV capacity {self.max_len}")
+        burst = self._beam_serve_burst_fn(next_pow2(K), beam)
+        m = pad_to_multiple
+        enc_len = max(r.n_src_tokens for r in reqs)
+        enc_len = ((enc_len + m - 1) // m) * m
+
+        sched = ContinuousScheduler(
+            R, group_size=beam, prefill_token_budget=prefill_token_budget)
+        sched.submit_many(reqs)
+
+        quantized = self.quant.quantize_kv
+        state = self.model.init_decode_state(
+            R, self.max_len, quantized=quantized, enc_len=enc_len)
+        tokens = jnp.zeros((R,), jnp.int32)
+        # host-side per-row beam state (re-uploaded each burst, bit-exact)
+        scores_np = np.zeros((R,), np.float32)
+        finished_np = np.ones((R,), bool)        # unoccupied rows are inert
+        histories: Dict[int, List[np.ndarray]] = {}  # base → (beam,) columns
+        budget_left: Dict[int, int] = {}             # base → decode steps left
+
+        t0 = time.perf_counter()
+        now = lambda: time.perf_counter() - t0
+        decode_steps = 0
+        busy_slot_steps = 0
+        prefill_rounds = 0
+        host_syncs = 0
+        cap = jnp.asarray(K, jnp.int32)
+
+        def finalize(req: Request, base: int, t: float, step: int) -> int:
+            """Pick the group's winner (same helper ``generate_beam``
+            uses), then release the request (returns the freed base row).
+            """
+            grid = np.stack(histories.pop(base), axis=1)     # (beam, T)
+            toks, score = self._winner(grid, scores_np[base:base + beam],
+                                       alpha, self.eos_id)
+            req.tokens = [int(x) for x in toks]
+            req.score = score
+            budget_left.pop(base, None)
+            finished_np[base:base + beam] = True
+            return sched.release(req, t, step=step)
+
+        def prefill_groups(admitted, state, tokens):
+            """Prefill admitted requests replicated to their beam rows and
+            splice the groups in; drain first tokens (one top-k per group,
+            identical to ``generate_beam``'s first step)."""
+            g = len(admitted)
+            rows = g * beam
+            src_pad, lens = pad_batch([r.src for r in admitted],
+                                      length=enc_len)
+            logits, sub, width = self._prefill_padded(
+                np.repeat(src_pad, beam, axis=0),
+                np.repeat(lens, beam, axis=0))
+            # log-softmax at the padded width (device shapes stay a
+            # function of the pow2 bucket); the (g, beam)-shaped first-step
+            # top-k moves to the host, where a stable argsort of the
+            # negated row reproduces jax.lax.top_k exactly (descending
+            # values, ties broken by ascending index) on the same float32
+            # log-probs generate_beam's device top-k selects from
+            lp = np.asarray(
+                jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1))
+            first = lp[:rows].reshape(g, beam, -1)[:, 0]     # (g, V)
+            tok_host = np.argsort(-first, axis=-1,
+                                  kind="stable")[:, :beam].astype(np.int32)
+            sc_host = np.take_along_axis(first, tok_host, axis=-1)
+            sub_np = np.full((width,), self.eos_id, np.int32)
+            sub_np[:rows] = tok_host.reshape(rows)
+            state, tokens = self._splice_rows(
+                state, tokens, sub, jnp.asarray(sub_np),
+                np.asarray(kvc.group_rows(
+                    np.asarray([r.slot for r in admitted], np.int32),
+                    beam)),
+                width)
+            t = now()
+            for i, r in enumerate(admitted):
+                base = r.slot
+                r.first_token_s = t
+                if r.max_new_tokens <= 0:
+                    finished_np[base:base + beam] = True
+                    sched.release(r, t, step=decode_steps)
+                    continue                     # zero budget: empty output
+                scores_np[base:base + beam] = sc_host[i]
+                fin = tok_host[i] == self.eos_id
+                finished_np[base:base + beam] = fin
+                histories[base] = [tok_host[i].astype(np.int32)]
+                budget_left[base] = r.max_new_tokens - 1
+                if fin.all() or budget_left[base] <= 0:
+                    finalize(r, base, t, step=decode_steps)
+            return state, tokens
+
+        while not sched.all_done:
+            admitted = []
+            if sched.n_free >= min(max(admit_min_free, 1), sched.n_waiting,
+                                   n_groups) and sched.n_waiting:
+                admitted = sched.admit(now(), step=decode_steps)
+            if admitted:
+                prefill_rounds += 1
+                host_syncs += 1       # first-token drain syncs the host
+                state, tokens = prefill_groups(admitted, state, tokens)
+            if not sched.slot_map:
+                continue    # every admitted group finished on token 1
+
+            remaining_in = np.zeros((n_groups,), np.int32)
+            for base in sched.slot_map:
+                remaining_in[base // beam] = budget_left[base]
+            (tokens, scores_dev, finished_dev, remaining_dev, comp, state,
+             buf, steps_dev) = burst(
+                self.params, tokens, jnp.asarray(scores_np),
+                jnp.asarray(finished_np), jnp.asarray(remaining_in), cap,
+                state)
+            buf_host = np.asarray(buf)         # ONE host sync per burst
+            comp_host = np.asarray(comp)
+            scores_np = np.array(scores_dev, np.float32)
+            finished_np = np.array(finished_dev, bool)
+            remaining_out = np.asarray(remaining_dev)
+            steps = int(steps_dev)
+            host_syncs += 1
+            step_base = decode_steps
+            decode_steps += steps
+
+            # drain at the burst edge: replay each group's composed beam
+            # permutation over its host-side history, append its new ring
+            # columns, finalize groups that finished or spent their budget
+            t = now()
+            freed = []
+            for base, req in list(sched.slot_map.items()):
+                gi = base // beam
+                s_g = int(remaining_in[gi] - remaining_out[gi])
+                if s_g:
+                    local = comp_host[base:base + beam] - base
+                    hist = [c[local] for c in histories[base]]
+                    hist.extend(buf_host[base:base + beam, j]
+                                for j in range(s_g))
+                    histories[base] = hist
+                    budget_left[base] -= s_g
+                busy_slot_steps += s_g * beam
+                if finished_np[base:base + beam].all() or \
+                        budget_left[base] <= 0:
+                    freed.append(finalize(req, base, t,
+                                          step=step_base + s_g))
+            if freed:
+                state = dict(state)
+                state["cache"] = kvc.free_groups(
+                    state["cache"], np.asarray(freed, np.int32), beam)
+
+        return ServeResult(requests=reqs, n_slots=R,
+                           decode_steps=decode_steps,
+                           busy_slot_steps=busy_slot_steps,
+                           prefill_rounds=prefill_rounds, wall_s=now(),
+                           host_syncs=host_syncs, burst_len=K, beam=beam)
+
     # ------------------------------------------------------------------ beam
     def generate_beam(self, batch: Dict[str, np.ndarray], *, beam: int = 4,
                       max_new_tokens: int = 64, alpha: float = 0.6,
@@ -610,18 +1008,11 @@ class ServingEngine:
 
         # best beam per request by length-penalized score
         grid = np.stack(seq, axis=1)                             # (BB, T)
-        lengths = np.argmax(grid == self.eos_id, axis=1)
-        lengths = np.where((grid == self.eos_id).any(axis=1), lengths,
-                           grid.shape[1])
-        lp_pen = ((5 + lengths) / 6.0) ** alpha
-        final = np.asarray(scores).reshape(B, beam) / \
-            lp_pen.reshape(B, beam)
-        best = final.argmax(axis=1)
-        seqs = []
-        for b in range(B):
-            row = grid[b * beam + best[b]]
-            stop = lengths[b * beam + best[b]]
-            seqs.append(row[:stop])
+        scores_host = np.asarray(scores, np.float32)
+        seqs = [self._winner(grid[b * beam:(b + 1) * beam],
+                             scores_host[b * beam:(b + 1) * beam],
+                             alpha, self.eos_id)[0]
+                for b in range(B)]
         return GenerationResult(tokens=seqs, steps=len(seq),
                                 prefill_s=t1 - t0, decode_s=t2 - t1,
                                 host_syncs=host_syncs)

@@ -17,6 +17,13 @@ Two generations of scheduler live here:
   instead of idling until the whole batch drains.  Per-request arrival /
   first-token / finish timestamps feed the latency metrics the benchmarks
   report.
+
+  With ``group_size > 1`` (continuous **beam** serving) a request occupies
+  a *group* of ``group_size`` contiguous decode rows instead of one: the
+  free list holds group base rows, admission hands out whole groups, and
+  release frees all ``group_size`` rows atomically — so the engine's
+  beam-reorder gathers always stay inside one group's row span and freed
+  row sets are always multiples of the beam width.
 """
 
 from __future__ import annotations
@@ -87,7 +94,7 @@ class Request:
 
     # lifecycle (scheduler/engine-maintained)
     status: str = "waiting"             # waiting | running | finished
-    slot: Optional[int] = None
+    slot: Optional[int] = None          # base row of the request's group
     admitted_s: Optional[float] = None
     first_token_s: Optional[float] = None
     finish_s: Optional[float] = None
@@ -97,6 +104,9 @@ class Request:
     # position — admission and release in global decode-step time.
     admitted_step: Optional[int] = None
     finish_step: Optional[int] = None
+    # beam serving: winning hypothesis' length-penalized log-prob (None for
+    # greedy decode, where there is exactly one hypothesis per request)
+    score: Optional[float] = None
 
     @property
     def n_src_tokens(self) -> int:
@@ -119,22 +129,40 @@ class ContinuousScheduler:
     """Admission control + slot lifecycle for continuous batching.
 
     ``n_slots`` decode rows exist for the whole serve; a request occupies
-    exactly one slot from admission to finish.  ``admit`` hands out free
-    slots to waiting requests in strict FIFO order — bounded per round by
+    exactly one slot *group* of ``group_size`` contiguous rows from
+    admission to finish (``group_size=1`` — greedy — makes a group one
+    row, the original behaviour).  ``admit`` hands out free groups to
+    waiting requests in strict FIFO order — bounded per round by
     ``prefill_token_budget`` (sum of source tokens prefillable in one go)
     so a burst of long requests cannot monopolize a prefill round.  The
-    first waiting request is always admitted when a slot is free, so no
+    first waiting request is always admitted when a group is free, so no
     request can starve regardless of the length mix.
+
+    ``Request.slot`` and ``slot_map`` keys are group *base rows* (always
+    multiples of ``group_size``); a group's rows are
+    ``[base, base + group_size)``.  Rows past ``n_groups * group_size``
+    (when ``group_size`` does not divide ``n_slots``) are never assigned —
+    that is the beam-starvation tax the README quantifies.
+    ``prefill_token_budget`` is denominated in prefilled **row**-tokens:
+    a group prefill replicates the source across its rows, so a request
+    charges ``group_size × n_src_tokens`` against the round's budget.
     """
 
-    def __init__(self, n_slots: int, *,
+    def __init__(self, n_slots: int, *, group_size: int = 1,
                  prefill_token_budget: Optional[int] = None):
         if n_slots < 1:
             raise ValueError(f"need at least one slot, got {n_slots}")
+        if group_size < 1:
+            raise ValueError(f"group_size must be ≥ 1, got {group_size}")
+        if n_slots < group_size:
+            raise ValueError(f"{n_slots} rows cannot hold a group of "
+                             f"{group_size}")
         self.n_slots = n_slots
+        self.group_size = group_size
+        self.n_groups = n_slots // group_size
         self.prefill_token_budget = prefill_token_budget
         self._waiting: Deque[Request] = collections.deque()
-        self._free: List[int] = list(range(n_slots))
+        self._free: List[int] = [g * group_size for g in range(self.n_groups)]
         self.slot_map: Dict[int, Request] = {}
         self.finished: List[Request] = []
 
@@ -149,6 +177,7 @@ class ContinuousScheduler:
         req.tokens = []
         req.admitted_step = None
         req.finish_step = None
+        req.score = None
         self._waiting.append(req)
 
     def submit_many(self, reqs: Sequence[Request]) -> None:
@@ -157,7 +186,7 @@ class ContinuousScheduler:
 
     def admit(self, now: float = 0.0, *,
               step: Optional[int] = None) -> List[Request]:
-        """Move waiting requests into free slots (one prefill round).
+        """Move waiting requests into free slot groups (one prefill round).
 
         With burst decode, admission happens only at burst edges; ``step``
         records the global decode-step count at that edge so queueing can
@@ -168,8 +197,11 @@ class ContinuousScheduler:
         used = 0
         while self._waiting and self._free:
             req = self._waiting[0]
-            if (admitted and budget is not None
-                    and used + req.n_src_tokens > budget):
+            # budget is in prefilled *row*-tokens: a beam group encodes its
+            # source once per row, so a request costs group_size × its
+            # source length (group_size=1 reduces to plain source tokens)
+            cost = req.n_src_tokens * self.group_size
+            if admitted and budget is not None and used + cost > budget:
                 break                    # next round; FIFO order preserved
             self._waiting.popleft()
             slot = self._free.pop(0)
@@ -178,13 +210,14 @@ class ContinuousScheduler:
             req.admitted_s = now
             req.admitted_step = step
             self.slot_map[slot] = req
-            used += req.n_src_tokens
+            used += cost
             admitted.append(req)
         return admitted
 
     def release(self, req: Request, now: float = 0.0, *,
                 step: Optional[int] = None) -> int:
-        """Finish a running request and return its freed slot.
+        """Finish a running request and return its freed group base row
+        (all ``group_size`` rows of the group are freed atomically).
 
         ``step``: the exact global decode step the request finished at —
         inside a burst this is finer-grained than ``now``, which is only
@@ -207,6 +240,7 @@ class ContinuousScheduler:
     # ------------------------------------------------------------ inspection
     @property
     def n_free(self) -> int:
+        """Free slot *groups* (== free rows when ``group_size == 1``)."""
         return len(self._free)
 
     @property

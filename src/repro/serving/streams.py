@@ -15,7 +15,8 @@ scaling the paper shows in Figure 6/8 (wall-clock on 1 CPU core cannot).
 ``simulate_continuous`` is the same idea for the slot-refill engine
 (``ServingEngine.serve``): it predicts the decode-grid utilization gap
 between static and continuous batching from the decode-length distribution
-alone.
+alone — group-granular when ``beam > 1``, where a request holds ``beam``
+rows and the grid has correspondingly fewer refillable servers.
 """
 
 from __future__ import annotations
@@ -83,39 +84,57 @@ class ParallelStreams:
 
 
 def simulate_continuous(decode_lengths: Sequence[int], n_slots: int,
-                        *, static_batch: Optional[int] = None) -> Dict:
+                        *, static_batch: Optional[int] = None,
+                        beam: int = 1) -> Dict:
     """Deterministic slot-refill model of continuous vs static batching.
 
     Cost unit = one decode step of one slot row (the decode grid is computed
     for every slot whether or not it holds a live request).  Continuous
     batching finishes a request after exactly ``decode_lengths[i]`` steps in
     its slot and refills immediately; static batching (``static_batch``
-    rows per batch, FIFO) holds every row until the *longest* request in
-    the batch finishes.  Returns slot-steps and utilization for both, the
+    *requests* per batch, FIFO) holds every row until the *longest* request
+    in the batch finishes.  Returns slot-steps and utilization for both, the
     analogue of the paper's Fig. 6 queueing model for the refill engine —
     used by ``benchmarks/bench_continuous.py`` and the scheduler tests.
+
+    ``beam > 1`` models **group-granular** queueing (continuous beam
+    serving): a request occupies a whole group of ``beam`` rows, so the
+    grid holds only ``n_slots // beam`` independent servers, every useful
+    or idle step is charged ``beam`` rows, and ``idle_rows`` rows (when
+    ``beam`` does not divide ``n_slots``) can never hold a group at all —
+    the precise sense in which a coarse beam *starves* the grid: fewer
+    refill opportunities per burst edge and a utilization ceiling of
+    ``(n_slots - idle_rows) / n_slots``.
     """
     lens = [int(x) for x in decode_lengths]
-    useful = sum(lens)
+    if beam < 1:
+        raise ValueError(f"beam must be ≥ 1, got {beam}")
+    n_groups = n_slots // beam
+    if n_groups < 1:
+        raise ValueError(f"{n_slots} rows cannot hold a beam-{beam} group")
+    idle_rows = n_slots - n_groups * beam      # stranded by non-dividing beam
+    useful = sum(lens) * beam
 
-    # --- continuous: each slot is a server; request occupies it `len` steps
-    free = np.zeros(n_slots)
+    # --- continuous: each *group* is a server; a request occupies all
+    # `beam` of its rows for `len` steps, then the group is refilled
+    free = np.zeros(n_groups)
     for ln in lens:                      # FIFO admission
         s = int(np.argmin(free))
         free[s] += ln
     cont_steps = int(free.max())         # decode steps of the shared grid
     cont_grid = cont_steps * n_slots
 
-    # --- static: batches of `static_batch` rows run max(len) steps each
-    # (a partial final batch is charged its actual rows, matching how the
-    # measured baseline in bench_continuous.py accounts its grid)
-    bsz = static_batch or n_slots
+    # --- static: batches of `static_batch` requests (each `beam` rows)
+    # run max(len) steps each (a partial final batch is charged its actual
+    # rows, matching how the measured baseline in bench_continuous.py
+    # accounts its grid)
+    bsz = static_batch or n_groups
     static_grid = 0
     static_steps = 0
     for i in range(0, len(lens), bsz):
         chunk = lens[i:i + bsz]
         static_steps += max(chunk)
-        static_grid += max(chunk) * len(chunk)
+        static_grid += max(chunk) * len(chunk) * beam
     return {
         "useful_slot_steps": useful,
         "continuous_steps": cont_steps,
@@ -123,6 +142,9 @@ def simulate_continuous(decode_lengths: Sequence[int], n_slots: int,
         "static_steps": static_steps,
         "static_utilization": useful / max(static_grid, 1),
         "speedup_steps": static_steps / max(cont_steps, 1),
+        "beam": beam,
+        "n_groups": n_groups,
+        "idle_rows": idle_rows,
     }
 
 

@@ -1,0 +1,237 @@
+"""Continuous beam serving (ISSUE 3): beam-group slot lifecycle end-to-end.
+
+``serve(beam=B)`` — beam groups of contiguous rows flowing through the
+continuous-batching grid — must be **token-identical** to per-request
+``generate_beam`` for every beam width, burst length, and KV-cache dtype
+(FP and INT8), including mid-burst group finish, zero-budget requests, and
+group refill mid-decode.  A property layer locks down the scheduler's
+group invariants: no slot double-assignment, freed rows always multiples
+of ``beam``, every admitted request finishes exactly once.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config
+from repro.core import QuantPolicy, quantize_model
+from repro.data import make_corpus
+from repro.data.synthetic import pad_batch
+from repro.models import build_model
+from repro.serving import ContinuousScheduler, Request, ServingEngine
+
+BEAMS = [1, 4]
+BURST_LENS = [1, 2, 7]
+BUDGETS = [3, 7, 0, 5, 6, 2, 7, 4]          # incl. zero-budget request
+
+
+def _make_engines():
+    """One tiny dispatch-dominated config; FP and INT8 engines share it."""
+    cfg = get_config("transformer-base").reduced(
+        vocab=32, d_model=48, n_layers=1, n_enc_layers=1, d_ff=96,
+        n_heads=2, n_kv_heads=2, head_dim=24)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qparams, qctx = quantize_model(params, {},
+                                   QuantPolicy(act_quant="dynamic"))
+    engines = {
+        "fp": ServingEngine(model, params, max_len=32),
+        "int8": ServingEngine(model, qparams, quant=qctx, max_len=32),
+    }
+    assert engines["int8"].quant.quantize_kv          # INT8 KV cache is on
+    return cfg, model, params, engines
+
+
+_CACHED = {}
+
+
+def _module_state():
+    """Module-level cache (plain dict, not a fixture, so the hypothesis
+    fallback's zero-arg wrappers can reach it too)."""
+    if "engines" not in _CACHED:
+        cfg, model, params, engines = _make_engines()
+        _CACHED.update(
+            cfg=cfg, model=model, params=params, engines=engines,
+            requests=make_corpus(len(BUDGETS), cfg.vocab, seed=11,
+                                 max_words=8),
+            refs={})
+    return _CACHED
+
+
+def _beam_each(engine, requests, budgets, beam):
+    """Per-request ``generate_beam`` reference (burst_len=1 — the per-step
+    path), truncated to each request's budget."""
+    outs = []
+    for s, cap in zip(requests, budgets):
+        src, lens = pad_batch([s.src])
+        res = engine.generate_beam({"src_tokens": src, "src_lengths": lens},
+                                   beam=beam, max_new_tokens=int(cap),
+                                   burst_len=1)
+        outs.append(np.asarray(res.tokens[0])[:int(cap)])
+    return outs
+
+
+def _reference(quant, beam):
+    """BUDGETS references, computed once per (engine, beam)."""
+    state = _module_state()
+    key = (quant, beam)
+    if key not in state["refs"]:
+        state["refs"][key] = _beam_each(state["engines"][quant],
+                                        state["requests"], BUDGETS, beam)
+    return state["refs"][key]
+
+
+# --------------------------------------------------------------- identity
+@pytest.mark.parametrize("quant", ["fp", "int8"])
+@pytest.mark.parametrize("burst_len", BURST_LENS)
+@pytest.mark.parametrize("beam", BEAMS)
+def test_serve_beam_token_identical_to_generate_beam(quant, burst_len, beam):
+    """serve(beam=B) == per-request generate_beam for B ∈ {1, 4},
+    burst_len ∈ {1, 2, 7}, FP and INT8 KV cache, over heterogeneous
+    budgets (incl. zero-budget) with group refill (8 requests, 3 groups).
+    """
+    state = _module_state()
+    engine, requests = state["engines"][quant], state["requests"]
+    res = engine.serve(requests, n_slots=3 * beam, max_new_tokens=BUDGETS,
+                       burst_len=burst_len, beam=beam)
+    want = _reference(quant, beam)
+    for i in range(len(requests)):
+        np.testing.assert_array_equal(res.tokens_for(i), want[i])
+    assert all(r.status == "finished" for r in res.requests)
+    assert res.tokens_for(2).size == 0          # zero-budget stayed empty
+    assert res.beam == beam and res.burst_len == burst_len
+    assert res.n_slots == 3 * beam and res.n_groups == 3
+    # group refill happened: 8 requests through 3 groups needs ≥ 3 prefills
+    assert res.prefill_rounds >= 3
+
+
+def test_mid_burst_group_finish():
+    """Redefine eos_id to a token the model actually emits so whole groups
+    finish *inside* a burst; outputs must still match the per-step path
+    and the per-request reference, and freed groups must be refilled."""
+    state = _module_state()
+    model, params = state["model"], state["params"]
+    requests = state["requests"]
+    probe = state["engines"]["fp"].serve(requests, n_slots=2,
+                                         max_new_tokens=8, burst_len=1)
+    emitted = [t for r in probe.requests for t in r.tokens[1:]]
+    assert emitted, "probe produced no tokens"
+    fake_eos = int(np.bincount(emitted).argmax())
+
+    eng = ServingEngine(model, params, eos_id=fake_eos, max_len=32)
+    want = _beam_each(eng, requests, [8] * len(requests), 2)
+    per_step = eng.serve(requests, n_slots=4, max_new_tokens=8,
+                         burst_len=1, beam=2)
+    burst = eng.serve(requests, n_slots=4, max_new_tokens=8,
+                      burst_len=8, beam=2)
+    stopped_early = 0
+    for i in range(len(requests)):
+        np.testing.assert_array_equal(per_step.tokens_for(i), want[i])
+        np.testing.assert_array_equal(burst.tokens_for(i), want[i])
+        if len(want[i]) < 8:
+            stopped_early += 1
+    assert stopped_early > 0            # groups actually finished mid-run
+    # bursts trade host syncs for frozen-group steps at burst edges
+    assert burst.host_syncs < per_step.host_syncs
+
+
+def test_serve_result_beam_group_aware():
+    """Regression (ServeResult assumed one row per request): tokens_for
+    returns the winning hypothesis, utilization counts all group rows,
+    metrics expose beam/n_groups, winners carry their scores."""
+    state = _module_state()
+    engine, requests = state["engines"]["fp"], state["requests"]
+    res = engine.serve(requests, n_slots=4, max_new_tokens=BUDGETS,
+                       burst_len=2, beam=2)
+    m = res.metrics()
+    assert m["beam"] == 2.0 and m["n_groups"] == 2.0
+    assert res.n_groups == 2
+    # busy accounting is in rows: a 2-row group contributes 2 per step
+    assert res.busy_slot_steps % res.beam == 0
+    assert 0.0 < res.utilization <= 1.0
+    assert res.busy_slot_steps <= res.n_slots * res.decode_steps
+    want = _reference("fp", 2)
+    for i, r in enumerate(res.requests):
+        np.testing.assert_array_equal(res.tokens_for(i), want[i])
+        if r.max_new_tokens > 0:
+            assert r.score is not None  # winning length-penalized log-prob
+        assert r.finish_step is not None and r.admitted_step is not None
+        assert r.finish_step >= r.admitted_step
+    # greedy results keep the one-row-per-request defaults
+    greedy = engine.serve(requests[:2], n_slots=2, max_new_tokens=4)
+    assert greedy.beam == 1 and greedy.n_groups == greedy.n_slots
+
+
+def test_serve_beam_rejects_bad_config():
+    state = _module_state()
+    engine, requests = state["engines"]["fp"], state["requests"]
+    with pytest.raises(ValueError):
+        engine.serve(requests[:2], n_slots=2, beam=3)   # group can't fit
+    with pytest.raises(ValueError):
+        engine.serve(requests[:2], n_slots=4, beam=0)
+    # non-dividing beam: grid shrinks to whole groups (stranded rows)
+    res = engine.serve(requests[:2], n_slots=5, max_new_tokens=3, beam=2)
+    assert res.n_slots == 4 and res.n_groups == 2
+
+
+# --------------------------------------------------------------- property
+@given(st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=5),
+       st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_property_scheduler_group_invariants(beam, n_groups, seed):
+    """Random request mixes through random admit/release interleavings
+    never violate the group lifecycle: no slot double-assignment, groups
+    row-disjoint, freed rows multiples of ``beam``, every admitted request
+    finishes exactly once."""
+    rng = np.random.default_rng(seed)
+    rows = beam * n_groups
+    sched = ContinuousScheduler(rows, group_size=beam)
+    n_req = int(rng.integers(1, 13))
+    reqs = [Request(req_id=i,
+                    src=np.arange(3, 4 + int(rng.integers(0, 5)),
+                                  dtype=np.int32))
+            for i in range(n_req)]
+    sched.submit_many(reqs)
+    finishes = {r.req_id: 0 for r in reqs}
+    occupied = {}                                   # base row → req_id
+    while not sched.all_done:
+        for r in sched.admit(0.0):
+            assert r.slot is not None and r.slot % beam == 0
+            assert 0 <= r.slot <= rows - beam
+            assert r.slot not in occupied           # no double assignment
+            occupied[r.slot] = r.req_id
+        running = list(sched.slot_map.values())
+        assert running, "scheduler wedged: waiting but nothing running"
+        k = int(rng.integers(1, len(running) + 1))
+        for i in rng.choice(len(running), size=k, replace=False):
+            req = running[int(i)]
+            base = req.slot
+            freed = sched.release(req)
+            assert freed == base and freed % beam == 0
+            assert occupied.pop(freed) == req.req_id
+            finishes[req.req_id] += 1
+    assert all(n == 1 for n in finishes.values())   # exactly once each
+    assert sched.n_free == n_groups and not occupied
+
+
+@given(st.integers(min_value=1, max_value=9),
+       st.integers(min_value=0, max_value=9))
+@settings(max_examples=4, deadline=None)
+def test_property_serve_beam_identity(burst_len, seed):
+    """Random burst lengths × random budget mixes through the real engine:
+    serve(beam=2) matches per-request generate_beam and every request
+    finishes exactly once."""
+    state = _module_state()
+    engine, requests = state["engines"]["fp"], state["requests"][:6]
+    rng = np.random.default_rng(seed)
+    budgets = [int(b) for b in rng.integers(0, 8, size=len(requests))]
+    res = engine.serve(requests, n_slots=4, max_new_tokens=budgets,
+                       burst_len=burst_len, beam=2)
+    want = _beam_each(engine, requests, budgets, 2)
+    for i in range(len(requests)):
+        np.testing.assert_array_equal(res.tokens_for(i), want[i])
+    ids = [r.req_id for r in res.requests]
+    assert sorted(ids) == list(range(len(requests)))
+    assert all(r.status == "finished" for r in res.requests)

@@ -134,3 +134,38 @@ def test_insert_then_gather_beams(rng, quantized):
     if quantized:
         np.testing.assert_array_equal(np.asarray(g.k_scale[:, 0]),
                                       np.asarray(sub.k_scale[:, 1]))
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_group_strided_insert_and_free(rng, quantized):
+    """Beam groups (ISSUE 3): insert_at_groups splices `beam` contiguous
+    rows per base slot; free_groups frees all of a group's rows
+    atomically; OOB sentinel bases drop whole groups."""
+    beam = 2
+    main = _rand_cache(rng, B, quantized=quantized,
+                       lengths=np.arange(B) + 1)
+    sub = _rand_cache(rng, 2 * beam, quantized=quantized,
+                      lengths=[3, 3, 5, 5])
+    bases = np.asarray([0, 4], np.int32)
+
+    rows = np.asarray(kvc.group_rows(bases, beam))
+    np.testing.assert_array_equal(rows, [0, 1, 4, 5])
+
+    out = kvc.insert_at_groups(main, sub, bases, beam)
+    for j, r in enumerate(rows):
+        np.testing.assert_array_equal(np.asarray(out.k[:, r]),
+                                      np.asarray(sub.k[:, j]))
+        assert int(out.lengths[r]) == int(sub.lengths[j])
+    for b in (2, 3):                               # untouched group
+        np.testing.assert_array_equal(np.asarray(out.k[:, b]),
+                                      np.asarray(main.k[:, b]))
+
+    freed = kvc.free_groups(out, np.asarray([4], np.int32), beam)
+    assert [int(x) for x in freed.lengths] == \
+        [3, 3, int(main.lengths[2]), int(main.lengths[3]), 0, 0]
+
+    # sentinel base B expands to OOB rows → the whole group is dropped
+    same = kvc.insert_at_groups(out, sub, np.asarray([0, B], np.int32), beam)
+    for b in range(2, B):
+        np.testing.assert_array_equal(np.asarray(same.k[:, b]),
+                                      np.asarray(out.k[:, b]))

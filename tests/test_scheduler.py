@@ -191,3 +191,24 @@ def test_simulate_continuous_skewed_gap():
     lens = [4, 4, 4, 24] * 8
     out = simulate_continuous(lens, 8, static_batch=8)
     assert out["speedup_steps"] > 1.5
+
+
+def test_simulate_continuous_beam_groups():
+    """Group-granular queueing model (ISSUE 3): a beam-B request occupies
+    B rows, the grid has n_slots // B servers, and a non-dividing beam
+    strands rows the utilization ceiling accounts for."""
+    lens = [4, 4, 4, 24] * 4
+    base = simulate_continuous(lens, 8, static_batch=4)
+    assert base["beam"] == 1 and base["idle_rows"] == 0
+    out = simulate_continuous(lens, 8, static_batch=4, beam=2)
+    assert out["n_groups"] == 4 and out["idle_rows"] == 0
+    # same requests over half the servers: ≥ the 4-server critical path
+    assert out["continuous_steps"] >= base["continuous_steps"]
+    assert 0 < out["continuous_utilization"] <= 1.0 + 1e-9
+    assert out["speedup_steps"] >= 1.0 - 1e-9
+    # beam 3 into 8 rows strands 2 rows: utilization can never reach 1
+    odd = simulate_continuous(lens, 8, static_batch=4, beam=3)
+    assert odd["idle_rows"] == 2
+    assert odd["continuous_utilization"] <= 6.0 / 8.0 + 1e-9
+    with pytest.raises(ValueError):
+        simulate_continuous(lens, 2, beam=4)

@@ -3,43 +3,17 @@
 train a tiny Transformer NMT model on the synthetic corpus → calibrate on
 held-out sentences → PTQ (symmetric mode) → serve with the batched engine →
 BLEU of INT8 vs FP stays within tolerance (Table-1 behaviour).
+
+The trained model comes from the session-scoped ``trained_nmt`` fixture in
+``conftest.py`` (shared with ``test_int8_parity.py`` — trained once).
 """
 
-import dataclasses
-
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs import get_config
 from repro.core import Calibrator, QuantMode, QuantPolicy, Taps, quantize_model
-from repro.data import TranslationBatches, corpus_bleu, make_corpus
-from repro.models import build_model
-from repro.optim import AdamW, warmup_cosine
+from repro.data import corpus_bleu
 from repro.serving import ServingEngine, TokenSortedScheduler
-from repro.train import make_train_step
-
-
-@pytest.fixture(scope="module")
-def trained_nmt():
-    from repro.optim.schedule import inverse_sqrt
-    cfg = get_config("transformer-base").reduced(
-        vocab=64, d_model=128, n_layers=2, n_enc_layers=2, d_ff=256,
-        n_heads=4, n_kv_heads=4, head_dim=32)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    opt = AdamW(lr=inverse_sqrt(cfg.d_model, warmup=200), b2=0.98)
-    opt_state = opt.init(params)
-    step = jax.jit(make_train_step(model, opt))
-    corpus = make_corpus(400, cfg.vocab, max_words=5, seed=0)
-    data = TranslationBatches(corpus, 32, sort_mode="tokens", seed=0)
-    loss = None
-    for _ in range(500):
-        batch = jax.tree_util.tree_map(jnp.asarray, data.next_batch())
-        (params, opt_state), m = step(params, opt_state, batch)
-        loss = float(m["loss"])
-    return cfg, model, params, corpus, loss
 
 
 def _translate(model, params, qctx, requests, max_len=20):
@@ -64,7 +38,6 @@ def test_training_converged(trained_nmt):
 def test_fp_vs_int8_bleu(trained_nmt):
     cfg, model, params, corpus, _ = trained_nmt
     test_set = corpus[:48]
-    refs = [list(s.tgt) + [2] for s in test_set]   # EOS-terminated refs
     refs = [list(s.tgt) for s in test_set]
 
     fp_hyps = _translate(model, params, None, test_set)
