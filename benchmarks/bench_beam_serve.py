@@ -15,6 +15,12 @@ machine idle on every short request's tail:
   engines each against their own reference).
 * ``beam_per_request_{fp,int8}_b{B}`` — the baseline: one
   ``generate_beam`` call per request (batch of one group), same budgets.
+* ``beam_fused_admission_{fp,int8}_b{B}`` — fused admission A/B: the same
+  serve with ``fused_admission=False`` (PR 3 behaviour: separate prefill
+  dispatch per admission round, source tiled ``B×`` through the encoder).
+  Token identity, ``prefill_dispatches == 0`` on the fused path, and the
+  ``B×`` encode-once reduction in ``encoder_tokens`` are **asserted** —
+  the CI bench-smoke job fails on any regression.
 * ``beam_serve_best``               — best configuration summary.
 * ``compile_warmup``                — jit compile + warmup seconds,
   excluded from every measured row.
@@ -128,9 +134,42 @@ def run(smoke: bool = False) -> list:
                          f"groups={res.n_groups} "
                          f"grid_util={res.utilization:.3f} "
                          f"refill_rounds={res.prefill_rounds} "
+                         f"prefill_dispatches={res.prefill_dispatches} "
+                         f"encoder_tokens={res.encoder_tokens} "
                          f"identical_to_generate_beam={mismatches == 0}"))
             if tps / ref_tps > best[1]:
                 best = (f"{qname}_b{beam}", tps / ref_tps)
+
+            # fused-admission A/B: the unfused path re-dispatches prefill
+            # every admission round and tiles each source `beam`× through
+            # the encoder; identity + the dispatch/FLOP cuts are hard
+            # invariants (CI bench-smoke fails on regression)
+            unfused_fn = lambda: engine.serve(
+                requests, n_slots=N_SLOTS, max_new_tokens=budgets,
+                burst_len=BURST_LEN, beam=beam, fused_admission=False)
+            unf, u_times, warm_s = measure(unfused_fn, warmup=1,
+                                           passes=passes)
+            warm_total += warm_s
+            assert res.prefill_dispatches == 0 and res.fused_admission
+            assert unf.prefill_dispatches > 0
+            for i in range(n_requests):
+                assert np.array_equal(res.tokens_for(i), unf.tokens_for(i)), (
+                    f"{qname} beam={beam}: fused admission diverged from "
+                    f"the unfused path on request {i}")
+            # encode-once broadcast: the unfused path pays ≥ beam× the
+            # encoder row-tokens for the same admissions
+            assert unf.encoder_tokens >= beam * res.encoder_tokens > 0, (
+                f"{qname} beam={beam}: expected ≥{beam}× encoder tokens "
+                f"unfused, got {unf.encoder_tokens} vs {res.encoder_tokens}")
+            assert res.host_syncs < unf.host_syncs
+            rows.append((f"beam_fused_admission_{qname}_b{beam}",
+                         min(u_times) * 1e6 / n_requests,
+                         f"unfused_tok_per_s={unf.n_tokens / min(u_times):.1f} "
+                         f"host_syncs={res.host_syncs}_vs_{unf.host_syncs} "
+                         f"encoder_tokens={res.encoder_tokens}_vs_"
+                         f"{unf.encoder_tokens} "
+                         f"encode_once_cut="
+                         f"{unf.encoder_tokens / max(res.encoder_tokens, 1):.2f}x"))
 
     rows.append(("beam_serve_best", 0.0,
                  f"best={best[0]} speedup_vs_per_request={best[1]:.2f}x"))

@@ -25,6 +25,13 @@ Rows:
   slot-refill engine (``serve``) with FFD admission order.
 * ``continuous_speedup``   — measured ratio plus the deterministic queue
   model's prediction (``simulate_continuous``).
+* ``serve_fused_admission`` / ``serve_unfused_admission`` — fused-admission
+  A/B on a refill-heavy config (every burst drains its whole grid, every
+  round admits): the unfused baseline pays a prefill dispatch + first-token
+  drain *and* a burst drain per round, fused admission rides the burst
+  program — one dispatch, one sync.  Token identity between the two paths
+  and the ≥2× host-sync reduction per request are **asserted**, so the CI
+  bench-smoke job fails on any dispatch-count regression.
 * ``token_identity``       — continuous greedy output equals per-request
   ``generate`` output, token for token.
 
@@ -54,6 +61,13 @@ N_SLOTS = 16
 SHORT_BUDGET, LONG_BUDGET = 4, 48
 P_SHORT = 0.75
 MEASURE_PASSES = 3          # paired passes; median ratio damps load noise
+
+# fused-admission A/B: every request finishes inside one burst (budget ≤
+# burst), so every round admits a full grid — the admission-bound regime
+# where the per-round prefill dispatch is half the host traffic
+FUSED_SLOTS = 4
+FUSED_BURST = 8
+FUSED_BUDGET = 6
 
 
 def _engine_and_requests(n_requests: int):
@@ -153,7 +167,46 @@ def run(smoke: bool = False) -> list:
                  f"(static_util={sim['static_utilization']:.2f} "
                  f"cont_util={sim['continuous_utilization']:.2f})"))
 
-    # 3 — token identity: serve() output == per-request generate()
+    # 3 — fused admission A/B: same workload, fused_admission on/off.
+    # Identity and the ≥2× host-sync cut are hard invariants (CI fails on
+    # regression): with budgets ≤ burst_len and requests ≡ 0 mod slots,
+    # unfused pays exactly 2 syncs/round (prefill drain + burst drain),
+    # fused exactly 1.
+    n_fused = 12 if smoke else 32
+    fused_reqs = requests[:n_fused]
+    caps = [FUSED_BUDGET] * n_fused
+    run_ab = lambda fused: engine.serve(
+        fused_reqs, n_slots=FUSED_SLOTS, max_new_tokens=caps,
+        burst_len=FUSED_BURST, fused_admission=fused)
+    fused, f_times, warm_f = measure(lambda: run_ab(True), warmup=1,
+                                     passes=passes)
+    unfused, u_times, warm_u = measure(lambda: run_ab(False), warmup=1,
+                                       passes=passes)
+    rows.append(("compile_warmup_fused", 0.0,
+                 f"fused_s={warm_f:.2f} unfused_s={warm_u:.2f} "
+                 "(excluded from rows below)"))
+    for i in range(n_fused):
+        assert np.array_equal(fused.tokens_for(i), unfused.tokens_for(i)), (
+            f"fused admission diverged from the unfused path on request {i}")
+    assert fused.prefill_dispatches == 0, (
+        "fused admission dispatched a separate prefill "
+        f"({fused.prefill_dispatches} times)")
+    assert unfused.host_syncs >= 2 * fused.host_syncs, (
+        "fused admission must cut host syncs ≥2× on the admission-bound "
+        f"config: fused={fused.host_syncs} unfused={unfused.host_syncs}")
+    rows.append(("serve_fused_admission", min(f_times) * 1e6 / n_fused,
+                 f"tok_per_s={fused.n_tokens / min(f_times):.1f} "
+                 f"host_syncs_per_req={fused.host_syncs / n_fused:.2f} "
+                 f"prefill_dispatches={fused.prefill_dispatches} "
+                 f"encoder_tokens={fused.encoder_tokens}"))
+    rows.append(("serve_unfused_admission", min(u_times) * 1e6 / n_fused,
+                 f"tok_per_s={unfused.n_tokens / min(u_times):.1f} "
+                 f"host_syncs_per_req={unfused.host_syncs / n_fused:.2f} "
+                 f"prefill_dispatches={unfused.prefill_dispatches} "
+                 f"encoder_tokens={unfused.encoder_tokens} "
+                 f"sync_cut={unfused.host_syncs / max(fused.host_syncs, 1):.2f}x"))
+
+    # 4 — token identity: serve() output == per-request generate()
     mismatches = 0
     for i in range(0, n_requests, 12):
         src, lens = pad_batch([requests[i].src])

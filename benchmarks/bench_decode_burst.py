@@ -17,8 +17,9 @@ peaks at a middle ``K``; ``K=1`` reproduces the pre-burst per-step path.
 
 Rows (per K): measured serve tokens/s, speedup vs ``K=1``, host syncs,
 decode steps, grid utilization — plus greedy **token identity** vs the
-``K=1`` output for every swept K, a ``generate`` sweep, and a best-K
-summary.  Compile/warmup is timed separately (``compile_warmup`` row) and
+``K=1`` output for every swept K, a ``serve_burst_auto`` row where the
+``AdaptiveBurst`` controller picks K between bursts (identity asserted),
+a ``generate`` sweep, and a best-K summary.  Compile/warmup is timed separately (``compile_warmup`` row) and
 excluded from every measured number.  ``--smoke`` shrinks the sweep for CI.
 """
 
@@ -98,6 +99,24 @@ def run(smoke: bool = False) -> list:
                  f"best_k={best_k} "
                  f"speedup={results[best_k][1] / base_tps:.2f}x "
                  f"(tok_per_s {base_tps:.1f} -> {results[best_k][1]:.1f})"))
+
+    # ---- adaptive burst (burst_len="auto"): the AdaptiveBurst controller
+    # moves the step cap between bursts under ONE compiled ring bucket;
+    # output must stay identical to every fixed K (asserted) ------------
+    serve_auto = lambda: engine.serve(requests, n_slots=N_SLOTS,
+                                      max_new_tokens=budgets,
+                                      burst_len="auto")
+    res, times, warm_s = measure(serve_auto, warmup=1, passes=passes)
+    warm_total += warm_s
+    mismatches = sum(not np.array_equal(res.tokens_for(i), reference[i])
+                     for i in range(n_requests))
+    assert mismatches == 0, (
+        f"burst_len='auto' diverged on {mismatches}/{n_requests} requests")
+    rows.append(("serve_burst_auto", min(times) * 1e6 / n_requests,
+                 f"tok_per_s={res.n_tokens / min(times):.1f} "
+                 f"final_k={res.burst_len} host_syncs={res.host_syncs} "
+                 f"speedup={res.n_tokens / min(times) / base_tps:.2f}x "
+                 f"identical_to_k1={mismatches == 0}"))
 
     # ---- generate sweep (one static batch, uniform budget) ---------------
     src, lens = pad_batch([s.src for s in requests[:N_SLOTS]])

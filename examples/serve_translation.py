@@ -103,6 +103,21 @@ def main() -> None:
               f"{res.host_syncs} host syncs for {res.decode_steps} decode "
               f"steps, slot utilization {res.utilization:.2f}")
 
+    print("\n=== fused admission (prefill rides the burst program) ===")
+    for fused in (False, True):
+        engine.serve([requests[i] for i in order], n_slots=8,  # warm jit
+                     max_new_tokens=[int(budgets[i]) for i in order],
+                     burst_len=8, fused_admission=fused)
+        t0 = time.perf_counter()
+        res = engine.serve([requests[i] for i in order], n_slots=8,
+                           max_new_tokens=[int(budgets[i]) for i in order],
+                           burst_len=8, fused_admission=fused)
+        dt = time.perf_counter() - t0
+        print(f"  {'fused  ' if fused else 'unfused'}: "
+              f"{res.n_tokens / dt:.0f} tok/s, {res.host_syncs} host syncs, "
+              f"{res.prefill_dispatches} prefill dispatches over "
+              f"{res.prefill_rounds} admission rounds")
+
     print("\n=== continuous beam serving (beam groups in the decode grid) ===")
     beam = 2
     few = [requests[i] for i in order[:24]]

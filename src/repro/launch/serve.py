@@ -14,7 +14,10 @@ loop, reporting per-request first-token/total latency and decode-grid
 utilization.  ``--beam B`` (B > 1) with ``--mode continuous`` serves beam
 search through the same engine: each request takes a group of B contiguous
 decode rows (`--slots // B` groups), finished groups free all B rows
-atomically and are refilled mid-decode.
+atomically and are refilled mid-decode.  Admissions ride the burst program
+by default (one jitted dispatch per serve round; ``--unfused-admission``
+restores the separate-prefill baseline), and ``--burst-len auto`` puts the
+burst cap under the adaptive controller.
 """
 
 from __future__ import annotations
@@ -57,11 +60,19 @@ def main() -> None:
     ap.add_argument("--token-budget", type=int, default=256,
                     help="FFD bin budget (padded tokens) for admission "
                          "order in --mode continuous")
-    ap.add_argument("--burst-len", type=int, default=8,
+    ap.add_argument("--burst-len", default="8",
                     help="decode steps fused on device per host round trip "
                          "(1 = per-step loop; larger bursts cut dispatch "
-                         "overhead but delay slot refill to burst edges)")
+                         "overhead but delay slot refill to burst edges); "
+                         "'auto' adapts the cap between bursts from "
+                         "measured sync cost vs mid-burst EOS waste")
+    ap.add_argument("--unfused-admission", action="store_true",
+                    help="serve admissions as separate prefill dispatches "
+                         "(the pre-fusion baseline) instead of folding "
+                         "them into the burst program")
     args = ap.parse_args()
+    burst_len = args.burst_len if args.burst_len == "auto" \
+        else int(args.burst_len)
 
     cfg = get_config(args.arch).reduced()
     if not cfg.enc_dec:
@@ -91,7 +102,7 @@ def main() -> None:
 
     if args.mode == "continuous":
         engine = ServingEngine(model, params, quant=qctx, max_len=96,
-                               burst_len=args.burst_len)
+                               burst_len=burst_len)
         bins = pack_batches_token_budget(requests, args.token_budget)
         order = [i for b in bins for i in b]     # FFD admission order
         beam = args.beam if args.beam > 1 else None
@@ -99,22 +110,29 @@ def main() -> None:
         res = engine.serve([requests[i] for i in order],
                            n_slots=args.slots,
                            max_new_tokens=args.max_new_tokens,
-                           beam=beam)
+                           beam=beam,
+                           fused_admission=not args.unfused_admission)
         dt = time.perf_counter() - t0
         met = res.metrics()
         print(f"served {args.requests} requests in {dt:.2f}s "
               f"({res.tokens_per_s:.1f} tok/s, "
               f"slot utilization {res.utilization:.2f}, "
-              f"{res.prefill_rounds} prefill rounds)")
+              f"{res.prefill_rounds} admission rounds)")
         if beam:
             print(f"beam={res.beam}: {res.n_groups} groups of {res.beam} "
                   f"rows in a {res.n_slots}-row grid"
                   + (f" ({args.slots - res.n_slots} rows stranded — "
                      f"beam does not divide --slots)"
                      if res.n_slots != args.slots else ""))
-        print(f"burst_len={res.burst_len}: {res.host_syncs} host syncs for "
+        print(f"burst_len={res.burst_len}"
+              + (" (auto)" if res.auto_burst else "")
+              + f": {res.host_syncs} host syncs for "
               f"{res.decode_steps} decode steps "
               f"({res.decode_steps_per_s:.0f} steps/s)")
+        print(("fused admission" if res.fused_admission
+               else "UNFUSED admission")
+              + f": {res.prefill_dispatches} prefill dispatches, "
+              f"{res.encoder_tokens} encoder row-tokens")
         print(f"latency: first-token mean "
               f"{met['first_token_latency_mean_s']:.3f}s "
               f"p95 {met['first_token_latency_p95_s']:.3f}s; total mean "

@@ -222,9 +222,22 @@ class EncDecLM:
             state["src_lengths"] = jnp.full((batch,), enc_len, jnp.int32)
         return state
 
-    def prefill(self, params, batch, state, *,
-                quant: QuantContext = FP_CONTEXT) -> Tuple[jax.Array, Dict]:
-        """Encode source; compute+cache per-layer cross K/V; emit BOS logits."""
+    def encode_cross_kv(self, params, batch, *,
+                        quant: QuantContext = FP_CONTEXT
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Encode-once front half of :meth:`prefill`.
+
+        Runs the encoder and projects every decoder layer's cross K/V from
+        the memory — the part of prefill whose cost scales with the source
+        length.  Returns ``(cross_k, cross_v, src_lengths)`` with
+        ``cross_k``/``cross_v`` layer-major ``(L, B, S_enc, HKV, dh)``.
+
+        Split out so the continuous-serving engine can (a) call it *inside*
+        the fused decode-burst program (admissions ride the burst dispatch)
+        and (b) encode each admitted source exactly once, broadcasting the
+        result across a beam group's rows via :meth:`splice_prefill`
+        instead of paying ``beam×`` encoder FLOPs on tiled inputs.
+        """
         cfg = self.cfg
         memory = self.encode(params, batch, quant=quant)
         B = memory.shape[0]
@@ -245,11 +258,59 @@ class EncDecLM:
                                       taps=None)
                 ks.append(k); vs.append(v)
             ck, cv = jnp.stack(ks), jnp.stack(vs)
+        return ck, cv, src_lengths
 
+    def splice_prefill(self, state: Dict[str, Any], cross_k: jax.Array,
+                       cross_v: jax.Array, src_lengths: jax.Array,
+                       base_rows: jax.Array, *, group: int = 1
+                       ) -> Dict[str, Any]:
+        """Broadcast-splice an :meth:`encode_cross_kv` result into decode
+        state rows — jit-callable, so the serving engine can run it inside
+        the fused burst program.
+
+        ``base_rows``: (B_sub,) destination rows, one per encoded source;
+        with ``group > 1`` each source is broadcast to ``group`` contiguous
+        rows ``[base, base + group)`` (a beam group shares one encoded
+        memory).  Out-of-range bases are padding and dropped whole-group by
+        jax scatter semantics.  The self-attention KV rows are *not*
+        copied: their cursors are reset to 0, which masks every stale
+        position exactly (attention masks with a hard ``where``), so the
+        next decode step on a spliced row is bit-identical to a step on a
+        freshly initialised side batch.
+        """
+        rows = kvc.group_rows(jnp.asarray(base_rows, jnp.int32), group)
+        if group > 1:
+            cross_k = jnp.repeat(cross_k, group, axis=1)
+            cross_v = jnp.repeat(cross_v, group, axis=1)
+            src_lengths = jnp.repeat(src_lengths, group, axis=0)
+        out = dict(state)
+        out["cross_k"] = state["cross_k"].at[:, rows].set(
+            cross_k.astype(state["cross_k"].dtype), mode="drop")
+        out["cross_v"] = state["cross_v"].at[:, rows].set(
+            cross_v.astype(state["cross_v"].dtype), mode="drop")
+        out["src_lengths"] = state["src_lengths"].at[rows].set(
+            src_lengths.astype(jnp.int32), mode="drop")
+        cache = state["cache"]
+        out["cache"] = kvc.KVCache(
+            k=cache.k, v=cache.v, k_scale=cache.k_scale,
+            v_scale=cache.v_scale,
+            lengths=cache.lengths.at[rows].set(0, mode="drop"))
+        return out
+
+    def prefill(self, params, batch, state, *,
+                quant: QuantContext = FP_CONTEXT) -> Tuple[jax.Array, Dict]:
+        """Encode source; compute+cache per-layer cross K/V; emit BOS logits.
+
+        Composition of :meth:`encode_cross_kv` and the BOS decode step —
+        the fused-admission serving path calls the two halves itself (with
+        :meth:`splice_prefill` in between) inside its burst program.
+        """
+        ck, cv, src_lengths = self.encode_cross_kv(params, batch,
+                                                   quant=quant)
         state = dict(state)
         state["cross_k"], state["cross_v"] = ck, cv
         state["src_lengths"] = src_lengths
-        bos = jnp.zeros((B,), jnp.int32)
+        bos = jnp.zeros((ck.shape[1],), jnp.int32)
         return self.decode_step(params, bos, state, quant=quant)
 
     def decode_step(self, params, tokens, state, *,

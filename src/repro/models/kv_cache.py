@@ -214,6 +214,22 @@ def free_slots(cache: KVCache, slots: jax.Array) -> KVCache:
     )
 
 
+def free_inactive(cache: KVCache, live: jax.Array) -> KVCache:
+    """Mask-driven ``free_slots`` for use *inside* a jitted burst program.
+
+    ``live``: (B,) bool — rows whose cursor must be preserved.  Every other
+    row (finished since the last admission, or never occupied) gets its
+    write cursor reset to 0, exactly what the host-dispatched
+    ``free_slots`` did between bursts before admissions were fused into
+    the burst program.  Payload untouched — reads are length-masked and
+    the next ``splice_prefill``/``insert_at_slots`` overwrites the rows.
+    """
+    return KVCache(
+        k=cache.k, v=cache.v, k_scale=cache.k_scale, v_scale=cache.v_scale,
+        lengths=jnp.where(live, cache.lengths, 0),
+    )
+
+
 def group_rows(base_slots: jax.Array, group: int) -> jax.Array:
     """Expand group base rows to the strided row set they own.
 

@@ -1,9 +1,11 @@
+from repro.serving.burst_control import AdaptiveBurst  # noqa: F401
 from repro.serving.engine import (  # noqa: F401
     GenerationResult,
     ServeResult,
     ServingEngine,
 )
 from repro.serving.scheduler import (  # noqa: F401
+    AdmissionPlan,
     BatchQueue,
     ContinuousScheduler,
     Request,

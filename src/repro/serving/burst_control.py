@@ -1,0 +1,95 @@
+"""Adaptive decode-burst length (``--burst-len auto``).
+
+Decode bursts trade host round trips for mid-burst waste: a row (or beam
+group) that finishes at step ``s`` of a ``K``-step burst computes ``K - s``
+masked steps before the host can refill its slot at the burst edge.  The
+right ``K`` therefore depends on two machine-local quantities the engine
+can only measure at run time:
+
+* ``t_sync`` — the fixed cost of one burst dispatch + device→host drain
+  (what larger bursts amortize), and
+* ``t_step`` — the marginal cost of one fused grid step (what mid-burst
+  EOS waste is denominated in).
+
+:class:`AdaptiveBurst` estimates both from per-burst wall times and moves
+the step cap between bursts: shrink when the waste of the *last* burst
+cost more than one sync, grow when it cost far less.  The cap only ever
+takes power-of-two values **and the compiled ring-buffer width stays
+pinned at the maximum bucket** — the engine's burst programs take the
+real step cap as a device scalar, so adapting ``K`` never triggers a new
+XLA compile (the ROADMAP PR 2 follow-up's requirement).
+"""
+
+from __future__ import annotations
+
+from repro.data.sorting import next_pow2
+
+
+class AdaptiveBurst:
+    """Online controller for the serve loop's burst step cap.
+
+    Usage: read :attr:`k` before each burst, call :meth:`observe` with the
+    burst's measurements after its drain.  :attr:`max_burst` is the fixed
+    compiled bucket (ring-buffer width); :attr:`k` is the device-scalar
+    cap, always a power of two in ``[1, max_burst]``.
+    """
+
+    def __init__(self, start: int = 8, max_burst: int = 64,
+                 grow_margin: float = 4.0, ema: float = 0.3):
+        if max_burst < 1:
+            raise ValueError(f"max_burst must be ≥ 1, got {max_burst}")
+        self.max_burst = next_pow2(max_burst)
+        self.k = max(1, min(next_pow2(start), self.max_burst))
+        self.grow_margin = float(grow_margin)
+        self.ema = float(ema)
+        self._t_step: float | None = None      # min observed s/step
+        self._t_sync: float | None = None      # EMA of fixed per-burst cost
+        self._observed = 0
+        self.shrinks = 0
+        self.grows = 0
+
+    @property
+    def t_sync_s(self) -> float:
+        return self._t_sync or 0.0
+
+    @property
+    def t_step_s(self) -> float:
+        return self._t_step or 0.0
+
+    def observe(self, wall_s: float, steps: int, wasted_row_steps: int,
+                rows: int) -> int:
+        """Feed one burst's measurements; returns the next step cap.
+
+        ``wall_s``: dispatch→drain wall time of the burst;
+        ``steps``: grid steps the burst actually took;
+        ``wasted_row_steps``: Σ over occupied rows of steps computed after
+        the row finished (the ``decode_steps`` vs ``busy_slot_steps`` gap
+        attributable to mid-burst EOS);
+        ``rows``: total grid rows (waste is normalised to whole-grid
+        steps, since the fused program computes every row every step).
+        """
+        if steps <= 0 or rows <= 0 or wall_s <= 0.0:
+            return self.k
+        self._observed += 1
+        if self._observed == 1:
+            return self.k            # burn-in: first burst includes compile
+        per_step = wall_s / steps
+        self._t_step = per_step if self._t_step is None \
+            else min(self._t_step, per_step)
+        overhead = max(wall_s - steps * self._t_step, 0.0)
+        self._t_sync = overhead if self._t_sync is None \
+            else (1.0 - self.ema) * self._t_sync + self.ema * overhead
+        waste_s = (wasted_row_steps / rows) * self._t_step
+        if wasted_row_steps == 0 and self.k < self.max_burst:
+            # no row finished mid-burst: a longer burst strictly saves syncs
+            self.k *= 2
+            self.grows += 1
+        elif waste_s > self.t_sync_s and self.k > 1:
+            # the waste cost more than the sync it saved: halve the burst
+            self.k //= 2
+            self.shrinks += 1
+        elif waste_s * self.grow_margin < self.t_sync_s and \
+                self.k < self.max_burst:
+            self.k *= 2
+            self.grows += 1
+        return self.k

@@ -41,6 +41,33 @@ the saved host round trips.  Burst lengths are bucketed to powers of two
 (``data.sorting.next_pow2``): the compiled ring-buffer width is the bucket,
 the *actual* step cap is a device scalar, so sweeping ``burst_len`` costs
 O(log K) compiles.
+
+**Fused admission.**  Decode bursts left one host dispatch per admission
+round: refilling freed slots ran a separate jitted prefill and drained its
+first token before the next burst could start.  With
+``fused_admission=True`` (the default) an admission round is folded *into*
+the burst program: the padded admitted sources ride along as device
+inputs, and the program encodes them, splices their cross-K/V into the
+grid rows (``encdec.splice_prefill``), resets the spliced rows' KV
+cursors, seeds BOS tokens, and then runs the decode ``while_loop`` — the
+spliced rows' first step *is* the BOS prefill step, so a serve round is
+exactly one dispatch and one device→host sync whether or not it admitted.
+Beam groups additionally encode each admitted source **once** and
+broadcast the memory/cross-KV across the group's ``beam`` rows (the old
+side-batch prefill tiled the source ``beam`` times — ``beam×`` encoder
+FLOPs for identical rows); the group's first-step top-k falls out of the
+shared beam step by seeding row 0 with score 0 and rows ``1..B-1`` with
+``-1e30``, which reproduces ``generate_beam``'s beam-0 top-k exactly.
+Output is token-identical to the unfused path (and therefore to
+per-request ``generate``/``generate_beam``) for every ``burst_len``, FP
+and INT8 cache; ``ServeResult.prefill_dispatches`` stays 0 and
+``encoder_tokens`` drops ``beam×`` for beam serving.
+
+``burst_len="auto"`` puts the step cap under the
+``burst_control.AdaptiveBurst`` controller: the compiled ring width stays
+pinned at the max power-of-two bucket while the device-scalar cap
+shrinks/grows between bursts as measured mid-burst EOS waste crosses the
+measured per-sync cost — adapting never triggers a new compile.
 """
 
 from __future__ import annotations
@@ -57,7 +84,19 @@ from repro.core.ptq import FP_CONTEXT, QuantContext
 from repro.data.sorting import next_pow2
 from repro.data.synthetic import EOS, pad_batch
 from repro.models import kv_cache as kvc
-from repro.serving.scheduler import ContinuousScheduler, Request
+from repro.serving.burst_control import AdaptiveBurst
+from repro.serving.scheduler import ContinuousScheduler, Request, \
+    pad_rows_pow2
+
+# new-group beam-score seed: row 0 scores 0, rows 1..B-1 score so low that
+# the shared beam step's group top-k can only draw candidates from row 0 —
+# which reproduces generate_beam's first-step "top-k over beam-0 logits"
+# without a special-cased first step (see _make_fused_beam_serve_burst)
+BEAM_SEED_NEG = np.float32(-1e30)
+
+# compiled ring-buffer bucket for burst_len="auto": the AdaptiveBurst cap
+# moves as a device scalar inside [1, AUTO_MAX_BURST] — one compile total
+AUTO_MAX_BURST = 64
 
 
 @dataclasses.dataclass
@@ -103,11 +142,17 @@ class ServeResult:
     n_slots: int
     decode_steps: int
     busy_slot_steps: int              # Σ over steps of occupied rows
-    prefill_rounds: int
+    prefill_rounds: int               # admission rounds (fused or not)
     wall_s: float
     host_syncs: int = 0               # device→host round trips (prefill + bursts)
-    burst_len: int = 1
+    burst_len: int = 1                # final step cap (adapts when auto_burst)
     beam: int = 1                     # rows per request group (1 = greedy)
+    prefill_dispatches: int = 0       # host-dispatched prefill programs
+    #                                   (0 ⇔ admissions rode the burst program)
+    encoder_tokens: int = 0           # encoder row-tokens computed for
+    #                                   admissions (beam× lower when fused)
+    fused_admission: bool = True
+    auto_burst: bool = False          # burst_len ran under AdaptiveBurst
 
     @property
     def n_groups(self) -> int:
@@ -166,6 +211,8 @@ class ServeResult:
             "host_syncs": float(self.host_syncs),
             "burst_len": float(self.burst_len),
             "prefill_rounds": float(self.prefill_rounds),
+            "prefill_dispatches": float(self.prefill_dispatches),
+            "encoder_tokens": float(self.encoder_tokens),
             "first_token_latency_mean_s": float(np.mean(first)) if first else 0.0,
             "first_token_latency_p95_s":
                 float(np.percentile(first, 95)) if first else 0.0,
@@ -178,14 +225,17 @@ class ServeResult:
 class ServingEngine:
     def __init__(self, model, params, *, quant: QuantContext = FP_CONTEXT,
                  max_len: int = 256, eos_id: int = EOS,
-                 donate_state: bool = True, burst_len: int = 8):
+                 donate_state: bool = True,
+                 burst_len: Union[int, str] = 8):
         self.model = model
         self.params = params
         self.quant = quant
         self.max_len = max_len
         self.eos_id = eos_id
-        if burst_len < 1:
-            raise ValueError(f"burst_len must be ≥ 1, got {burst_len}")
+        if burst_len != "auto":
+            burst_len = int(burst_len)
+            if burst_len < 1:
+                raise ValueError(f"burst_len must be ≥ 1, got {burst_len}")
         self.burst_len = burst_len
         self._donate_state = donate_state
 
@@ -196,21 +246,42 @@ class ServingEngine:
         # the caller always rebinds to the returned ones.
         self._insert = jax.jit(self._insert_rows, donate_argnums=(0, 2))
         # burst programs, keyed by compiled ring-buffer width (greedy) or
-        # (width, beam) — power-of-two bucketed, so O(log K) entries.
+        # (width, beam) — power-of-two bucketed, so O(log K) entries.  The
+        # fused-admission variants additionally respecialize (inside
+        # jax.jit's own shape cache) per pow2 admission width × enc_len.
         self._burst_jits: Dict[int, Callable] = {}
         self._beam_burst_jits: Dict[Tuple[int, int], Callable] = {}
         self._beam_serve_jits: Dict[Tuple[int, int], Callable] = {}
+        self._fused_burst_jits: Dict[int, Callable] = {}
+        self._fused_beam_serve_jits: Dict[Tuple[int, int], Callable] = {}
 
     # ------------------------------------------------------------------ util
     def _init_state(self, batch_size: int):
         return self.model.init_decode_state(
             batch_size, self.max_len, quantized=self.quant.quantize_kv)
 
-    def _resolve_burst(self, burst_len: Optional[int]) -> int:
-        k = self.burst_len if burst_len is None else int(burst_len)
+    def _resolve_burst(self, burst_len: Optional[Union[int, str]]
+                       ) -> Union[int, str]:
+        """Resolve a call-site burst length: an int cap, or the sentinel
+        ``"auto"`` (serve puts the cap under :class:`AdaptiveBurst`)."""
+        k = self.burst_len if burst_len is None else burst_len
+        if isinstance(k, str):
+            if k == "auto":
+                return "auto"
+            raise ValueError(
+                f"burst_len must be an int ≥ 1 or 'auto', got {k!r}")
+        k = int(k)
         if k < 1:
             raise ValueError(f"burst_len must be ≥ 1, got {k}")
         return k
+
+    def _burst_controller(self, K: Union[int, str]
+                          ) -> Optional[AdaptiveBurst]:
+        """An :class:`AdaptiveBurst` when ``K == "auto"``, else None."""
+        if K != "auto":
+            return None
+        start = self.burst_len if isinstance(self.burst_len, int) else 8
+        return AdaptiveBurst(start=start, max_burst=AUTO_MAX_BURST)
 
     @staticmethod
     def _beam_gather_state(state: Dict[str, Any], idx: jax.Array):
@@ -276,16 +347,11 @@ class ServingEngine:
 
         Padding rows replay row 0 — their results are discarded because
         ``_splice_rows`` gives them out-of-range destinations — so prefill
-        compiles one program per pow2 width, not per admission-group size.
-        Returns ``(logits, sub_state, width)``.
+        compiles one program per pow2 width, not per admission-group size
+        (``scheduler.pad_rows_pow2``, the contract shared with the fused
+        path's ``plan_admission``).  Returns ``(logits, sub_state, width)``.
         """
-        n, enc_len = src_rows.shape
-        width = next_pow2(n)
-        if width > n:
-            pad_r = np.broadcast_to(src_rows[0], (width - n, enc_len))
-            src_rows = np.concatenate([src_rows, pad_r], axis=0)
-            len_rows = np.concatenate(
-                [len_rows, np.broadcast_to(len_rows[0], (width - n,))])
+        src_rows, len_rows, width = pad_rows_pow2(src_rows, len_rows)
         sub = self.model.init_decode_state(
             width, self.max_len, quantized=self.quant.quantize_kv)
         logits, sub = self._prefill(
@@ -317,9 +383,10 @@ class ServingEngine:
             self._burst_jits[width] = fn
         return fn
 
-    def _make_greedy_burst(self, width: int) -> Callable:
-        """Jitted ``while_loop`` running up to ``steps_cap ≤ width`` greedy
-        decode steps on device.
+    def _greedy_while(self, width: int) -> Callable:
+        """The greedy burst ``while_loop`` body, shared (un-jitted) by the
+        plain and fused-admission burst programs so the token-identity-
+        critical math exists exactly once.
 
         Carry: step counter, current tokens, per-row ``remaining`` budgets,
         decode state (KV cache updated in place each step), and a
@@ -357,6 +424,58 @@ class ServingEngine:
             step, tokens, remaining, state, buf = jax.lax.while_loop(
                 cond, body, carry)
             return tokens, remaining, state, buf, step
+
+        return burst
+
+    def _make_greedy_burst(self, width: int) -> Callable:
+        """Jitted ``while_loop`` running up to ``steps_cap ≤ width`` greedy
+        decode steps on device (see :meth:`_greedy_while`)."""
+        donate = (1, 4) if self._donate_state else ()
+        return jax.jit(self._greedy_while(width), donate_argnums=donate)
+
+    def _fused_greedy_burst_fn(self, width: int) -> Callable:
+        fn = self._fused_burst_jits.get(width)
+        if fn is None:
+            fn = self._make_fused_greedy_burst(width)
+            self._fused_burst_jits[width] = fn
+        return fn
+
+    def _make_fused_greedy_burst(self, width: int) -> Callable:
+        """Greedy burst with the admission round folded into the program.
+
+        Prologue, before the shared :meth:`_greedy_while` loop:
+
+        1. encode the padded admitted sources **inside the program**
+           (``encdec.encode_cross_kv``) — no separate prefill dispatch;
+        2. reset the cursors of dead rows (``remaining == 0``: finished or
+           never occupied), replacing the host-dispatched ``free_slots``
+           call the unfused path paid between bursts;
+        3. splice the encoded cross-K/V into the admitted rows and zero
+           their cursors (``encdec.splice_prefill``) — the self-attention
+           cache rows need no copy, length masking hides every stale
+           position exactly;
+        4. seed the admitted rows' current token with BOS.
+
+        The loop's first iteration then runs the BOS decode step for the
+        admitted rows — the exact computation the unfused path ran as a
+        separate prefill — while mid-flight rows take their next ordinary
+        step in the same fused grid.  ``adm_rows`` entries ≥ n_slots are
+        padding (dropped by scatter semantics), so the program specializes
+        only on the pow2 admission width, never the admitted count.
+        """
+        model, quant = self.model, self.quant
+        loop = self._greedy_while(width)
+
+        def burst(params, tokens, remaining, steps_cap, state,
+                  adm_src, adm_lens, adm_rows):
+            ck, cv, slens = model.encode_cross_kv(
+                params, {"src_tokens": adm_src, "src_lengths": adm_lens},
+                quant=quant)
+            state = dict(state)
+            state["cache"] = kvc.free_inactive(state["cache"], remaining > 0)
+            state = model.splice_prefill(state, ck, cv, slens, adm_rows)
+            tokens = tokens.at[adm_rows].set(0, mode="drop")       # BOS
+            return loop(params, tokens, remaining, steps_cap, state)
 
         donate = (1, 4) if self._donate_state else ()
         return jax.jit(burst, donate_argnums=donate)
@@ -459,8 +578,10 @@ class ServingEngine:
             self._beam_serve_jits[(width, beam)] = fn
         return fn
 
-    def _make_beam_serve_burst(self, width: int, beam: int) -> Callable:
-        """Continuous-batching beam burst: ``_make_beam_burst``'s body with
+    def _beam_serve_while(self, width: int, beam: int) -> Callable:
+        """Continuous-batching beam burst loop (un-jitted, shared by the
+        plain and fused-admission burst programs):
+        ``_make_beam_burst``'s body with
         **per-group** lifecycle masks, so requests at different stages of
         their budgets share one decode grid.
 
@@ -517,6 +638,60 @@ class ServingEngine:
                 jax.lax.while_loop(cond, body, carry)
             return tokens, scores, finished, remaining, comp, state, buf, step
 
+        return burst
+
+    def _make_beam_serve_burst(self, width: int, beam: int) -> Callable:
+        donate = (1, 6) if self._donate_state else ()
+        return jax.jit(self._beam_serve_while(width, beam),
+                       donate_argnums=donate)
+
+    def _fused_beam_serve_burst_fn(self, width: int, beam: int) -> Callable:
+        fn = self._fused_beam_serve_jits.get((width, beam))
+        if fn is None:
+            fn = self._make_fused_beam_serve_burst(width, beam)
+            self._fused_beam_serve_jits[(width, beam)] = fn
+        return fn
+
+    def _make_fused_beam_serve_burst(self, width: int, beam: int) -> Callable:
+        """Beam-group burst with the admission round folded in —
+        **encode-once** prefill.
+
+        The prologue encodes each admitted source exactly once
+        (``adm_src`` holds one row per admitted *request*, not per beam
+        row) and ``encdec.splice_prefill(group=beam)`` broadcasts the
+        memory/cross-KV across the group's ``beam`` rows — the unfused
+        side-batch tiled the source ``beam`` times through the encoder for
+        bit-identical rows, a ``beam×`` FLOP tax.  Dead rows' cursors are
+        reset in-program (replacing the host-dispatched ``free_groups``),
+        admitted rows get BOS tokens, and the shared group-masked loop
+        runs.  The host seeds the admitted groups' scores as
+        ``[0, -1e30, …]`` and ``finished = False`` (uploaded with the
+        per-burst score/finished round-trip it already pays), which makes
+        the shared beam step's first iteration reproduce
+        ``generate_beam``'s first step exactly: every candidate outside
+        row 0 carries score ``-1e30 + logprob`` and can never enter the
+        top-k, and flat top-k tie-breaking prefers row 0's candidates —
+        so the group's first tokens are the top-``beam`` tokens of the
+        beam-0 logits, at the beam-0 log-probs.
+        """
+        model, quant = self.model, self.quant
+        loop = self._beam_serve_while(width, beam)
+
+        def burst(params, tokens, scores, finished, remaining, steps_cap,
+                  state, adm_src, adm_lens, adm_bases):
+            ck, cv, slens = model.encode_cross_kv(
+                params, {"src_tokens": adm_src, "src_lengths": adm_lens},
+                quant=quant)
+            live = jnp.repeat(remaining > 0, beam)                 # (R,)
+            state = dict(state)
+            state["cache"] = kvc.free_inactive(state["cache"], live)
+            state = model.splice_prefill(state, ck, cv, slens, adm_bases,
+                                         group=beam)
+            rows = kvc.group_rows(jnp.asarray(adm_bases, jnp.int32), beam)
+            tokens = tokens.at[rows].set(0, mode="drop")           # BOS
+            return loop(params, tokens, scores, finished, remaining,
+                        steps_cap, state)
+
         donate = (1, 6) if self._donate_state else ()
         return jax.jit(burst, donate_argnums=donate)
 
@@ -525,6 +700,8 @@ class ServingEngine:
                  max_new_tokens: int = 64,
                  burst_len: Optional[int] = None) -> GenerationResult:
         K = self._resolve_burst(burst_len)
+        if K == "auto":
+            K = 8      # adaptation targets serve(); static batches use a mid cap
         burst = self._greedy_burst_fn(next_pow2(K))
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         B = next(iter(batch.values())).shape[0]
@@ -597,9 +774,10 @@ class ServingEngine:
               prefill_token_budget: Optional[int] = None,
               admit_min_free: int = 1,
               pad_to_multiple: int = 8,
-              burst_len: Optional[int] = None,
+              burst_len: Optional[Union[int, str]] = None,
               beam: Optional[int] = None,
-              alpha: float = 0.6) -> ServeResult:
+              alpha: float = 0.6,
+              fused_admission: bool = True) -> ServeResult:
         """Continuous-batching decode over a request stream.
 
         ``requests`` may be ``Sentence``s, raw token arrays, or ``Request``
@@ -634,6 +812,21 @@ class ServingEngine:
         values amortize prefill dispatches at a small utilization/latency
         cost; 1 = refill immediately).  The last stragglers are always
         admitted.
+
+        ``fused_admission=True`` (default) folds each admission round into
+        the burst program — a serve round is ONE jitted dispatch and one
+        device→host sync, admitted or not, and ``prefill_dispatches``
+        stays 0; ``False`` keeps the PR 3 behaviour (separate prefill
+        dispatch + first-token drain per admission round) as the measured
+        baseline.  Token streams are identical either way; with fusion the
+        first token of an admitted request is *observed* one burst edge
+        later (it is emitted by the burst's first step, not by a prefill
+        drain), which is the latency grain the queueing model
+        ``streams.simulate_continuous(fused_admission=...)`` mirrors.
+
+        ``burst_len="auto"`` lets :class:`burst_control.AdaptiveBurst`
+        move the step cap between bursts (pow2 values under one compiled
+        ring-width bucket, so adapting never recompiles).
         """
         if beam is not None:
             return self._serve_beam(
@@ -641,17 +834,25 @@ class ServingEngine:
                 max_new_tokens=max_new_tokens,
                 prefill_token_budget=prefill_token_budget,
                 admit_min_free=admit_min_free,
-                pad_to_multiple=pad_to_multiple, burst_len=burst_len)
+                pad_to_multiple=pad_to_multiple, burst_len=burst_len,
+                fused_admission=fused_admission)
         K = self._resolve_burst(burst_len)
+        ctrl = self._burst_controller(K)
         reqs = self._as_requests(requests, max_new_tokens)
         if not reqs:
             return ServeResult(requests=[], n_slots=n_slots, decode_steps=0,
                                busy_slot_steps=0, prefill_rounds=0,
-                               wall_s=0.0, host_syncs=0, burst_len=K)
+                               wall_s=0.0, host_syncs=0,
+                               burst_len=ctrl.k if ctrl else K,
+                               fused_admission=fused_admission,
+                               auto_burst=ctrl is not None)
         if max(r.max_new_tokens for r in reqs) > self.max_len:
             raise ValueError("a request's max_new_tokens exceeds the "
                              f"engine KV capacity {self.max_len}")
-        burst = self._greedy_burst_fn(next_pow2(K))
+        width = next_pow2(ctrl.max_burst if ctrl else K)
+        burst = self._greedy_burst_fn(width)
+        fused_burst = (self._fused_greedy_burst_fn(width)
+                       if fused_admission else None)
         m = pad_to_multiple
         enc_len = max(r.n_src_tokens for r in reqs)
         enc_len = ((enc_len + m - 1) // m) * m
@@ -671,7 +872,10 @@ class ServingEngine:
         busy_slot_steps = 0
         prefill_rounds = 0
         host_syncs = 0
-        cap = jnp.asarray(K, jnp.int32)
+        prefill_dispatches = 0
+        encoder_tokens = 0
+        # fixed caps upload the device scalar once; auto rebuilds per round
+        cap_fixed = None if ctrl else jnp.asarray(K, jnp.int32)
 
         def prefill_into_slots(admitted, state, tokens):
             """Prefill newly admitted requests and splice them in."""
@@ -700,14 +904,29 @@ class ServingEngine:
             return state, tokens
 
         while not sched.all_done:
+            plan = None
             admitted = []
-            if sched.n_free >= min(max(admit_min_free, 1), sched.n_waiting,
-                                   n_slots) and sched.n_waiting:
+            want_admit = (sched.n_waiting and sched.n_free >=
+                          min(max(admit_min_free, 1), sched.n_waiting,
+                              n_slots))
+            if want_admit and fused_admission:
+                # admission rides the NEXT burst dispatch: the plan's padded
+                # sources/destinations become burst-program inputs
+                plan = sched.plan_admission(now(), step=decode_steps,
+                                            enc_len=enc_len,
+                                            oob_row=n_slots)
+                if plan.n_admitted:
+                    prefill_rounds += 1
+                encoder_tokens += len(plan.requests) * enc_len
+            elif want_admit:
                 admitted = sched.admit(now(), step=decode_steps)
-            if admitted:
-                prefill_rounds += 1
-                host_syncs += 1           # first-token drain syncs the host
-                state, tokens = prefill_into_slots(admitted, state, tokens)
+                if admitted:
+                    prefill_rounds += 1
+                    prefill_dispatches += 1
+                    host_syncs += 1   # first-token drain syncs the host
+                    encoder_tokens += len(admitted) * enc_len
+                    state, tokens = prefill_into_slots(admitted, state,
+                                                       tokens)
             if not sched.slot_map:
                 continue        # every admitted request finished on token 1
 
@@ -715,10 +934,20 @@ class ServingEngine:
             remaining = np.zeros((n_slots,), np.int32)
             for slot, req in sched.slot_map.items():
                 remaining[slot] = req.max_new_tokens - len(req.tokens)
-            tokens, _, state, buf, steps_dev = burst(
-                self.params, tokens, jnp.asarray(remaining), cap, state)
+            cap = jnp.asarray(ctrl.k, jnp.int32) if ctrl else cap_fixed
+            t_dispatch = time.perf_counter()
+            if plan is not None and plan.width:
+                tokens, _, state, buf, steps_dev = fused_burst(
+                    self.params, tokens, jnp.asarray(remaining), cap, state,
+                    jnp.asarray(plan.src_tokens),
+                    jnp.asarray(plan.src_lengths),
+                    jnp.asarray(plan.base_rows))
+            else:
+                tokens, _, state, buf, steps_dev = burst(
+                    self.params, tokens, jnp.asarray(remaining), cap, state)
             buf_host = np.asarray(buf)         # ONE host sync per burst
             steps = int(steps_dev)
+            burst_wall = time.perf_counter() - t_dispatch
             host_syncs += 1
             step_base = decode_steps
             decode_steps += steps
@@ -727,7 +956,10 @@ class ServingEngine:
             # latencies are observed at the burst edge (burst granularity)
             t = now()
             freed = []
+            wasted_row_steps = 0
             for slot, req in list(sched.slot_map.items()):
+                if req.first_token_s is None:
+                    req.first_token_s = t   # fused: emitted by this burst
                 used = steps
                 for s in range(steps):
                     tok = int(buf_host[slot, s])
@@ -743,7 +975,12 @@ class ServingEngine:
                                                    step=step_base + s + 1))
                         break
                 busy_slot_steps += used
-            if freed:
+                wasted_row_steps += steps - used
+            if ctrl:
+                ctrl.observe(burst_wall, steps, wasted_row_steps, n_slots)
+            if freed and not fused_admission:
+                # fused mode resets dead cursors inside the next admission
+                # burst's prologue (kv_cache.free_inactive) — no dispatch
                 state = dict(state)
                 state["cache"] = kvc.free_slots(
                     state["cache"], np.asarray(freed, np.int32))
@@ -752,7 +989,12 @@ class ServingEngine:
                            decode_steps=decode_steps,
                            busy_slot_steps=busy_slot_steps,
                            prefill_rounds=prefill_rounds, wall_s=now(),
-                           host_syncs=host_syncs, burst_len=K)
+                           host_syncs=host_syncs,
+                           burst_len=ctrl.k if ctrl else K,
+                           prefill_dispatches=prefill_dispatches,
+                           encoder_tokens=encoder_tokens,
+                           fused_admission=fused_admission,
+                           auto_burst=ctrl is not None)
 
     # ------------------------------------------------- continuous beam search
     def _serve_beam(self, requests: Sequence[Any], *, n_slots: int,
@@ -760,7 +1002,8 @@ class ServingEngine:
                     max_new_tokens: Union[int, Sequence[int]],
                     prefill_token_budget: Optional[int],
                     admit_min_free: int, pad_to_multiple: int,
-                    burst_len: Optional[int]) -> ServeResult:
+                    burst_len: Optional[Union[int, str]],
+                    fused_admission: bool = True) -> ServeResult:
         """Continuous beam search: beam-group slot lifecycle.
 
         Structure mirrors the greedy ``serve`` loop, at group granularity:
@@ -782,10 +1025,19 @@ class ServingEngine:
         through float32/bool numpy between bursts — bit-exact, which is
         what keeps the output token-identical to per-request
         :meth:`generate_beam` at every ``burst_len``.
+
+        With ``fused_admission=True`` the admission round rides the burst
+        program (one dispatch per round): each source is encoded **once**
+        and broadcast across its group's rows, group scores are seeded
+        host-side as ``[0, -1e30, …]`` so the burst's first step takes the
+        top-k over beam-0 logits exactly as ``generate_beam`` does, and
+        the group's token history starts empty (the first tokens arrive
+        with the burst drain, in final beam order).
         """
         if beam < 1:
             raise ValueError(f"beam must be ≥ 1, got {beam}")
         K = self._resolve_burst(burst_len)
+        ctrl = self._burst_controller(K)
         reqs = self._as_requests(requests, max_new_tokens)
         n_groups = n_slots // beam
         if n_groups < 1:
@@ -795,12 +1047,17 @@ class ServingEngine:
         if not reqs:
             return ServeResult(requests=[], n_slots=R, decode_steps=0,
                                busy_slot_steps=0, prefill_rounds=0,
-                               wall_s=0.0, host_syncs=0, burst_len=K,
-                               beam=beam)
+                               wall_s=0.0, host_syncs=0,
+                               burst_len=ctrl.k if ctrl else K,
+                               beam=beam, fused_admission=fused_admission,
+                               auto_burst=ctrl is not None)
         if max(r.max_new_tokens for r in reqs) > self.max_len:
             raise ValueError("a request's max_new_tokens exceeds the "
                              f"engine KV capacity {self.max_len}")
-        burst = self._beam_serve_burst_fn(next_pow2(K), beam)
+        width = next_pow2(ctrl.max_burst if ctrl else K)
+        burst = self._beam_serve_burst_fn(width, beam)
+        fused_burst = (self._fused_beam_serve_burst_fn(width, beam)
+                       if fused_admission else None)
         m = pad_to_multiple
         enc_len = max(r.n_src_tokens for r in reqs)
         enc_len = ((enc_len + m - 1) // m) * m
@@ -825,7 +1082,10 @@ class ServingEngine:
         busy_slot_steps = 0
         prefill_rounds = 0
         host_syncs = 0
-        cap = jnp.asarray(K, jnp.int32)
+        prefill_dispatches = 0
+        encoder_tokens = 0
+        # fixed caps upload the device scalar once; auto rebuilds per round
+        cap_fixed = None if ctrl else jnp.asarray(K, jnp.int32)
 
         def finalize(req: Request, base: int, t: float, step: int) -> int:
             """Pick the group's winner (same helper ``generate_beam``
@@ -889,31 +1149,68 @@ class ServingEngine:
             return state, tokens
 
         while not sched.all_done:
+            plan = None
             admitted = []
-            if sched.n_free >= min(max(admit_min_free, 1), sched.n_waiting,
-                                   n_groups) and sched.n_waiting:
+            want_admit = (sched.n_waiting and sched.n_free >=
+                          min(max(admit_min_free, 1), sched.n_waiting,
+                              n_groups))
+            if want_admit and fused_admission:
+                # encode-once fused admission: the plan carries ONE source
+                # row per request; the burst program broadcasts it across
+                # the group's rows.  Host seeds the group's beam state so
+                # the shared step's first iteration IS generate_beam's
+                # first step (see _make_fused_beam_serve_burst).
+                plan = sched.plan_admission(now(), step=decode_steps,
+                                            enc_len=enc_len, oob_row=R)
+                if plan.n_admitted:
+                    prefill_rounds += 1
+                encoder_tokens += len(plan.requests) * enc_len
+                for r in plan.requests:
+                    base = r.slot
+                    scores_np[base] = 0.0
+                    scores_np[base + 1:base + beam] = BEAM_SEED_NEG
+                    finished_np[base:base + beam] = False
+                    histories[base] = []
+                    budget_left[base] = r.max_new_tokens
+            elif want_admit:
                 admitted = sched.admit(now(), step=decode_steps)
-            if admitted:
-                prefill_rounds += 1
-                host_syncs += 1       # first-token drain syncs the host
-                state, tokens = prefill_groups(admitted, state, tokens)
+                if admitted:
+                    prefill_rounds += 1
+                    prefill_dispatches += 1
+                    host_syncs += 1   # first-token drain syncs the host
+                    # the unfused side batch tiles each source beam× through
+                    # the encoder — the FLOP tax encode-once fusion removes
+                    encoder_tokens += len(admitted) * beam * enc_len
+                    state, tokens = prefill_groups(admitted, state, tokens)
             if not sched.slot_map:
                 continue    # every admitted group finished on token 1
 
             remaining_in = np.zeros((n_groups,), np.int32)
             for base in sched.slot_map:
                 remaining_in[base // beam] = budget_left[base]
-            (tokens, scores_dev, finished_dev, remaining_dev, comp, state,
-             buf, steps_dev) = burst(
-                self.params, tokens, jnp.asarray(scores_np),
-                jnp.asarray(finished_np), jnp.asarray(remaining_in), cap,
-                state)
+            cap = jnp.asarray(ctrl.k, jnp.int32) if ctrl else cap_fixed
+            t_dispatch = time.perf_counter()
+            if plan is not None and plan.width:
+                (tokens, scores_dev, finished_dev, remaining_dev, comp,
+                 state, buf, steps_dev) = fused_burst(
+                    self.params, tokens, jnp.asarray(scores_np),
+                    jnp.asarray(finished_np), jnp.asarray(remaining_in),
+                    cap, state, jnp.asarray(plan.src_tokens),
+                    jnp.asarray(plan.src_lengths),
+                    jnp.asarray(plan.base_rows))
+            else:
+                (tokens, scores_dev, finished_dev, remaining_dev, comp,
+                 state, buf, steps_dev) = burst(
+                    self.params, tokens, jnp.asarray(scores_np),
+                    jnp.asarray(finished_np), jnp.asarray(remaining_in),
+                    cap, state)
             buf_host = np.asarray(buf)         # ONE host sync per burst
             comp_host = np.asarray(comp)
             scores_np = np.array(scores_dev, np.float32)
             finished_np = np.array(finished_dev, bool)
             remaining_out = np.asarray(remaining_dev)
             steps = int(steps_dev)
+            burst_wall = time.perf_counter() - t_dispatch
             host_syncs += 1
             step_base = decode_steps
             decode_steps += steps
@@ -923,9 +1220,12 @@ class ServingEngine:
             # columns, finalize groups that finished or spent their budget
             t = now()
             freed = []
+            wasted_row_steps = 0
             for base, req in list(sched.slot_map.items()):
                 gi = base // beam
                 s_g = int(remaining_in[gi] - remaining_out[gi])
+                if req.first_token_s is None:
+                    req.first_token_s = t   # fused: emitted by this burst
                 if s_g:
                     local = comp_host[base:base + beam] - base
                     hist = [c[local] for c in histories[base]]
@@ -934,11 +1234,16 @@ class ServingEngine:
                     histories[base] = hist
                     budget_left[base] -= s_g
                 busy_slot_steps += s_g * beam
+                wasted_row_steps += (steps - s_g) * beam
                 if finished_np[base:base + beam].all() or \
                         budget_left[base] <= 0:
                     freed.append(finalize(req, base, t,
                                           step=step_base + s_g))
-            if freed:
+            if ctrl:
+                ctrl.observe(burst_wall, steps, wasted_row_steps, R)
+            if freed and not fused_admission:
+                # fused mode resets dead cursors inside the next admission
+                # burst's prologue (kv_cache.free_inactive) — no dispatch
                 state = dict(state)
                 state["cache"] = kvc.free_groups(
                     state["cache"], np.asarray(freed, np.int32), beam)
@@ -947,7 +1252,12 @@ class ServingEngine:
                            decode_steps=decode_steps,
                            busy_slot_steps=busy_slot_steps,
                            prefill_rounds=prefill_rounds, wall_s=now(),
-                           host_syncs=host_syncs, burst_len=K, beam=beam)
+                           host_syncs=host_syncs,
+                           burst_len=ctrl.k if ctrl else K, beam=beam,
+                           prefill_dispatches=prefill_dispatches,
+                           encoder_tokens=encoder_tokens,
+                           fused_admission=fused_admission,
+                           auto_burst=ctrl is not None)
 
     # ------------------------------------------------------------------ beam
     def generate_beam(self, batch: Dict[str, np.ndarray], *, beam: int = 4,
@@ -960,6 +1270,8 @@ class ServingEngine:
         history once per burst via the composed beam permutation.
         """
         K = self._resolve_burst(burst_len)
+        if K == "auto":
+            K = 8      # adaptation targets serve(); static batches use a mid cap
         bfn = self._beam_burst_fn(next_pow2(K), beam)
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         B = next(iter(batch.values())).shape[0]

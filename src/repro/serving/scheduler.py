@@ -36,7 +36,7 @@ from typing import Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.data.sorting import make_batches, padding_stats
+from repro.data.sorting import make_batches, next_pow2, padding_stats
 from repro.data.synthetic import Sentence, pad_batch
 
 
@@ -125,6 +125,58 @@ class Request:
         return self.finish_s - self.arrival_s
 
 
+def pad_rows_pow2(src: np.ndarray, lens: np.ndarray
+                  ) -> "tuple[np.ndarray, np.ndarray, int]":
+    """Pad an admission batch to the next power-of-two row count.
+
+    Padding rows replay row 0 — their results are discarded downstream
+    (out-of-range destination sentinels; jax scatter drop semantics) — so
+    prefill programs compile one variant per pow2 width, never per
+    admission-group size.  The ONE padding contract shared by the fused
+    (``ContinuousScheduler.plan_admission``) and unfused
+    (``ServingEngine._prefill_padded``) admission paths: both must
+    specialize on identical device shapes or the compile-cache bound and
+    the fused/unfused identity guarantee silently break.
+    Returns ``(src, lens, width)``.
+    """
+    n = src.shape[0]
+    width = next_pow2(n)
+    if width > n:
+        src = np.concatenate(
+            [src, np.broadcast_to(src[0], (width - n,) + src.shape[1:])],
+            axis=0)
+        lens = np.concatenate(
+            [lens, np.broadcast_to(lens[0], (width - n,))])
+    return src, lens, width
+
+
+@dataclasses.dataclass
+class AdmissionPlan:
+    """One admission round, shaped for the fused decode-burst program.
+
+    The fused-admission engine feeds admissions to the device as *burst
+    program inputs* instead of a separate prefill dispatch, so the
+    padding contract is device-shaped and compile-stable: sources are
+    right-padded to ``enc_len`` columns and the batch is padded to a
+    power-of-two ``width`` (padding rows replay row 0; their ``base_rows``
+    entry is the out-of-range sentinel ``oob_row``, so every scatter
+    inside the burst program drops them).  Zero-budget requests never
+    reach the device — they are finished at admission and reported in
+    ``released``.
+    """
+
+    requests: List[Request]            # admitted, budget > 0, slot order
+    released: List[Request]            # zero-budget: finished at admission
+    src_tokens: np.ndarray             # (width, enc_len) int32
+    src_lengths: np.ndarray            # (width,) int32
+    base_rows: np.ndarray              # (width,) int32; padding → oob_row
+    width: int                         # pow2 batch width (0 = no device work)
+
+    @property
+    def n_admitted(self) -> int:
+        return len(self.requests) + len(self.released)
+
+
 class ContinuousScheduler:
     """Admission control + slot lifecycle for continuous batching.
 
@@ -146,6 +198,10 @@ class ContinuousScheduler:
     ``prefill_token_budget`` is denominated in prefilled **row**-tokens:
     a group prefill replicates the source across its rows, so a request
     charges ``group_size × n_src_tokens`` against the round's budget.
+    (Fused encode-once admission actually *encodes* the source only once
+    per group, but the budget deliberately keeps the row-token
+    denomination so admission pacing — and therefore the token stream —
+    is identical between the fused and unfused engines.)
     """
 
     def __init__(self, n_slots: int, *, group_size: int = 1,
@@ -213,6 +269,41 @@ class ContinuousScheduler:
             used += cost
             admitted.append(req)
         return admitted
+
+    def plan_admission(self, now: float = 0.0, *, step: Optional[int] = None,
+                       enc_len: int, oob_row: int) -> AdmissionPlan:
+        """Admit one round and shape it for the fused burst program.
+
+        Runs :meth:`admit`, finishes zero-budget requests on the spot
+        (their output is empty by definition; they need no device work),
+        and packs the remainder into the :class:`AdmissionPlan` padding
+        contract: sources right-padded to ``enc_len``, batch padded to a
+        power-of-two width with row-0 replays, destinations padded with
+        the ``oob_row`` sentinel so in-program scatters drop them.
+        """
+        live: List[Request] = []
+        released: List[Request] = []
+        for req in self.admit(now, step=step):
+            if req.max_new_tokens <= 0:
+                req.first_token_s = now          # observed: empty output
+                self.release(req, now, step=step)
+                released.append(req)
+            else:
+                live.append(req)
+        if not live:
+            return AdmissionPlan(
+                requests=[], released=released, width=0,
+                src_tokens=np.zeros((0, enc_len), np.int32),
+                src_lengths=np.zeros((0,), np.int32),
+                base_rows=np.zeros((0,), np.int32))
+        src, lens = pad_batch([r.src for r in live], length=enc_len)
+        src, lens, width = pad_rows_pow2(src, lens)
+        base = np.full((width,), oob_row, np.int32)
+        base[:len(live)] = [r.slot for r in live]
+        return AdmissionPlan(requests=live, released=released,
+                             src_tokens=np.ascontiguousarray(src),
+                             src_lengths=np.ascontiguousarray(lens),
+                             base_rows=base, width=width)
 
     def release(self, req: Request, now: float = 0.0, *,
                 step: Optional[int] = None) -> int:

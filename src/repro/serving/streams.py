@@ -16,11 +16,18 @@ scaling the paper shows in Figure 6/8 (wall-clock on 1 CPU core cannot).
 (``ServingEngine.serve``): it predicts the decode-grid utilization gap
 between static and continuous batching from the decode-length distribution
 alone — group-granular when ``beam > 1``, where a request holds ``beam``
-rows and the grid has correspondingly fewer refillable servers.
+rows and the grid has correspondingly fewer refillable servers.  It runs
+at burst granularity and models **fused admission** (the engine default):
+prefill is no longer a separate service event, so an admission round costs
+zero extra host events and a request's first token is observed at its
+admitting burst's edge — set ``fused_admission=False`` for the unfused
+(separate-prefill-dispatch) baseline the host-event counts are compared
+against.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 import time
@@ -85,17 +92,34 @@ class ParallelStreams:
 
 def simulate_continuous(decode_lengths: Sequence[int], n_slots: int,
                         *, static_batch: Optional[int] = None,
-                        beam: int = 1) -> Dict:
+                        beam: int = 1, burst_len: int = 1,
+                        fused_admission: bool = True) -> Dict:
     """Deterministic slot-refill model of continuous vs static batching.
 
     Cost unit = one decode step of one slot row (the decode grid is computed
     for every slot whether or not it holds a live request).  Continuous
     batching finishes a request after exactly ``decode_lengths[i]`` steps in
-    its slot and refills immediately; static batching (``static_batch``
-    *requests* per batch, FIFO) holds every row until the *longest* request
-    in the batch finishes.  Returns slot-steps and utilization for both, the
-    analogue of the paper's Fig. 6 queueing model for the refill engine —
-    used by ``benchmarks/bench_continuous.py`` and the scheduler tests.
+    its slot and refills at the next burst edge; static batching
+    (``static_batch`` *requests* per batch, FIFO) holds every row until the
+    *longest* request in the batch finishes.  Returns slot-steps and
+    utilization for both, the analogue of the paper's Fig. 6 queueing model
+    for the refill engine — used by ``benchmarks/bench_continuous.py`` and
+    the scheduler tests.
+
+    The continuous side is an **event simulation at burst granularity**:
+    admission and release happen only at burst edges (every ``burst_len``
+    grid steps, early-exiting when every server goes idle), mirroring the
+    decode-burst engine.  ``fused_admission=True`` (the engine's default)
+    models prefill folded into the burst program: an admission round costs
+    **no separate host event**, a request occupies its server for exactly
+    ``decode_lengths[i]`` in-burst steps (the first token is emitted by the
+    burst's first step), and its first token is *observed* at the admitting
+    burst's edge.  ``fused_admission=False`` models the PR 3 engine: each
+    admission round is a separate prefill service event (``prefill_events``,
+    counted in ``host_events``) that emits the first token at the admission
+    edge, leaving ``decode_lengths[i] - 1`` in-burst steps.  The fused/
+    unfused gap in ``host_events`` at equal token output is exactly what
+    ``ServeResult.host_syncs`` measures on the real engine.
 
     ``beam > 1`` models **group-granular** queueing (continuous beam
     serving): a request occupies a whole group of ``beam`` rows, so the
@@ -109,19 +133,71 @@ def simulate_continuous(decode_lengths: Sequence[int], n_slots: int,
     lens = [int(x) for x in decode_lengths]
     if beam < 1:
         raise ValueError(f"beam must be ≥ 1, got {beam}")
+    if burst_len < 1:
+        raise ValueError(f"burst_len must be ≥ 1, got {burst_len}")
     n_groups = n_slots // beam
     if n_groups < 1:
         raise ValueError(f"{n_slots} rows cannot hold a beam-{beam} group")
     idle_rows = n_slots - n_groups * beam      # stranded by non-dividing beam
     useful = sum(lens) * beam
 
-    # --- continuous: each *group* is a server; a request occupies all
-    # `beam` of its rows for `len` steps, then the group is refilled
-    free = np.zeros(n_groups)
-    for ln in lens:                      # FIFO admission
-        s = int(np.argmin(free))
-        free[s] += ln
-    cont_steps = int(free.max())         # decode steps of the shared grid
+    # --- continuous: burst-granular event simulation over group servers
+    waiting = collections.deque(enumerate(lens))
+    free = list(range(n_groups))
+    remaining: Dict[int, int] = {}             # server → in-burst steps left
+    server_req: Dict[int, int] = {}
+    first_token_step = [0] * len(lens)         # edge the first token drains
+    finish_step = [0] * len(lens)
+    steps = 0
+    host_events = 0
+    admission_events = 0
+    prefill_events = 0
+    while waiting or remaining:
+        admitted = False
+        released_now: List[int] = []
+        while waiting and free:
+            i, ln = waiting.popleft()
+            admitted = True
+            if ln <= 0:                        # zero budget: finished at
+                first_token_step[i] = steps    # admission, occupies nothing
+                finish_step[i] = steps
+                continue
+            g = free.pop(0)
+            if fused_admission:
+                remaining[g] = ln              # token 1 comes from the burst
+            else:
+                first_token_step[i] = steps    # prefill drains token 1 here
+                if ln == 1:
+                    finish_step[i] = steps     # done at the prefill itself
+                    released_now.append(g)
+                    continue
+                remaining[g] = ln - 1
+            server_req[g] = i
+        if admitted:
+            admission_events += 1
+            if not fused_admission:            # separate prefill dispatch +
+                prefill_events += 1            # first-token drain
+                host_events += 1
+        free.extend(released_now)              # groups freed at the prefill
+        free.sort()                            # edge refill only next round
+        if not remaining:
+            continue
+        k = min(burst_len, max(remaining.values()))    # burst early exit
+        steps += k
+        host_events += 1                       # the burst-edge drain
+        for g in list(remaining):
+            used = min(remaining[g], k)
+            remaining[g] -= used
+            i = server_req[g]
+            if fused_admission and not first_token_step[i]:
+                first_token_step[i] = steps    # observed at this edge
+            if remaining[g] == 0:
+                finish_step[i] = steps
+                del remaining[g]
+                del server_req[g]
+                free.append(g)
+        free.sort()
+    cont_steps = steps
     cont_grid = cont_steps * n_slots
 
     # --- static: batches of `static_batch` requests (each `beam` rows)
@@ -135,6 +211,7 @@ def simulate_continuous(decode_lengths: Sequence[int], n_slots: int,
         chunk = lens[i:i + bsz]
         static_steps += max(chunk)
         static_grid += max(chunk) * len(chunk) * beam
+    first = np.asarray(first_token_step, float)
     return {
         "useful_slot_steps": useful,
         "continuous_steps": cont_steps,
@@ -145,6 +222,14 @@ def simulate_continuous(decode_lengths: Sequence[int], n_slots: int,
         "beam": beam,
         "n_groups": n_groups,
         "idle_rows": idle_rows,
+        "burst_len": burst_len,
+        "fused_admission": fused_admission,
+        "host_events": host_events,
+        "admission_events": admission_events,
+        "prefill_events": prefill_events,
+        "first_token_steps_mean": float(first.mean()) if len(lens) else 0.0,
+        "first_token_steps_p95":
+            float(np.percentile(first, 95)) if len(lens) else 0.0,
     }
 
 

@@ -7,6 +7,14 @@ continuous-batching grid — must be **token-identical** to per-request
 group refill mid-decode.  A property layer locks down the scheduler's
 group invariants: no slot double-assignment, freed rows always multiples
 of ``beam``, every admitted request finishes exactly once.
+
+Fused admission (ISSUE 4): beam admissions ride the burst program with
+**encode-once** prefill — each admitted source is encoded once and its
+memory/cross-KV broadcast across the group's ``beam`` rows (the unfused
+path tiles it ``beam×`` through the encoder), and the group's first-step
+top-k comes out of the shared beam step via the ``[0, -1e30, …]`` score
+seed.  The fused-vs-unfused matrix below pins both paths to per-request
+``generate_beam`` and asserts the ``beam×`` encoder-token reduction.
 """
 
 import jax
@@ -106,6 +114,60 @@ def test_serve_beam_token_identical_to_generate_beam(quant, burst_len, beam):
     assert res.prefill_rounds >= 3
 
 
+@pytest.mark.parametrize("quant", ["fp", "int8"])
+@pytest.mark.parametrize("burst_len", [2, 7])
+@pytest.mark.parametrize("beam", BEAMS)
+def test_fused_vs_unfused_beam_identity(quant, burst_len, beam):
+    """Fused (encode-once, admission-in-burst) vs unfused (PR 3 tiled
+    side-batch prefill) beam serving: token-identical to each other and to
+    per-request generate_beam; the fused path dispatches no prefills and
+    pays ≥ beam× fewer encoder row-tokens."""
+    state = _module_state()
+    engine, requests = state["engines"][quant], state["requests"]
+    fused = engine.serve(requests, n_slots=3 * beam, max_new_tokens=BUDGETS,
+                         burst_len=burst_len, beam=beam)
+    unfused = engine.serve(requests, n_slots=3 * beam,
+                           max_new_tokens=BUDGETS, burst_len=burst_len,
+                           beam=beam, fused_admission=False)
+    want = _reference(quant, beam)
+    for i in range(len(requests)):
+        np.testing.assert_array_equal(fused.tokens_for(i), want[i])
+        np.testing.assert_array_equal(unfused.tokens_for(i), want[i])
+    assert fused.fused_admission and not unfused.fused_admission
+    assert fused.prefill_dispatches == 0
+    assert unfused.prefill_dispatches == unfused.prefill_rounds >= 3
+    # encode-once broadcast: the unfused side batch tiles each source
+    # beam× through the encoder (and also encodes the zero-budget request)
+    assert unfused.encoder_tokens >= beam * fused.encoder_tokens > 0
+    assert fused.host_syncs < unfused.host_syncs
+    assert all(r.first_token_s is not None for r in fused.requests)
+
+
+def test_fused_beam_zero_budget_only():
+    """All-zero-budget beam stream under fused admission: finished at
+    admission, nothing encoded, no decode steps."""
+    state = _module_state()
+    engine, requests = state["engines"]["fp"], state["requests"]
+    res = engine.serve(requests[:3], n_slots=4, max_new_tokens=0, beam=2)
+    assert all(r.status == "finished" and not r.tokens
+               for r in res.requests)
+    assert res.decode_steps == 0
+    assert res.prefill_dispatches == 0 and res.encoder_tokens == 0
+
+
+def test_serve_beam_auto_burst_identity():
+    """burst_len='auto' through the beam grid stays identical to the
+    per-request reference."""
+    state = _module_state()
+    engine, requests = state["engines"]["fp"], state["requests"]
+    res = engine.serve(requests, n_slots=4, max_new_tokens=BUDGETS,
+                       burst_len="auto", beam=2)
+    want = _reference("fp", 2)
+    for i in range(len(requests)):
+        np.testing.assert_array_equal(res.tokens_for(i), want[i])
+    assert res.auto_burst and res.prefill_dispatches == 0
+
+
 def test_mid_burst_group_finish():
     """Redefine eos_id to a token the model actually emits so whole groups
     finish *inside* a burst; outputs must still match the per-step path
@@ -125,15 +187,23 @@ def test_mid_burst_group_finish():
                          burst_len=1, beam=2)
     burst = eng.serve(requests, n_slots=4, max_new_tokens=8,
                       burst_len=8, beam=2)
+    # mid-burst group finish + same-burst-edge refill under UNFUSED
+    # admission must agree too (the refill prefill replays PR 3 exactly)
+    unfused = eng.serve(requests, n_slots=4, max_new_tokens=8,
+                        burst_len=8, beam=2, fused_admission=False)
     stopped_early = 0
     for i in range(len(requests)):
         np.testing.assert_array_equal(per_step.tokens_for(i), want[i])
         np.testing.assert_array_equal(burst.tokens_for(i), want[i])
+        np.testing.assert_array_equal(unfused.tokens_for(i), want[i])
         if len(want[i]) < 8:
             stopped_early += 1
     assert stopped_early > 0            # groups actually finished mid-run
     # bursts trade host syncs for frozen-group steps at burst edges
     assert burst.host_syncs < per_step.host_syncs
+    # 8 requests through 2 groups: groups freed mid-serve were refilled
+    assert burst.prefill_rounds >= 3 and burst.prefill_dispatches == 0
+    assert burst.host_syncs < unfused.host_syncs
 
 
 def test_serve_result_beam_group_aware():

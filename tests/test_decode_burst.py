@@ -1,7 +1,14 @@
 """Decode bursts (ISSUE 2): serve/generate/generate_beam fused into an
 on-device ``lax.while_loop`` must stay token-identical to the per-step
 path for every burst length — including mid-burst EOS, zero-budget
-requests, slot refill, and beam reordering."""
+requests, slot refill, and beam reordering.
+
+Fused admission (ISSUE 4): admissions ride the burst program — encode +
+cross-KV splice + first token happen inside the same jitted dispatch as
+the decode loop.  The identity matrix below pins fused output to both the
+unfused (PR 3, separate-prefill) path and per-request ``generate``, and
+``burst_len="auto"`` (the AdaptiveBurst controller) to the fixed-K
+output."""
 
 import jax
 import numpy as np
@@ -173,6 +180,82 @@ def test_burst_rejects_bad_length(setup):
         engine.serve(requests[:2], n_slots=2, burst_len=0)
     with pytest.raises(ValueError):
         ServingEngine(model, params, max_len=32, burst_len=0)
+
+
+@pytest.mark.parametrize("burst_len", BURST_LENS)
+def test_fused_admission_identity(setup, reference_outputs, burst_len):
+    """Fused admission (default) vs the PR 3 unfused path: token-identical
+    for K ∈ {1, 2, 7, 64} over heterogeneous budgets (incl. zero-budget)
+    with slot refill; the fused path dispatches zero host-side prefills
+    and never encodes the zero-budget request."""
+    cfg, model, params, requests, engine = setup
+    fused = engine.serve(requests, n_slots=3, max_new_tokens=BUDGETS,
+                         burst_len=burst_len)
+    unfused = engine.serve(requests, n_slots=3, max_new_tokens=BUDGETS,
+                           burst_len=burst_len, fused_admission=False)
+    for i in range(len(requests)):
+        np.testing.assert_array_equal(fused.tokens_for(i),
+                                      unfused.tokens_for(i))
+        np.testing.assert_array_equal(fused.tokens_for(i),
+                                      reference_outputs[i])
+    assert fused.fused_admission and not unfused.fused_admission
+    assert fused.prefill_dispatches == 0
+    assert unfused.prefill_dispatches == unfused.prefill_rounds >= 4
+    # the zero-budget request finishes at admission, unencoded
+    assert 0 < fused.encoder_tokens < unfused.encoder_tokens
+    if burst_len > 1:
+        # admission rounds no longer pay a separate prefill drain
+        assert fused.host_syncs < unfused.host_syncs
+    assert all(r.status == "finished" for r in fused.requests)
+    assert all(r.first_token_s is not None for r in fused.requests)
+
+
+def test_fused_zero_budget_only(setup):
+    """An all-zero-budget stream under fused admission: finished at
+    admission with empty outputs, no device work at all."""
+    cfg, model, params, requests, engine = setup
+    res = engine.serve(requests[:4], n_slots=2, max_new_tokens=0)
+    assert all(r.status == "finished" and not r.tokens
+               for r in res.requests)
+    assert all(r.first_token_s is not None for r in res.requests)
+    assert res.decode_steps == 0
+    assert res.prefill_dispatches == 0 and res.encoder_tokens == 0
+
+
+def test_adaptive_burst_controller_unit():
+    """AdaptiveBurst: pow2 caps in [1, max_burst], grows on zero waste,
+    shrinks when waste exceeds the estimated sync cost, burn-in ignored."""
+    from repro.serving.burst_control import AdaptiveBurst
+    ctrl = AdaptiveBurst(start=8, max_burst=32)
+    assert ctrl.k == 8 and ctrl.max_burst == 32
+    ctrl.observe(5.0, 8, 0, 4)               # burn-in (compile pass)
+    assert ctrl.k == 8
+    for _ in range(4):                       # no mid-burst waste → grow
+        ctrl.observe(0.08, 8, 0, 4)
+    assert ctrl.k == 32 and ctrl.grows >= 2
+    for _ in range(8):                       # waste ≫ sync cost → shrink
+        ctrl.observe(0.32, 32, 64, 4)
+    assert ctrl.k == 1 and ctrl.shrinks >= 5
+    # caps always pow2 and bounded
+    assert ctrl.max_burst == 32
+    with pytest.raises(ValueError):
+        AdaptiveBurst(max_burst=0)
+
+
+def test_serve_auto_burst_identity(setup, reference_outputs):
+    """burst_len='auto' (controller-paced caps under one compiled ring
+    bucket) stays token-identical to the fixed-K/per-request output."""
+    cfg, model, params, requests, engine = setup
+    res = engine.serve(requests, n_slots=3, max_new_tokens=BUDGETS,
+                       burst_len="auto")
+    for i in range(len(requests)):
+        np.testing.assert_array_equal(res.tokens_for(i),
+                                      reference_outputs[i])
+    assert res.auto_burst
+    k = res.burst_len
+    assert k >= 1 and (k & (k - 1)) == 0          # pow2 cap
+    with pytest.raises(ValueError):
+        engine.serve(requests[:2], n_slots=2, burst_len="bogus")
 
 
 @given(st.integers(min_value=1, max_value=11),

@@ -193,6 +193,74 @@ def test_simulate_continuous_skewed_gap():
     assert out["speedup_steps"] > 1.5
 
 
+def test_plan_admission_device_shapes():
+    """AdmissionPlan (ISSUE 4): pow2-padded device-shaped admission batch
+    with OOB sentinels and row-0 replay padding; zero-budget requests are
+    finished at admission and never reach the device."""
+    sched = ContinuousScheduler(8)
+    reqs = [Request(req_id=i, src=np.arange(3, 6 + i, dtype=np.int32),
+                    max_new_tokens=m)
+            for i, m in enumerate([4, 0, 5])]
+    sched.submit_many(reqs)
+    plan = sched.plan_admission(0.0, step=0, enc_len=8, oob_row=8)
+    assert [r.req_id for r in plan.requests] == [0, 2]
+    assert [r.req_id for r in plan.released] == [1]
+    assert reqs[1].status == "finished" and reqs[1].tokens == []
+    assert reqs[1].first_token_s is not None
+    assert plan.n_admitted == 3
+    assert plan.width == 2                       # next_pow2(2 live)
+    assert plan.src_tokens.shape == (2, 8)
+    assert plan.src_lengths.tolist() == [3, 5]
+    assert plan.base_rows.tolist() == [reqs[0].slot, reqs[2].slot]
+
+    # 3 live admissions pad to width 4: sentinel destination, row-0 replay
+    sched2 = ContinuousScheduler(8)
+    reqs2 = [Request(req_id=i, src=np.arange(4, dtype=np.int32) + 3)
+             for i in range(3)]
+    sched2.submit_many(reqs2)
+    plan2 = sched2.plan_admission(0.0, step=0, enc_len=8, oob_row=8)
+    assert plan2.width == 4
+    assert plan2.base_rows[3] == 8                       # OOB sentinel
+    assert (plan2.src_tokens[3] == plan2.src_tokens[0]).all()
+    assert plan2.src_lengths[3] == plan2.src_lengths[0]
+
+    # nothing waiting → empty plan, no device work
+    plan3 = sched2.plan_admission(0.0, step=0, enc_len=8, oob_row=8)
+    assert plan3.width == 0
+    assert not plan3.requests and not plan3.released
+
+
+def test_simulate_continuous_fused_admission_events():
+    """Fused-admission queueing model (ISSUE 4): burst-granular events,
+    prefill no longer a separate service event; burst_len=1 fused keeps
+    the PR 1 closed-form continuous_steps (argmin packing)."""
+    lens = [4, 4, 4, 24] * 4
+    base = simulate_continuous(lens, 8, static_batch=8)
+    free = np.zeros(8)
+    for ln in lens:
+        free[int(np.argmin(free))] += ln
+    assert base["continuous_steps"] == int(free.max())
+    assert base["prefill_events"] == 0 and base["fused_admission"]
+
+    f = simulate_continuous(lens, 8, static_batch=8, burst_len=8)
+    u = simulate_continuous(lens, 8, static_batch=8, burst_len=8,
+                            fused_admission=False)
+    assert f["burst_len"] == 8
+    assert f["prefill_events"] == 0 and u["prefill_events"] > 0
+    assert f["host_events"] < u["host_events"]
+    # fused first tokens are observed at burst edges — never earlier than
+    # the unfused admission-edge drain
+    assert f["first_token_steps_mean"] >= u["first_token_steps_mean"]
+    # token accounting is identical either way
+    assert f["useful_slot_steps"] == u["useful_slot_steps"] == sum(lens)
+    # group-granular events keep idle_rows accounting
+    b = simulate_continuous(lens, 8, static_batch=4, beam=3, burst_len=4)
+    assert b["idle_rows"] == 2 and b["n_groups"] == 2
+    assert 0 < b["continuous_utilization"] <= 6.0 / 8.0 + 1e-9
+    with pytest.raises(ValueError):
+        simulate_continuous(lens, 8, burst_len=0)
+
+
 def test_simulate_continuous_beam_groups():
     """Group-granular queueing model (ISSUE 3): a beam-B request occupies
     B rows, the grid has n_slots // B servers, and a non-dividing beam
