@@ -34,6 +34,12 @@ Rows:
   bench-smoke job fails on any dispatch-count regression.
 * ``token_identity``       — continuous greedy output equals per-request
   ``generate`` output, token for token.
+* ``admission_enc_bucket`` — compile-variant regression: a serve sweep
+  over several source-length mixes compiles one fused-burst variant per
+  distinct ``enc_len`` under ``admission_enc_bucket="exact"`` but
+  converges onto a single pow2 bucket under the ``"max"`` default; the
+  variant-count drop is **asserted** (CI fails if the bucketing stops
+  deduplicating programs).
 
 ``--smoke`` shrinks the request count and measurement passes for CI.
 """
@@ -217,6 +223,40 @@ def run(smoke: bool = False) -> list:
             mismatches += 1
     rows.append(("token_identity", 0.0,
                  f"mismatches={mismatches}/{len(range(0, n_requests, 12))}"))
+
+    # 5 — admission enc_len bucketing: sweep serves over three source-
+    # length mixes (longest first, the steady-state of a sweep).  The
+    # state cross-K/V buffers and fused-admission inputs are enc_len-
+    # shaped, so "exact" respecializes every burst program per mix while
+    # "max" reuses the single pow2 bucket — asserted, with the drop
+    # reported.  Fresh engines so prior rows' caches don't pollute counts.
+    cfg = engine.model.cfg
+    sweep_sets = [make_corpus(8, cfg.vocab, seed=20 + i, max_words=w)
+                  for i, w in enumerate((12, 6, 2))]
+
+    def run_sweep(eng):
+        for sub in sweep_sets:
+            eng.serve(sub, n_slots=4, max_new_tokens=3, burst_len=4)
+        return eng.compiled_variants()
+
+    v_exact = run_sweep(ServingEngine(engine.model, engine.params,
+                                      max_len=64,
+                                      admission_enc_bucket="exact"))
+    v_max = run_sweep(ServingEngine(engine.model, engine.params, max_len=64,
+                                    admission_enc_bucket="max"))
+    if v_exact is None or v_max is None:
+        # this jax exposes no jit-cache introspection: report, don't guess
+        rows.append(("admission_enc_bucket", 0.0,
+                     "variant counting unavailable on this jax version"))
+        return rows
+    assert v_max < v_exact, (
+        "admission_enc_bucket='max' must compile fewer burst-program "
+        f"variants than 'exact' over a source-length sweep: {v_max} vs "
+        f"{v_exact}")
+    rows.append(("admission_enc_bucket", 0.0,
+                 f"variants_max={v_max} variants_exact={v_exact} "
+                 f"cut={v_exact / max(v_max, 1):.2f}x "
+                 f"(3 source-length mixes, one serve each)"))
     return rows
 
 

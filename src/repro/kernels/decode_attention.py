@@ -126,3 +126,124 @@ def decode_attention_pallas(
         interpret=interpret,
     )(q4, k_q, k_scale, v_q, v_scale, len2)
     return out.reshape(B, H, dh)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: walk the block table per sequence block
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(tab_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, len_ref,
+                  out_ref, m_ref, l_ref, acc_ref, *, s_steps: int,
+                  page_size: int, sm_scale: float):
+    """Same online-softmax body as ``_kernel``; the *grid* walks logical
+    page slots and the BlockSpec index maps translate each (row, slot)
+    into the physical page to DMA — the paged cache is consumed in place,
+    with no linearized copy ever materialized."""
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # (G, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                # (ps, dh)
+    k = k * ks_ref[0, :, 0][:, None]                         # dequant in VREGs
+    scores = jax.lax.dot_general(                            # (G, ps)
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale
+
+    # logical position of this page slot's tokens; cursor mask also hides
+    # sentinel (unreserved) slots, whose index map clamped into the pool
+    pos = s * page_size + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    valid = pos < len_ref[0, 0]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)
+    p = jnp.where(valid, p, 0.0)
+
+    v = v_ref[0, :, 0, :].astype(jnp.float32)                # (ps, dh)
+    v = v * vs_ref[0, :, 0][:, None]
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s == s_steps - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def decode_attention_paged_pallas(
+    q: jax.Array,            # (B, H, dh)
+    k_pages: jax.Array,      # (P, ps, HKV, dh) int8 page pool
+    k_scale: jax.Array,      # (P, ps, HKV) f32
+    v_pages: jax.Array,      # (P, ps, HKV, dh) int8
+    v_scale: jax.Array,      # (P, ps, HKV) f32
+    block_tables: jax.Array, # (B, maxP) int32; sentinel P = unreserved
+    lengths: jax.Array,      # (B,) int32
+    *,
+    sm_scale: float,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash-decode over a paged INT8 KV cache (paper §5.3, paged).
+
+    Grid (batch, kv_head, page_slot); the block table rides in as a
+    scalar-prefetch operand so each slot's physical page id is known
+    before the body runs and the K/V DMAs fetch pages directly — the
+    paper's "big tensor stops moving" taken to its endpoint: decode reads
+    exactly the pages a row owns, wherever they sit in the pool.
+    """
+    B, H, dh = q.shape
+    P, ps, HKV, _ = k_pages.shape
+    assert H % HKV == 0, (H, HKV)
+    G = H // HKV
+    maxP = block_tables.shape[1]
+
+    q4 = q.reshape(B, HKV, G, dh)
+    len2 = lengths.astype(jnp.int32).reshape(B, 1)
+    tab = jnp.clip(block_tables.astype(jnp.int32), 0, P - 1)
+
+    def page_map(b, h, s, tab_ref):
+        return (tab_ref[b, s], 0, h, 0)
+
+    def scale_map(b, h, s, tab_ref):
+        return (tab_ref[b, s], 0, h)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, HKV, maxP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, h, s, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, dh), page_map),                  # k pages
+            pl.BlockSpec((1, ps, 1), scale_map),                     # k_scale
+            pl.BlockSpec((1, ps, 1, dh), page_map),                  # v pages
+            pl.BlockSpec((1, ps, 1), scale_map),                     # v_scale
+            pl.BlockSpec((1, 1), lambda b, h, s, t: (b, 0)),         # lengths
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh), lambda b, h, s, t: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),    # running max
+            pltpu.VMEM((G, 1), jnp.float32),    # running denom
+            pltpu.VMEM((G, dh), jnp.float32),   # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, s_steps=maxP, page_size=ps,
+                          sm_scale=sm_scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, HKV, G, dh), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(tab, q4, k_pages, k_scale, v_pages, v_scale, len2)
+    return out.reshape(B, H, dh)

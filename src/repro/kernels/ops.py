@@ -21,7 +21,10 @@ import jax.numpy as jnp
 
 from repro.core.qtensor import QTensor
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention import (
+    decode_attention_paged_pallas,
+    decode_attention_pallas,
+)
 from repro.kernels.int8_matmul import (
     int8_matmul_batched_pallas,
     int8_matmul_pallas,
@@ -178,3 +181,29 @@ def decode_attention(
         )
     return ref.ref_decode_attention(q, k_q, k_scale, v_q, v_scale, lengths,
                                     sm_scale)
+
+
+def decode_attention_paged(
+    q: jax.Array,            # (B, H, dh)
+    k_pages: jax.Array,      # (P, ps, HKV, dh) int8
+    k_scale: jax.Array,      # (P, ps, HKV) f32
+    v_pages: jax.Array,      # (P, ps, HKV, dh) int8
+    v_scale: jax.Array,      # (P, ps, HKV) f32
+    block_tables: jax.Array, # (B, maxP) int32
+    lengths: jax.Array,      # (B,) int32
+    *,
+    sm_scale: float,
+    impl: str = "auto",
+) -> jax.Array:
+    """Paged-cache decode attention: the Pallas kernel walks the block
+    table per page slot (scalar-prefetched index map); the XLA fallback
+    linearizes the table then reuses the contiguous oracle."""
+    impl = _resolve(impl)
+    if impl in ("pallas", "interpret"):
+        return decode_attention_paged_pallas(
+            q, k_pages, k_scale, v_pages, v_scale, block_tables, lengths,
+            sm_scale=sm_scale, interpret=(impl == "interpret"),
+        )
+    return ref.ref_decode_attention_paged(q, k_pages, k_scale, v_pages,
+                                          v_scale, block_tables, lengths,
+                                          sm_scale)

@@ -70,6 +70,18 @@ def main() -> None:
                     help="serve admissions as separate prefill dispatches "
                          "(the pre-fusion baseline) instead of folding "
                          "them into the burst program")
+    ap.add_argument("--paged", action="store_true",
+                    help="back the decode KV cache with fixed-size pages + "
+                         "block tables: beam reorder becomes a table "
+                         "permutation (no slab copy) and admission is "
+                         "paced by a page budget instead of contiguous "
+                         "row capacity (--mode continuous only)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (--paged; must divide the "
+                         "engine max_len)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="page-pool size (--paged; default: contiguous-"
+                         "equivalent capacity)")
     args = ap.parse_args()
     burst_len = args.burst_len if args.burst_len == "auto" \
         else int(args.burst_len)
@@ -102,7 +114,9 @@ def main() -> None:
 
     if args.mode == "continuous":
         engine = ServingEngine(model, params, quant=qctx, max_len=96,
-                               burst_len=burst_len)
+                               burst_len=burst_len, paged=args.paged,
+                               page_size=args.page_size,
+                               n_pages=args.n_pages)
         bins = pack_batches_token_budget(requests, args.token_budget)
         order = [i for b in bins for i in b]     # FFD admission order
         beam = args.beam if args.beam > 1 else None
@@ -133,6 +147,12 @@ def main() -> None:
                else "UNFUSED admission")
               + f": {res.prefill_dispatches} prefill dispatches, "
               f"{res.encoder_tokens} encoder row-tokens")
+        if res.paged:
+            print(f"paged KV: page_size={res.page_size}, "
+                  f"peak {res.page_hwm} pages "
+                  f"({res.page_hwm * res.page_size} tokens), "
+                  f"{res.pages_in_use} leaked, "
+                  f"beam-reorder bytes {res.reorder_bytes}")
         print(f"latency: first-token mean "
               f"{met['first_token_latency_mean_s']:.3f}s "
               f"p95 {met['first_token_latency_p95_s']:.3f}s; total mean "

@@ -189,15 +189,36 @@ def attention(
 
     if cache is not None:
         # ---- decode: append at each sequence's cursor, then attend ----
-        k_c, v_c, ks_c, vs_c = kvc.append_token(
-            cache.k, cache.v, cache.k_scale, cache.v_scale, k, v,
-            cache.lengths)
+        paged = cache.block_tables is not None
+        if paged:
+            k_c, v_c, ks_c, vs_c = kvc.append_token_paged(
+                cache.k, cache.v, cache.k_scale, cache.v_scale,
+                cache.block_tables, k, v, cache.lengths)
+        else:
+            k_c, v_c, ks_c, vs_c = kvc.append_token(
+                cache.k, cache.v, cache.k_scale, cache.v_scale, k, v,
+                cache.lengths)
         lengths = cache.lengths + 1
         sm_scale = 1.0 / math.sqrt(dh)
         q1 = q.reshape(B, H, dh)
-        if ks_c is not None:
+        if ks_c is not None and paged:
+            out = ops.decode_attention_paged(
+                q1, k_c, ks_c, v_c, vs_c, cache.block_tables, lengths,
+                sm_scale=sm_scale, impl=quant.impl)
+        elif ks_c is not None:
             out = ops.decode_attention(q1, k_c, ks_c, v_c, vs_c, lengths,
                                        sm_scale=sm_scale, impl=quant.impl)
+        elif paged:
+            # FP paged FALLBACK: linearize the pool through the table and
+            # reuse the contiguous math — it materializes a gathered copy
+            # per step, so it trades the beam-reorder slab gather for an
+            # attention-side one (a wash at worst; the cross-K/V gather
+            # still disappears).  The deployment path is the INT8 cache,
+            # whose Pallas kernel walks the table in place with no copy.
+            out = _fp_decode_attention(
+                q1, kvc.linearize_pages(k_c, cache.block_tables),
+                kvc.linearize_pages(v_c, cache.block_tables),
+                lengths, sm_scale)
         else:
             out = _fp_decode_attention(q1, k_c, v_c, lengths, sm_scale)
         out = out.reshape(B, 1, H * dh)

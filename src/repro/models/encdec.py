@@ -204,15 +204,32 @@ class EncDecLM:
     # ------------------------------------------------------- serving states
     def init_decode_state(self, batch: int, max_len: int, *,
                           quantized: bool,
-                          enc_len: Optional[int] = None) -> Dict[str, Any]:
+                          enc_len: Optional[int] = None,
+                          paged: bool = False,
+                          page_size: int = 16,
+                          n_pages: Optional[int] = None) -> Dict[str, Any]:
         """``enc_len``: pre-allocate cross K/V buffers of that length (used
-        by the dry-run to lower serve_step without running prefill)."""
+        by the dry-run to lower serve_step without running prefill).
+
+        ``paged=True`` backs the self-attention cache with a page pool +
+        block tables (``kv_cache.PagedKVCache``) instead of contiguous
+        rows; rows own no pages until :meth:`splice_prefill` assigns a
+        reservation.  ``n_pages`` bounds the pool (default: contiguous-
+        equivalent capacity).
+        """
         cfg = self.cfg
+        if paged:
+            cache = kvc.init_paged_cache(
+                cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd,
+                page_size=page_size, n_pages=n_pages, quantized=quantized,
+                dtype=cfg.activation_dtype)
+        else:
+            cache = kvc.init_cache(cfg.n_layers, batch, max_len,
+                                   cfg.n_kv_heads, cfg.hd,
+                                   quantized=quantized,
+                                   dtype=cfg.activation_dtype)
         state: Dict[str, Any] = {
-            "cache": kvc.init_cache(cfg.n_layers, batch, max_len,
-                                    cfg.n_kv_heads, cfg.hd,
-                                    quantized=quantized,
-                                    dtype=cfg.activation_dtype),
+            "cache": cache,
             "cross_k": None, "cross_v": None, "src_lengths": None,
         }
         if enc_len is not None:
@@ -262,8 +279,8 @@ class EncDecLM:
 
     def splice_prefill(self, state: Dict[str, Any], cross_k: jax.Array,
                        cross_v: jax.Array, src_lengths: jax.Array,
-                       base_rows: jax.Array, *, group: int = 1
-                       ) -> Dict[str, Any]:
+                       base_rows: jax.Array, *, group: int = 1,
+                       pages: Optional[jax.Array] = None) -> Dict[str, Any]:
         """Broadcast-splice an :meth:`encode_cross_kv` result into decode
         state rows — jit-callable, so the serving engine can run it inside
         the fused burst program.
@@ -277,6 +294,11 @@ class EncDecLM:
         position exactly (attention masks with a hard ``where``), so the
         next decode step on a spliced row is bit-identical to a step on a
         freshly initialised side batch.
+
+        Paged cache: ``pages`` (len(rows), maxP) carries each spliced
+        row's page reservation (sentinel-padded); the rows' block tables
+        and ``own_pages`` are installed alongside the cursor reset
+        (``kv_cache.assign_pages``) — still no payload copy.
         """
         rows = kvc.group_rows(jnp.asarray(base_rows, jnp.int32), group)
         if group > 1:
@@ -291,10 +313,16 @@ class EncDecLM:
         out["src_lengths"] = state["src_lengths"].at[rows].set(
             src_lengths.astype(jnp.int32), mode="drop")
         cache = state["cache"]
-        out["cache"] = kvc.KVCache(
-            k=cache.k, v=cache.v, k_scale=cache.k_scale,
-            v_scale=cache.v_scale,
-            lengths=cache.lengths.at[rows].set(0, mode="drop"))
+        if isinstance(cache, kvc.PagedKVCache):
+            if pages is None:
+                raise ValueError("paged splice_prefill needs the spliced "
+                                 "rows' page reservations")
+            out["cache"] = kvc.assign_pages(cache, rows, pages)
+        else:
+            out["cache"] = kvc.KVCache(
+                k=cache.k, v=cache.v, k_scale=cache.k_scale,
+                v_scale=cache.v_scale,
+                lengths=cache.lengths.at[rows].set(0, mode="drop"))
         return out
 
     def prefill(self, params, batch, state, *,
@@ -327,9 +355,13 @@ class EncDecLM:
         pos = jnp.minimum(cache.lengths, cache.capacity - 1)
         x = x + pe[pos][:, None, :]
 
+        paged = isinstance(cache, kvc.PagedKVCache)
+        tables = cache.block_tables if paged else None
+
         def block_with_cache(x, bparams, kl, vl, ksl, vsl, ck, cv, site):
             view = kvc.LayerCacheView(k=kl, v=vl, k_scale=ksl, v_scale=vsl,
-                                      lengths=cache.lengths)
+                                      lengths=cache.lengths,
+                                      block_tables=tables)
             y, entries = self._dec_block(
                 bparams, x, (ck, cv), site=site, quant=quant, taps=None,
                 positions=None, kv_lengths=None,
@@ -390,8 +422,15 @@ class EncDecLM:
             vs_c = jnp.stack(vsL) if cache.quantized else None
 
         state = dict(state)
-        state["cache"] = kvc.KVCache(k=k_c, v=v_c, k_scale=ks_c,
-                                     v_scale=vs_c, lengths=cache.lengths + 1)
+        if paged:
+            state["cache"] = kvc.PagedKVCache(
+                k=k_c, v=v_c, k_scale=ks_c, v_scale=vs_c,
+                block_tables=cache.block_tables, own_pages=cache.own_pages,
+                lengths=cache.lengths + 1)
+        else:
+            state["cache"] = kvc.KVCache(k=k_c, v=v_c, k_scale=ks_c,
+                                         v_scale=vs_c,
+                                         lengths=cache.lengths + 1)
         x = norm(params["dec_final_norm"], x, cfg.norm)
         logits = unembed(params["embed"], x)[:, 0]
         return logits, state

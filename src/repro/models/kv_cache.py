@@ -19,7 +19,7 @@ input pipeline — decode correctly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -94,13 +94,19 @@ def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 @dataclasses.dataclass(frozen=True)
 class LayerCacheView:
-    """One layer's slice, as consumed by attention."""
+    """One layer's slice, as consumed by attention.
 
-    k: jax.Array            # (B, S, HKV, dh)
+    Contiguous cache: ``k``/``v`` are (B, S, HKV, dh) rows.  Paged cache:
+    ``k``/``v`` are the layer's (P, ps, HKV, dh) page pool and
+    ``block_tables`` (B, maxP) maps rows to pages (None ⇔ contiguous).
+    """
+
+    k: jax.Array            # (B, S, HKV, dh) or (P, ps, HKV, dh) paged
     v: jax.Array
     k_scale: Optional[jax.Array]
     v_scale: Optional[jax.Array]
     lengths: jax.Array      # (B,)
+    block_tables: Optional[jax.Array] = None      # (B, maxP) when paged
 
     def dequantized(self, dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
         if self.k_scale is None:
@@ -269,7 +275,9 @@ def gather_beams(cache: KVCache, beam_idx: jax.Array) -> KVCache:
 
     ``beam_idx``: (B,) int32 source rows.  On an int8 cache this moves 4×
     fewer bytes than f32 (2× vs bf16); ``benchmarks/bench_kv_gather.py``
-    measures exactly this op.
+    measures exactly this op.  The paged cache
+    (:func:`gather_beams_paged`) takes the same optimization to its
+    logical endpoint: the payload stops moving entirely.
     """
     take = lambda a: jnp.take(a, beam_idx, axis=1) if a is not None else None
     return KVCache(
@@ -277,3 +285,400 @@ def gather_beams(cache: KVCache, beam_idx: jax.Array) -> KVCache:
         k_scale=take(cache.k_scale), v_scale=take(cache.v_scale),
         lengths=jnp.take(cache.lengths, beam_idx, axis=0),
     )
+
+
+# ---------------------------------------------------------------------------
+# paged cache: fixed-size pages + per-row block tables
+# ---------------------------------------------------------------------------
+#
+# The contiguous cache above reserves a full (S_max,) row per decode slot and
+# beam-reorders by moving the whole slab.  The paged cache stores tokens in
+# fixed-size pages shared by all rows; each row sees its sequence through a
+# block table of page ids.  Consequences:
+#
+# * beam reorder = permuting (B, maxP) int32 block-table rows plus one
+#   partial-page copy per row (the page currently being written) — the
+#   payload slab never moves, which is the logical endpoint of the paper's
+#   §5.3 copy-size optimization (INT8 shrank the gather 4×; paging makes it
+#   ~S_max/page_size smaller again, independent of dtype);
+# * HBM is reserved per *request* (ceil(budget / page_size) pages per live
+#   row) instead of per grid row, so short-budget requests stop paying for
+#   S_max capacity and a fixed pool admits more concurrent rows;
+# * freeing is returning page ids to a free list — fragmentation cannot
+#   exist, which is what unlocks mixed beam widths per request.
+#
+# Sentinel convention: the page id ``n_pages`` (one past the pool) marks an
+# unreserved block-table slot.  Every payload write goes through
+# ``mode="drop"`` scatters, so a row stepping past its reservation (finished
+# rows keep stepping until the burst edge) writes nowhere; reads clamp into
+# the pool and are masked by ``lengths``.
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKVCache:
+    """Paged cache for one attention stack (layers stacked).
+
+    ``k``/``v``: (L, n_pages, page_size, HKV, dh) int8 or activation dtype.
+    ``k_scale``/``v_scale``: (L, n_pages, page_size, HKV) f32 or None.
+    ``block_tables``: (B, max_pages) int32 — row r's logical view: token
+    position p lives in page ``block_tables[r, p // page_size]`` at offset
+    ``p % page_size``.  After a beam reorder, early (read-only) entries may
+    point into a sibling row's pages; the entry for the *next write slot*
+    always points into ``own_pages`` (see :func:`gather_beams_paged`).
+    ``own_pages``: (B, max_pages) int32 — the pages physically reserved for
+    row r (never permuted by beam reorders; sentinel past the reservation).
+    ``lengths``: (B,) int32 valid lengths / per-row write cursors.
+    """
+
+    k: jax.Array
+    v: jax.Array
+    k_scale: Optional[jax.Array]
+    v_scale: Optional[jax.Array]
+    block_tables: jax.Array
+    own_pages: jax.Array
+    lengths: jax.Array
+
+    def tree_flatten(self):
+        return ((self.k, self.v, self.k_scale, self.v_scale,
+                 self.block_tables, self.own_pages, self.lengths), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    @property
+    def n_pages(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def max_pages(self) -> int:
+        return self.block_tables.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        """Logical row capacity in tokens (same contract as ``KVCache``)."""
+        return self.max_pages * self.page_size
+
+    def nbytes(self) -> int:
+        n = self.k.size * self.k.dtype.itemsize * 2
+        if self.quantized:
+            n += self.k_scale.size * 4 * 2
+        n += (self.block_tables.size + self.own_pages.size) * 4
+        return int(n)
+
+    def reorder_bytes_per_step(self) -> int:
+        """Bytes a beam reorder moves per decode step: the block-table /
+        length permutation plus one partial-page payload copy per row —
+        compare ``KVCache.nbytes()``, which :func:`gather_beams` moves."""
+        L, _, ps, HKV, dh = self.k.shape
+        B = self.block_tables.shape[0]
+        page = L * B * ps * HKV * dh * self.k.dtype.itemsize * 2
+        if self.quantized:
+            page += L * B * ps * HKV * 4 * 2
+        return int(page + self.block_tables.size * 4 + B * 4)
+
+
+def pages_per_row(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` cache positions (≥ 1)."""
+    return max((int(n_tokens) + page_size - 1) // page_size, 1)
+
+
+def init_paged_cache(n_layers: int, batch: int, max_len: int, n_kv: int,
+                     dh: int, *, page_size: int, n_pages: Optional[int] = None,
+                     quantized: bool, dtype=jnp.bfloat16) -> PagedKVCache:
+    """Pool of ``n_pages`` pages + empty (all-sentinel) block tables.
+
+    ``max_len`` must be a page multiple (the engine validates) so the
+    linearized paged view has exactly the contiguous cache's shape — that
+    shape equality is what makes the paged path bit-identical to the
+    unpaged one.  ``n_pages`` defaults to full contiguous-equivalent
+    capacity (``batch × max_pages``); serving configs pass less and admit
+    against the page budget instead.
+    """
+    if max_len % page_size:
+        raise ValueError(f"max_len={max_len} must be a multiple of "
+                         f"page_size={page_size}")
+    max_pages = max_len // page_size
+    if n_pages is None:
+        n_pages = batch * max_pages
+    shape = (n_layers, n_pages, page_size, n_kv, dh)
+    if quantized:
+        k = jnp.zeros(shape, jnp.int8)
+        v = jnp.zeros(shape, jnp.int8)
+        ks = jnp.zeros(shape[:-1], jnp.float32)
+        vs = jnp.zeros(shape[:-1], jnp.float32)
+    else:
+        k = jnp.zeros(shape, dtype)
+        v = jnp.zeros(shape, dtype)
+        ks = vs = None
+    # two distinct buffers (donation-safe: the serving engine donates the
+    # whole decode state, and one buffer may not be donated twice)
+    tables = jnp.full((batch, max_pages), n_pages, jnp.int32)
+    own = jnp.full((batch, max_pages), n_pages, jnp.int32)
+    return PagedKVCache(k=k, v=v, k_scale=ks, v_scale=vs,
+                        block_tables=tables, own_pages=own,
+                        lengths=jnp.zeros((batch,), jnp.int32))
+
+
+def append_token_paged(
+    k_pages: jax.Array,                  # (P, ps, HKV, dh) one layer's pool
+    v_pages: jax.Array,
+    ks_pages: Optional[jax.Array],       # (P, ps, HKV)
+    vs_pages: Optional[jax.Array],
+    block_tables: jax.Array,             # (B, maxP) int32
+    k_new: jax.Array,                    # (B, 1, HKV, dh) fp
+    v_new: jax.Array,
+    lengths: jax.Array,                  # (B,) per-row cursors
+):
+    """Paged ``append_token``: scatter one token per row at its cursor.
+
+    The destination page comes from the block table; rows whose cursor is
+    past capacity, or whose table entry is the unreserved sentinel, drop
+    the write (same ``mode="drop"`` contract as the contiguous append —
+    finished rows keep stepping inside a burst and must write nowhere).
+    """
+    P, ps = k_pages.shape[0], k_pages.shape[1]
+    maxP = block_tables.shape[1]
+    b_idx = jnp.arange(block_tables.shape[0])
+    slot = lengths // ps
+    off = lengths % ps
+    entry = block_tables[b_idx, jnp.minimum(slot, maxP - 1)]
+    page = jnp.where(slot < maxP, entry, P)          # past capacity → drop
+    if ks_pages is not None:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        k_pages = k_pages.at[page, off].set(kq[:, 0], mode="drop")
+        v_pages = v_pages.at[page, off].set(vq[:, 0], mode="drop")
+        ks_pages = ks_pages.at[page, off].set(ks[:, 0], mode="drop")
+        vs_pages = vs_pages.at[page, off].set(vs[:, 0], mode="drop")
+    else:
+        k_pages = k_pages.at[page, off].set(
+            k_new[:, 0].astype(k_pages.dtype), mode="drop")
+        v_pages = v_pages.at[page, off].set(
+            v_new[:, 0].astype(v_pages.dtype), mode="drop")
+    return k_pages, v_pages, ks_pages, vs_pages
+
+
+def linearize_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Gather one layer's paged payload into the contiguous row view.
+
+    ``pages``: (P, ps, …) → (B, maxP·ps, …).  Sentinel entries clamp into
+    the pool and read garbage — every consumer masks by ``lengths``.  This
+    is the XLA fallback read path; the Pallas kernel walks the table
+    per-block instead and never materializes this view.
+    """
+    P = pages.shape[0]
+    B, maxP = block_tables.shape
+    got = pages[jnp.clip(block_tables, 0, P - 1)]    # (B, maxP, ps, …)
+    return got.reshape((B, maxP * pages.shape[1]) + pages.shape[2:])
+
+
+def assign_pages(cache: PagedKVCache, rows: jax.Array,
+                 pages: jax.Array) -> PagedKVCache:
+    """Install per-row page reservations (admission).
+
+    ``rows``: (R,) destination rows (OOB sentinels dropped);
+    ``pages``: (R, maxP) page ids, sentinel-padded past each row's
+    reservation.  Both ``own_pages`` and ``block_tables`` are set — a
+    freshly admitted row starts with its logical view equal to its
+    physical reservation — and the cursor resets to 0.
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+    pages = jnp.asarray(pages, jnp.int32)
+    return PagedKVCache(
+        k=cache.k, v=cache.v, k_scale=cache.k_scale, v_scale=cache.v_scale,
+        block_tables=cache.block_tables.at[rows].set(pages, mode="drop"),
+        own_pages=cache.own_pages.at[rows].set(pages, mode="drop"),
+        lengths=cache.lengths.at[rows].set(0, mode="drop"),
+    )
+
+
+def free_slots_paged(cache: PagedKVCache, slots: jax.Array) -> PagedKVCache:
+    """Paged ``free_slots``: reset cursors AND sentinel the freed rows'
+    tables.  The sentinel matters here (unlike the contiguous cache, where
+    a dead row harmlessly scribbles inside its own slab): a freed row keeps
+    stepping until refilled, and its pages may be handed to a *new* request
+    — its writes must drop, not land in reallocated pages."""
+    slots = jnp.asarray(slots, jnp.int32)
+    sent = jnp.full((slots.shape[0], cache.max_pages), cache.n_pages,
+                    jnp.int32)
+    return PagedKVCache(
+        k=cache.k, v=cache.v, k_scale=cache.k_scale, v_scale=cache.v_scale,
+        block_tables=cache.block_tables.at[slots].set(sent, mode="drop"),
+        own_pages=cache.own_pages.at[slots].set(sent, mode="drop"),
+        lengths=cache.lengths.at[slots].set(0, mode="drop"),
+    )
+
+
+def free_inactive_paged(cache: PagedKVCache, live: jax.Array) -> PagedKVCache:
+    """Mask-driven :func:`free_slots_paged` for the fused burst prologue:
+    every row not in ``live`` gets cursor 0 and all-sentinel tables, so its
+    pages can be reassigned by the splice that follows in the same
+    program."""
+    live_col = live[:, None]
+    sent = jnp.int32(cache.n_pages)
+    return PagedKVCache(
+        k=cache.k, v=cache.v, k_scale=cache.k_scale, v_scale=cache.v_scale,
+        block_tables=jnp.where(live_col, cache.block_tables, sent),
+        own_pages=jnp.where(live_col, cache.own_pages, sent),
+        lengths=jnp.where(live, cache.lengths, 0),
+    )
+
+
+def insert_rows_paged(cache: PagedKVCache, sub: KVCache, slots: jax.Array,
+                      pages: jax.Array) -> PagedKVCache:
+    """Splice a *contiguous* prefilled side batch into the paged cache
+    (the unfused admission path: prefill runs on a plain side batch, then
+    its rows are copied into the destination rows' reserved pages).
+
+    ``sub``'s row capacity must equal the paged logical capacity
+    (``maxP × ps`` — the engine guarantees ``max_len`` is a page
+    multiple); each sub row is reshaped into page-sized chunks and
+    scattered to ``pages`` (sentinel entries drop their chunk, so
+    unreserved tails and OOB padding rows vanish).
+    """
+    if cache.quantized != sub.quantized:
+        raise ValueError("cannot mix quantized and fp caches "
+                         f"(main quantized={cache.quantized}, "
+                         f"sub quantized={sub.quantized})")
+    if sub.capacity != cache.capacity:
+        raise ValueError(f"capacity mismatch: paged {cache.capacity} vs "
+                         f"side batch {sub.capacity}")
+    ps, maxP = cache.page_size, cache.max_pages
+    W = sub.k.shape[1]
+    ids = jnp.asarray(pages, jnp.int32).reshape(W * maxP)
+
+    def put(pool, part):
+        if pool is None:
+            return None
+        # (L, W, maxP·ps, …) → (L, W·maxP, ps, …) page-chunked payload
+        chunks = part.reshape((part.shape[0], W * maxP, ps) + part.shape[3:])
+        return pool.at[:, ids].set(chunks.astype(pool.dtype), mode="drop")
+
+    return PagedKVCache(
+        k=put(cache.k, sub.k), v=put(cache.v, sub.v),
+        k_scale=put(cache.k_scale, sub.k_scale),
+        v_scale=put(cache.v_scale, sub.v_scale),
+        block_tables=cache.block_tables.at[slots].set(
+            jnp.asarray(pages, jnp.int32), mode="drop"),
+        own_pages=cache.own_pages.at[slots].set(
+            jnp.asarray(pages, jnp.int32), mode="drop"),
+        lengths=cache.lengths.at[slots].set(sub.lengths, mode="drop"),
+    )
+
+
+def gather_beams_paged(cache: PagedKVCache, beam_idx: jax.Array
+                       ) -> PagedKVCache:
+    """Zero-copy beam reorder: permute block tables, not payload.
+
+    The contiguous :func:`gather_beams` moves the whole (L, B, S, HKV, dh)
+    slab every beam step; here the reorder is
+
+    1. gather the (B, maxP) block tables and (B,) cursors by ``beam_idx``
+       (int32 index traffic only);
+    2. copy the source lineage's *current partial page* into the
+       destination row's own page for that slot and point the table entry
+       there — so the next append (which lands in that slot) writes into a
+       page the row owns privately, never into a page a sibling also
+       writes.
+
+    Invariant maintained: at append time, the table entry for the slot
+    being written always comes from ``own_pages`` — fresh admissions set
+    the whole table to ``own_pages`` and every reorder re-establishes it
+    for the next write slot.  Full (read-only) pages stay shared between
+    beams; sharing is always intra-group, and a group's rows are freed
+    atomically, so no refcounting is needed on device.
+    """
+    P, ps, maxP = cache.n_pages, cache.page_size, cache.max_pages
+    B = cache.block_tables.shape[0]
+    b_idx = jnp.arange(B)
+    tables = jnp.take(cache.block_tables, beam_idx, axis=0)
+    lengths = jnp.take(cache.lengths, beam_idx, axis=0)
+    sp = jnp.minimum(lengths // ps, maxP - 1)        # next write slot
+    src_page = jnp.clip(tables[b_idx, sp], 0, P - 1)
+    dst_page = cache.own_pages[b_idx, sp]            # sentinel → copy drops
+
+    def cow(pool):
+        if pool is None:
+            return None
+        payload = jnp.take(pool, src_page, axis=1)   # (L, B, ps, …)
+        return pool.at[:, dst_page].set(payload, mode="drop")
+
+    return PagedKVCache(
+        k=cow(cache.k), v=cow(cache.v),
+        k_scale=cow(cache.k_scale), v_scale=cow(cache.v_scale),
+        block_tables=tables.at[b_idx, sp].set(dst_page),
+        own_pages=cache.own_pages,                   # physical, never moves
+        lengths=lengths,
+    )
+
+
+class PageAllocator:
+    """Host-side page pool: free list + refcounts + high-water mark.
+
+    The scheduler reserves ``pages_per_row(budget) × live rows`` pages at
+    admission and returns them at release, so admission is gated by real
+    HBM instead of contiguous row capacity.  Refcounts support shared
+    reservations (``retain``); the serving engine keeps every reservation
+    exclusive (sharing happens on device, strictly inside beam groups that
+    free atomically), so its counts are only ever 0 or 1.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 1 or page_size < 1:
+            raise ValueError(f"bad pool: n_pages={n_pages}, "
+                             f"page_size={page_size}")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self._free = list(range(self.n_pages - 1, -1, -1))   # pop() = page 0
+        self._refcount = [0] * self.n_pages
+        self.hwm = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def pages_for_tokens(self, n_tokens: int) -> int:
+        return pages_per_row(n_tokens, self.page_size)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` pages (refcount 1 each) or None if the pool can't."""
+        if n < 0:
+            raise ValueError(f"cannot alloc {n} pages")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            assert self._refcount[p] == 0, f"page {p} double-assigned"
+            self._refcount[p] = 1
+        self.hwm = max(self.hwm, self.in_use)
+        return pages
+
+    def retain(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if self._refcount[p] <= 0:
+                raise ValueError(f"retain of unallocated page {p}")
+            self._refcount[p] += 1
+
+    def release(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if self._refcount[p] <= 0:
+                raise ValueError(f"release of unallocated page {p}")
+            self._refcount[p] -= 1
+            if self._refcount[p] == 0:
+                self._free.append(p)
+
+    def refcount(self, page: int) -> int:
+        return self._refcount[page]

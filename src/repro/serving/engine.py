@@ -153,6 +153,13 @@ class ServeResult:
     #                                   admissions (beam× lower when fused)
     fused_admission: bool = True
     auto_burst: bool = False          # burst_len ran under AdaptiveBurst
+    paged: bool = False               # KV cache was paged (block tables)
+    page_size: int = 0
+    pages_in_use: int = 0             # allocator pages still held at the end
+    page_hwm: int = 0                 # peak concurrent pages over the serve
+    reorder_bytes: int = 0            # total bytes beam reorders moved
+    #                                   (slab gathers unpaged; block-table
+    #                                   permutation + partial-page copy paged)
 
     @property
     def n_groups(self) -> int:
@@ -213,6 +220,10 @@ class ServeResult:
             "prefill_rounds": float(self.prefill_rounds),
             "prefill_dispatches": float(self.prefill_dispatches),
             "encoder_tokens": float(self.encoder_tokens),
+            "paged": float(self.paged),
+            "pages_in_use": float(self.pages_in_use),
+            "page_hwm": float(self.page_hwm),
+            "reorder_bytes": float(self.reorder_bytes),
             "first_token_latency_mean_s": float(np.mean(first)) if first else 0.0,
             "first_token_latency_p95_s":
                 float(np.percentile(first, 95)) if first else 0.0,
@@ -226,7 +237,10 @@ class ServingEngine:
     def __init__(self, model, params, *, quant: QuantContext = FP_CONTEXT,
                  max_len: int = 256, eos_id: int = EOS,
                  donate_state: bool = True,
-                 burst_len: Union[int, str] = 8):
+                 burst_len: Union[int, str] = 8,
+                 paged: bool = False, page_size: int = 16,
+                 n_pages: Optional[int] = None,
+                 admission_enc_bucket: str = "max"):
         self.model = model
         self.params = params
         self.quant = quant
@@ -238,6 +252,20 @@ class ServingEngine:
                 raise ValueError(f"burst_len must be ≥ 1, got {burst_len}")
         self.burst_len = burst_len
         self._donate_state = donate_state
+        # paged KV cache (serve() paths): fixed-size pages + block tables;
+        # max_len must be a page multiple so the paged logical view has
+        # exactly the contiguous shape (bit-identical numerics).
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        self.n_pages = n_pages
+        if self.paged and max_len % self.page_size:
+            raise ValueError(f"paged cache needs max_len % page_size == 0, "
+                             f"got {max_len} % {self.page_size}")
+        if admission_enc_bucket not in ("max", "exact"):
+            raise ValueError("admission_enc_bucket must be 'max' or "
+                             f"'exact', got {admission_enc_bucket!r}")
+        self.admission_enc_bucket = admission_enc_bucket
+        self._enc_bucket_hwm = 0
 
         self._prefill = jax.jit(
             lambda p, b, s: model.prefill(p, b, s, quant=quant))
@@ -245,6 +273,11 @@ class ServingEngine:
         # the long-lived decode state.  Donates the old state/token buffers —
         # the caller always rebinds to the returned ones.
         self._insert = jax.jit(self._insert_rows, donate_argnums=(0, 2))
+        # paged variant (unfused admission): the side batch prefills into a
+        # plain contiguous cache, then its rows are page-chunked into the
+        # destination rows' reservations and the block tables installed
+        self._insert_paged = jax.jit(self._insert_rows_paged,
+                                     donate_argnums=(0, 2))
         # burst programs, keyed by compiled ring-buffer width (greedy) or
         # (width, beam) — power-of-two bucketed, so O(log K) entries.  The
         # fused-admission variants additionally respecialize (inside
@@ -283,9 +316,103 @@ class ServingEngine:
         start = self.burst_len if isinstance(self.burst_len, int) else 8
         return AdaptiveBurst(start=start, max_burst=AUTO_MAX_BURST)
 
+    def compiled_variants(self) -> Optional[int]:
+        """Compiled burst-program variants held by this engine — the outer
+        pow2-bucketed builders times jax.jit's inner shape cache (fused
+        admission respecializes per admission width × enc_len).  The
+        ``admission_enc_bucket`` regression in ``bench_continuous.py``
+        asserts this stops growing with the source-length mix.
+
+        Returns None when the jax version exposes no per-function cache
+        introspection (``_cache_size``), so callers skip the comparison
+        instead of asserting on degenerate equal counts.
+        """
+        n = 0
+        for d in (self._burst_jits, self._beam_burst_jits,
+                  self._beam_serve_jits, self._fused_burst_jits,
+                  self._fused_beam_serve_jits):
+            for fn in d.values():
+                size = getattr(fn, "_cache_size", None)
+                if not callable(size):
+                    return None
+                n += size()
+        return n
+
+    def _enc_bucket(self, reqs: Sequence[Request], m: int) -> int:
+        """Admission ``enc_len`` bucket for one serve.
+
+        ``admission_enc_bucket="exact"`` keeps the historical behaviour —
+        the serve's max source length rounded to ``pad_to_multiple`` — so
+        every distinct length mix compiles its own burst-program variant
+        (the cross-K/V state buffers and fused admission inputs are all
+        ``enc_len``-shaped).  ``"max"`` (default) pads to a power-of-two
+        bucket held monotone across serves on this engine: a sweep over
+        many source-length mixes converges onto ONE variant per (ring
+        bucket × admission width) once the largest bucket has been seen.
+        Padding is masked (hard ``where`` on ``src_lengths``), so tokens
+        are identical either way.
+        """
+        enc_len = max(r.n_src_tokens for r in reqs)
+        enc_len = ((enc_len + m - 1) // m) * m
+        if self.admission_enc_bucket == "exact":
+            return enc_len
+        self._enc_bucket_hwm = max(self._enc_bucket_hwm, next_pow2(enc_len))
+        return self._enc_bucket_hwm
+
+    # ------------------------------------------------------------- paged util
+    @property
+    def _max_pages(self) -> int:
+        return self.max_len // self.page_size
+
+    def _make_allocator(self, n_rows: int) -> kvc.PageAllocator:
+        """Fresh page pool for one serve: ``n_pages`` from the constructor,
+        or contiguous-equivalent capacity (every grid row could hold
+        ``max_len`` tokens) when unset."""
+        n_pages = self.n_pages or n_rows * self._max_pages
+        return kvc.PageAllocator(n_pages, self.page_size)
+
+    def _pages_per_request(self, req: Request, rows: int) -> int:
+        """Worst-case reservation: the request's full decode budget, per
+        *live* row (parked rows of a narrow beam reserve nothing)."""
+        return rows * kvc.pages_per_row(
+            min(req.max_new_tokens, self.max_len), self.page_size)
+
+    def _page_rows(self, reqs: Sequence[Request], rows_per_req: int,
+                   n_req_rows: int, sentinel: int,
+                   widths: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Shape admitted requests' page reservations as device input:
+        (n_req_rows × rows_per_req, maxP) int32, sentinel-padded — padding
+        requests, parked rows, and each row's tail past its reservation
+        all read as sentinel (writes there drop)."""
+        maxP = self._max_pages
+        out = np.full((n_req_rows * rows_per_req, maxP), sentinel, np.int32)
+        for i, r in enumerate(reqs):
+            live = widths[i] if widths is not None else rows_per_req
+            flat = np.asarray(r.pages, np.int32)
+            if flat.size == 0:
+                continue
+            ppr = flat.size // live
+            per_row = flat.reshape(live, ppr)
+            out[i * rows_per_req:i * rows_per_req + live, :ppr] = per_row
+        return out
+
     @staticmethod
     def _beam_gather_state(state: Dict[str, Any], idx: jax.Array):
-        """Reorder every batch-major leaf of the decode state (paper §5.3)."""
+        """Reorder every batch-major leaf of the decode state (paper §5.3).
+
+        Paged cache: the reorder degenerates to a block-table permutation
+        plus one partial-page copy (``kv_cache.gather_beams_paged``) — and
+        the cross-K/V / source-length leaves are *skipped entirely*: beam
+        reorders only ever permute rows within a group, and a group's rows
+        share one broadcast encoder memory, so that gather is an identity
+        by construction.  The cache payload slab stops moving.
+        """
+        cache = state.get("cache")
+        if isinstance(cache, kvc.PagedKVCache):
+            out = dict(state)
+            out["cache"] = kvc.gather_beams_paged(cache, idx)
+            return out
+
         def gather(leaf):
             return jnp.take(leaf, idx, axis=0)
 
@@ -341,6 +468,24 @@ class ServingEngine:
         tokens = tokens.at[slots].set(sub_tokens)
         return out, tokens
 
+    @staticmethod
+    def _insert_rows_paged(state: Dict[str, Any], sub: Dict[str, Any],
+                           tokens: jax.Array, sub_tokens: jax.Array,
+                           slots: jax.Array, pages: jax.Array):
+        """Paged ``_insert_rows``: same splice contract, but the main cache
+        is a page pool — the contiguous side-batch rows are chunked into
+        the destination rows' page reservations (``pages``, sentinel-
+        padded) and the block tables installed alongside."""
+        out = dict(state)
+        out["cache"] = kvc.insert_rows_paged(state["cache"], sub["cache"],
+                                             slots, pages)
+        out["cross_k"] = state["cross_k"].at[:, slots].set(sub["cross_k"])
+        out["cross_v"] = state["cross_v"].at[:, slots].set(sub["cross_v"])
+        out["src_lengths"] = state["src_lengths"].at[slots].set(
+            sub["src_lengths"])
+        tokens = tokens.at[slots].set(sub_tokens)
+        return out, tokens
+
     # ------------------------------------------------------- prefill splice
     def _prefill_padded(self, src_rows: np.ndarray, len_rows: np.ndarray):
         """Prefill a side batch padded to a power-of-two width.
@@ -362,18 +507,42 @@ class ServingEngine:
         return logits, sub, width
 
     def _splice_rows(self, state, tokens, sub, sub_tokens, rows: np.ndarray,
-                     width: int):
+                     width: int, pages: Optional[np.ndarray] = None):
         """Splice the first ``len(rows)`` rows of a prefilled side batch
         into the running decode state at ``rows``; the side batch's
         padding rows get an out-of-range sentinel destination (the total
         row count) and are dropped by jax scatter semantics.
         ``sub_tokens`` is already ``width``-long (padding-row entries are
         discarded with their rows), keeping every device shape a function
-        of the pow2 bucket, never of the admission-group size."""
+        of the pow2 bucket, never of the admission-group size.
+        ``pages`` (paged cache): (width, maxP) per-row page reservations,
+        sentinel rows for the padding."""
         slots = np.full((width,), tokens.shape[0], np.int32)  # OOB sentinel
         slots[:len(rows)] = rows
+        if pages is not None:
+            return self._insert_paged(state, sub, tokens, sub_tokens,
+                                      jnp.asarray(slots), jnp.asarray(pages))
         return self._insert(state, sub, tokens, sub_tokens,
                             jnp.asarray(slots))
+
+    def _free_and_splice(self, state, live, ck, cv, slens, adm_rows,
+                         adm_pages, group: int = 1):
+        """Fused-admission prologue shared by the greedy and beam burst
+        programs, so the token-identity-critical free→splice sequence
+        exists exactly once: reset dead rows (cursor only unpaged; cursor
+        + sentinel tables paged — their pages may be reassigned by this
+        very splice), then install the admitted rows' cross-K/V (and, on
+        the paged cache, their page reservations from ``adm_pages[0]`` —
+        the varargs tuple is empty on unpaged engines)."""
+        state = dict(state)
+        if self.paged:
+            state["cache"] = kvc.free_inactive_paged(state["cache"], live)
+            return self.model.splice_prefill(state, ck, cv, slens, adm_rows,
+                                             group=group,
+                                             pages=adm_pages[0])
+        state["cache"] = kvc.free_inactive(state["cache"], live)
+        return self.model.splice_prefill(state, ck, cv, slens, adm_rows,
+                                         group=group)
 
     # ---------------------------------------------------------------- bursts
     def _greedy_burst_fn(self, width: int) -> Callable:
@@ -464,16 +633,16 @@ class ServingEngine:
         only on the pow2 admission width, never the admitted count.
         """
         model, quant = self.model, self.quant
+        free_and_splice = self._free_and_splice
         loop = self._greedy_while(width)
 
         def burst(params, tokens, remaining, steps_cap, state,
-                  adm_src, adm_lens, adm_rows):
+                  adm_src, adm_lens, adm_rows, *adm_pages):
             ck, cv, slens = model.encode_cross_kv(
                 params, {"src_tokens": adm_src, "src_lengths": adm_lens},
                 quant=quant)
-            state = dict(state)
-            state["cache"] = kvc.free_inactive(state["cache"], remaining > 0)
-            state = model.splice_prefill(state, ck, cv, slens, adm_rows)
+            state = free_and_splice(state, remaining > 0, ck, cv, slens,
+                                    adm_rows, adm_pages)
             tokens = tokens.at[adm_rows].set(0, mode="drop")       # BOS
             return loop(params, tokens, remaining, steps_cap, state)
 
@@ -499,12 +668,22 @@ class ServingEngine:
         frozen while their decode state advances with garbage (nothing
         reads it).  An all-True mask reproduces the unmasked
         ``generate_beam`` step exactly.
+
+        ``parked`` is a per-row mask for **mixed beam widths**: a request
+        with ``beam_req < beam`` occupies only the first ``beam_req`` rows
+        of its group; the tail rows are *parked* — pinned to EOS /
+        ``BEAM_SEED_NEG`` / finished, self-gathering — so their candidates
+        score ``-1e30 + 0`` and can never enter the group's top-k ahead of
+        a real hypothesis, while the top-k's first ``beam_req`` slots (it
+        returns descending) are exactly ``top_k(real candidates,
+        beam_req)``: the step *is* a ``beam_req``-wide beam step.  An
+        all-False mask reproduces the uniform-width step exactly.
         """
         model, quant, eos = self.model, self.quant, self.eos_id
         gather_state = self._beam_gather_state
 
         def step_fn(params, tokens, scores, finished, comp, state, buf,
-                    step, act_r):
+                    step, act_r, parked):
             R = tokens.shape[0]
             G = R // beam
             logits, state = model.decode_step(params, tokens, state,
@@ -518,13 +697,16 @@ class ServingEngine:
             scores_new, flat_idx = jax.lax.top_k(cand, beam)
             src_beam = flat_idx // V
             tok_new = (flat_idx % V).reshape(R).astype(jnp.int32)
+            tok_new = jnp.where(parked, eos, tok_new)
             gidx = (src_beam + jnp.arange(G)[:, None] * beam).reshape(R)
-            gidx = jnp.where(act_r, gidx, jnp.arange(R, dtype=jnp.int32))
+            gidx = jnp.where(act_r & ~parked, gidx,
+                             jnp.arange(R, dtype=jnp.int32))
             state = gather_state(state, gidx)
             tokens = jnp.where(act_r, tok_new, tokens)
             scores = jnp.where(act_r, scores_new.reshape(R), scores)
+            scores = jnp.where(parked, BEAM_SEED_NEG, scores)
             finished = jnp.take(finished, gidx, axis=0) | \
-                (act_r & (tokens == eos))
+                (act_r & (tokens == eos)) | parked
             comp = jnp.take(comp, gidx, axis=0)
             buf = jnp.take(buf, gidx, axis=0)
             buf = buf.at[:, step].set(jnp.where(act_r, tokens, eos))
@@ -550,6 +732,7 @@ class ServingEngine:
             buf0 = jnp.full((BB, width), eos, jnp.int32)
             comp0 = jnp.arange(BB, dtype=jnp.int32)
             all_rows = jnp.ones((BB,), bool)
+            none_parked = jnp.zeros((BB,), bool)
 
             def cond(carry):
                 step, _, _, finished, _, _, _ = carry
@@ -559,7 +742,7 @@ class ServingEngine:
                 step, tokens, scores, finished, comp, state, buf = carry
                 tokens, scores, finished, comp, state, buf = step_fn(
                     params, tokens, scores, finished, comp, state, buf,
-                    step, all_rows)
+                    step, all_rows, none_parked)
                 return (step + 1, tokens, scores, finished, comp, state, buf)
 
             carry = (jnp.int32(0), tokens, scores, finished, comp0, state,
@@ -604,7 +787,7 @@ class ServingEngine:
         step_fn = self._make_beam_step(beam)
 
         def burst(params, tokens, scores, finished, remaining, steps_cap,
-                  state):
+                  state, parked):
             R = tokens.shape[0]
             G = R // beam
             buf0 = jnp.full((R, width), eos, jnp.int32)
@@ -626,7 +809,7 @@ class ServingEngine:
                 act_r = jnp.repeat(act_g, beam)                   # (R,)
                 tokens, scores, finished, comp, state, buf = step_fn(
                     params, tokens, scores, finished, comp, state, buf,
-                    step, act_r)
+                    step, act_r, parked)
                 remaining = remaining - act_g.astype(remaining.dtype)
                 return (step + 1, tokens, scores, finished, remaining, comp,
                         state, buf)
@@ -675,22 +858,21 @@ class ServingEngine:
         beam-0 logits, at the beam-0 log-probs.
         """
         model, quant = self.model, self.quant
+        free_and_splice = self._free_and_splice
         loop = self._beam_serve_while(width, beam)
 
         def burst(params, tokens, scores, finished, remaining, steps_cap,
-                  state, adm_src, adm_lens, adm_bases):
+                  state, parked, adm_src, adm_lens, adm_bases, *adm_pages):
             ck, cv, slens = model.encode_cross_kv(
                 params, {"src_tokens": adm_src, "src_lengths": adm_lens},
                 quant=quant)
             live = jnp.repeat(remaining > 0, beam)                 # (R,)
-            state = dict(state)
-            state["cache"] = kvc.free_inactive(state["cache"], live)
-            state = model.splice_prefill(state, ck, cv, slens, adm_bases,
-                                         group=beam)
+            state = free_and_splice(state, live, ck, cv, slens, adm_bases,
+                                    adm_pages, group=beam)
             rows = kvc.group_rows(jnp.asarray(adm_bases, jnp.int32), beam)
             tokens = tokens.at[rows].set(0, mode="drop")           # BOS
             return loop(params, tokens, scores, finished, remaining,
-                        steps_cap, state)
+                        steps_cap, state, parked)
 
         donate = (1, 6) if self._donate_state else ()
         return jax.jit(burst, donate_argnums=donate)
@@ -775,7 +957,7 @@ class ServingEngine:
               admit_min_free: int = 1,
               pad_to_multiple: int = 8,
               burst_len: Optional[Union[int, str]] = None,
-              beam: Optional[int] = None,
+              beam: Optional[Union[int, Sequence[int]]] = None,
               alpha: float = 0.6,
               fused_admission: bool = True) -> ServeResult:
         """Continuous-batching decode over a request stream.
@@ -806,6 +988,9 @@ class ServingEngine:
         INT8 KV cache alike.  ``beam=None`` (default) is the greedy path;
         ``beam=1`` runs the beam machinery with single-row groups (same
         tokens as greedy, but with scores and the beam drain path).
+        ``beam`` may also be a per-request sequence (mixed widths in one
+        grid: narrower requests park their groups' tail rows and — on the
+        paged cache — reserve pages only for the rows they actually run).
 
         ``admit_min_free`` is admission hysteresis: wait until that many
         slot groups are free before paying for a prefill round (larger
@@ -830,7 +1015,7 @@ class ServingEngine:
         """
         if beam is not None:
             return self._serve_beam(
-                requests, n_slots=n_slots, beam=int(beam), alpha=alpha,
+                requests, n_slots=n_slots, beam=beam, alpha=alpha,
                 max_new_tokens=max_new_tokens,
                 prefill_token_budget=prefill_token_budget,
                 admit_min_free=admit_min_free,
@@ -845,7 +1030,8 @@ class ServingEngine:
                                wall_s=0.0, host_syncs=0,
                                burst_len=ctrl.k if ctrl else K,
                                fused_admission=fused_admission,
-                               auto_burst=ctrl is not None)
+                               auto_burst=ctrl is not None,
+                               paged=self.paged, page_size=self.page_size)
         if max(r.max_new_tokens for r in reqs) > self.max_len:
             raise ValueError("a request's max_new_tokens exceeds the "
                              f"engine KV capacity {self.max_len}")
@@ -853,17 +1039,30 @@ class ServingEngine:
         burst = self._greedy_burst_fn(width)
         fused_burst = (self._fused_greedy_burst_fn(width)
                        if fused_admission else None)
-        m = pad_to_multiple
-        enc_len = max(r.n_src_tokens for r in reqs)
-        enc_len = ((enc_len + m - 1) // m) * m
+        enc_len = self._enc_bucket(reqs, pad_to_multiple)
 
+        allocator = None
+        if self.paged:
+            allocator = self._make_allocator(n_slots)
+            for r in reqs:
+                need = self._pages_per_request(r, 1)
+                if need > allocator.n_pages:
+                    raise ValueError(
+                        f"request {r.req_id} needs {need} pages but the "
+                        f"pool holds {allocator.n_pages}")
         sched = ContinuousScheduler(
-            n_slots, prefill_token_budget=prefill_token_budget)
+            n_slots, prefill_token_budget=prefill_token_budget,
+            allocator=allocator,
+            pages_per_request=(
+                (lambda r: self._pages_per_request(r, 1))
+                if allocator else None))
         sched.submit_many(reqs)
 
         quantized = self.quant.quantize_kv
         state = self.model.init_decode_state(
-            n_slots, self.max_len, quantized=quantized, enc_len=enc_len)
+            n_slots, self.max_len, quantized=quantized, enc_len=enc_len,
+            paged=self.paged, page_size=self.page_size,
+            n_pages=allocator.n_pages if allocator else None)
         tokens = jnp.zeros((n_slots,), jnp.int32)
 
         t0 = time.perf_counter()
@@ -886,9 +1085,12 @@ class ServingEngine:
             # argmax at the padded width: device shapes depend only on the
             # pow2 bucket; the admission-group size g appears host-side
             first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            pages = (self._page_rows(admitted, 1, width, allocator.n_pages)
+                     if allocator else None)
             state, tokens = self._splice_rows(
                 state, tokens, sub, first,
-                np.asarray([r.slot for r in admitted], np.int32), width)
+                np.asarray([r.slot for r in admitted], np.int32), width,
+                pages=pages)
             first_host = np.asarray(first)[:g]
             t = now()
             for r, tok in zip(admitted, first_host):
@@ -936,7 +1138,15 @@ class ServingEngine:
                 remaining[slot] = req.max_new_tokens - len(req.tokens)
             cap = jnp.asarray(ctrl.k, jnp.int32) if ctrl else cap_fixed
             t_dispatch = time.perf_counter()
-            if plan is not None and plan.width:
+            if plan is not None and plan.width and allocator:
+                tokens, _, state, buf, steps_dev = fused_burst(
+                    self.params, tokens, jnp.asarray(remaining), cap, state,
+                    jnp.asarray(plan.src_tokens),
+                    jnp.asarray(plan.src_lengths),
+                    jnp.asarray(plan.base_rows),
+                    jnp.asarray(self._page_rows(plan.requests, 1, plan.width,
+                                                allocator.n_pages)))
+            elif plan is not None and plan.width:
                 tokens, _, state, buf, steps_dev = fused_burst(
                     self.params, tokens, jnp.asarray(remaining), cap, state,
                     jnp.asarray(plan.src_tokens),
@@ -982,8 +1192,9 @@ class ServingEngine:
                 # fused mode resets dead cursors inside the next admission
                 # burst's prologue (kv_cache.free_inactive) — no dispatch
                 state = dict(state)
-                state["cache"] = kvc.free_slots(
-                    state["cache"], np.asarray(freed, np.int32))
+                free = kvc.free_slots_paged if self.paged else kvc.free_slots
+                state["cache"] = free(state["cache"],
+                                      np.asarray(freed, np.int32))
 
         return ServeResult(requests=reqs, n_slots=n_slots,
                            decode_steps=decode_steps,
@@ -994,11 +1205,14 @@ class ServingEngine:
                            prefill_dispatches=prefill_dispatches,
                            encoder_tokens=encoder_tokens,
                            fused_admission=fused_admission,
-                           auto_burst=ctrl is not None)
+                           auto_burst=ctrl is not None,
+                           paged=self.paged, page_size=self.page_size,
+                           pages_in_use=allocator.in_use if allocator else 0,
+                           page_hwm=allocator.hwm if allocator else 0)
 
     # ------------------------------------------------- continuous beam search
     def _serve_beam(self, requests: Sequence[Any], *, n_slots: int,
-                    beam: int, alpha: float,
+                    beam: Union[int, Sequence[int]], alpha: float,
                     max_new_tokens: Union[int, Sequence[int]],
                     prefill_token_budget: Optional[int],
                     admit_min_free: int, pad_to_multiple: int,
@@ -1033,12 +1247,45 @@ class ServingEngine:
         top-k over beam-0 logits exactly as ``generate_beam`` does, and
         the group's token history starts empty (the first tokens arrive
         with the burst drain, in final beam order).
+
+        **Mixed beam widths**: ``beam`` may be a per-request sequence (or
+        ``Request.beam`` may be set).  The grid compiles one program at
+        the *maximum* width; a narrower request runs only the first
+        ``beam_req`` rows of its group and the tail rows are *parked*
+        (see ``_make_beam_step``) — each step is then exactly a
+        ``beam_req``-wide beam step, so every request stays
+        token-identical to ``generate_beam(beam=beam_req)``.  With the
+        paged cache, parked rows reserve **no pages**, so mixed widths
+        cost HBM proportional to the widths actually requested — no
+        fragmentation-aware free list, because pages cannot fragment.
         """
-        if beam < 1:
-            raise ValueError(f"beam must be ≥ 1, got {beam}")
+        reqs = self._as_requests(requests, max_new_tokens)
+        # resolve each request's effective width WITHOUT mutating the
+        # caller's Request objects (a serve()-written default would stick
+        # to a reused Request and silently shadow a later serve's beam):
+        # an explicit `beam` sequence wins, then a user-set Request.beam,
+        # then the scalar default
+        if isinstance(beam, (list, tuple, np.ndarray)):
+            seq = [int(b) for b in beam]
+            if len(seq) != len(reqs):
+                raise ValueError(f"beam sequence length {len(seq)} != "
+                                 f"{len(reqs)} requests")
+            width_of = {r.req_id: b for r, b in zip(reqs, seq)}
+            default_beam = max(seq) if seq else 1
+        else:
+            default_beam = int(beam)
+            if default_beam < 1:
+                raise ValueError(f"beam must be ≥ 1, got {default_beam}")
+            width_of = {r.req_id: (int(r.beam) if r.beam is not None
+                                   else default_beam) for r in reqs}
+        for r in reqs:
+            if width_of[r.req_id] < 1:
+                raise ValueError(f"beam must be ≥ 1, got "
+                                 f"{width_of[r.req_id]} "
+                                 f"(request {r.req_id})")
+        beam = max(list(width_of.values()) + [default_beam])  # grid width
         K = self._resolve_burst(burst_len)
         ctrl = self._burst_controller(K)
-        reqs = self._as_requests(requests, max_new_tokens)
         n_groups = n_slots // beam
         if n_groups < 1:
             raise ValueError(f"n_slots={n_slots} rows cannot hold a "
@@ -1050,7 +1297,8 @@ class ServingEngine:
                                wall_s=0.0, host_syncs=0,
                                burst_len=ctrl.k if ctrl else K,
                                beam=beam, fused_admission=fused_admission,
-                               auto_burst=ctrl is not None)
+                               auto_burst=ctrl is not None,
+                               paged=self.paged, page_size=self.page_size)
         if max(r.max_new_tokens for r in reqs) > self.max_len:
             raise ValueError("a request's max_new_tokens exceeds the "
                              f"engine KV capacity {self.max_len}")
@@ -1058,18 +1306,43 @@ class ServingEngine:
         burst = self._beam_serve_burst_fn(width, beam)
         fused_burst = (self._fused_beam_serve_burst_fn(width, beam)
                        if fused_admission else None)
-        m = pad_to_multiple
-        enc_len = max(r.n_src_tokens for r in reqs)
-        enc_len = ((enc_len + m - 1) // m) * m
+        enc_len = self._enc_bucket(reqs, pad_to_multiple)
 
+        allocator = None
+        if self.paged:
+            allocator = self._make_allocator(R)
+            for r in reqs:
+                need = self._pages_per_request(r, width_of[r.req_id])
+                if need > allocator.n_pages:
+                    raise ValueError(
+                        f"request {r.req_id} needs {need} pages but the "
+                        f"pool holds {allocator.n_pages}")
         sched = ContinuousScheduler(
-            R, group_size=beam, prefill_token_budget=prefill_token_budget)
+            R, group_size=beam, prefill_token_budget=prefill_token_budget,
+            allocator=allocator,
+            pages_per_request=(
+                (lambda r: self._pages_per_request(r, width_of[r.req_id]))
+                if allocator else None))
         sched.submit_many(reqs)
 
         quantized = self.quant.quantize_kv
         state = self.model.init_decode_state(
-            R, self.max_len, quantized=quantized, enc_len=enc_len)
+            R, self.max_len, quantized=quantized, enc_len=enc_len,
+            paged=self.paged, page_size=self.page_size,
+            n_pages=allocator.n_pages if allocator else None)
         tokens = jnp.zeros((R,), jnp.int32)
+        # bytes one beam step's cache reorder moves: paged = the table
+        # permutation + one partial-page copy per row; unpaged = the whole
+        # KV slab plus the per-row cross-K/V gather
+        cache0 = state["cache"]
+        if self.paged:
+            reorder_step_bytes = cache0.reorder_bytes_per_step()
+        else:
+            cross_bytes = 0
+            if state["cross_k"] is not None:
+                cross_bytes = 2 * (state["cross_k"].size
+                                   * state["cross_k"].dtype.itemsize)
+            reorder_step_bytes = cache0.nbytes() + cross_bytes
         # host-side per-row beam state (re-uploaded each burst, bit-exact)
         scores_np = np.zeros((R,), np.float32)
         finished_np = np.ones((R,), bool)        # unoccupied rows are inert
@@ -1090,9 +1363,11 @@ class ServingEngine:
         def finalize(req: Request, base: int, t: float, step: int) -> int:
             """Pick the group's winner (same helper ``generate_beam``
             uses), then release the request (returns the freed base row).
-            """
-            grid = np.stack(histories.pop(base), axis=1)     # (beam, T)
-            toks, score = self._winner(grid, scores_np[base:base + beam],
+            Only the request's own ``beam`` rows compete — parked tail
+            rows of a narrow group carry no hypotheses."""
+            b = width_of[req.req_id]
+            grid = np.stack(histories.pop(base), axis=1)[:b]   # (b, T)
+            toks, score = self._winner(grid, scores_np[base:base + b],
                                        alpha, self.eos_id)
             req.tokens = [int(x) for x in toks]
             req.score = score
@@ -1123,17 +1398,31 @@ class ServingEngine:
             tok_host = np.argsort(-first, axis=-1,
                                   kind="stable")[:, :beam].astype(np.int32)
             sc_host = np.take_along_axis(first, tok_host, axis=-1)
+            # narrow requests: only the first beam_req candidates become
+            # hypotheses; the parked tail rows seed as finished EOS rows
+            # at the score floor (exactly the fused path's park seed)
+            for i, r in enumerate(admitted):
+                b = width_of[r.req_id]
+                tok_host[i, b:] = self.eos_id
+                sc_host[i, b:] = BEAM_SEED_NEG
             sub_np = np.full((width,), self.eos_id, np.int32)
             sub_np[:rows] = tok_host.reshape(rows)
+            pages = None
+            if allocator:
+                pages = np.full((width, self._max_pages), allocator.n_pages,
+                                np.int32)
+                pages[:rows] = self._page_rows(
+                    admitted, beam, g, allocator.n_pages,
+                    widths=[width_of[r.req_id] for r in admitted])
             state, tokens = self._splice_rows(
                 state, tokens, sub, jnp.asarray(sub_np),
                 np.asarray(kvc.group_rows(
                     np.asarray([r.slot for r in admitted], np.int32),
                     beam)),
-                width)
+                width, pages=pages)
             t = now()
             for i, r in enumerate(admitted):
-                base = r.slot
+                base, b = r.slot, width_of[r.req_id]
                 r.first_token_s = t
                 if r.max_new_tokens <= 0:
                     finished_np[base:base + beam] = True
@@ -1141,6 +1430,7 @@ class ServingEngine:
                     continue                     # zero budget: empty output
                 scores_np[base:base + beam] = sc_host[i]
                 fin = tok_host[i] == self.eos_id
+                fin[b:] = True                   # parked rows stay finished
                 finished_np[base:base + beam] = fin
                 histories[base] = [tok_host[i].astype(np.int32)]
                 budget_left[base] = r.max_new_tokens - 1
@@ -1166,10 +1456,11 @@ class ServingEngine:
                     prefill_rounds += 1
                 encoder_tokens += len(plan.requests) * enc_len
                 for r in plan.requests:
-                    base = r.slot
+                    base, b = r.slot, width_of[r.req_id]
                     scores_np[base] = 0.0
                     scores_np[base + 1:base + beam] = BEAM_SEED_NEG
-                    finished_np[base:base + beam] = False
+                    finished_np[base:base + b] = False
+                    finished_np[base + b:base + beam] = True   # parked tail
                     histories[base] = []
                     budget_left[base] = r.max_new_tokens
             elif want_admit:
@@ -1186,16 +1477,31 @@ class ServingEngine:
                 continue    # every admitted group finished on token 1
 
             remaining_in = np.zeros((n_groups,), np.int32)
-            for base in sched.slot_map:
+            parked_np = np.zeros((R,), bool)
+            for base, req in sched.slot_map.items():
                 remaining_in[base // beam] = budget_left[base]
+                parked_np[base + width_of[req.req_id]:base + beam] = True
+            parked = jnp.asarray(parked_np)
             cap = jnp.asarray(ctrl.k, jnp.int32) if ctrl else cap_fixed
             t_dispatch = time.perf_counter()
-            if plan is not None and plan.width:
+            if plan is not None and plan.width and allocator:
                 (tokens, scores_dev, finished_dev, remaining_dev, comp,
                  state, buf, steps_dev) = fused_burst(
                     self.params, tokens, jnp.asarray(scores_np),
                     jnp.asarray(finished_np), jnp.asarray(remaining_in),
-                    cap, state, jnp.asarray(plan.src_tokens),
+                    cap, state, parked, jnp.asarray(plan.src_tokens),
+                    jnp.asarray(plan.src_lengths),
+                    jnp.asarray(plan.base_rows),
+                    jnp.asarray(self._page_rows(
+                        plan.requests, beam, plan.width, allocator.n_pages,
+                        widths=[width_of[r.req_id]
+                                for r in plan.requests])))
+            elif plan is not None and plan.width:
+                (tokens, scores_dev, finished_dev, remaining_dev, comp,
+                 state, buf, steps_dev) = fused_burst(
+                    self.params, tokens, jnp.asarray(scores_np),
+                    jnp.asarray(finished_np), jnp.asarray(remaining_in),
+                    cap, state, parked, jnp.asarray(plan.src_tokens),
                     jnp.asarray(plan.src_lengths),
                     jnp.asarray(plan.base_rows))
             else:
@@ -1203,7 +1509,7 @@ class ServingEngine:
                  state, buf, steps_dev) = burst(
                     self.params, tokens, jnp.asarray(scores_np),
                     jnp.asarray(finished_np), jnp.asarray(remaining_in),
-                    cap, state)
+                    cap, state, parked)
             buf_host = np.asarray(buf)         # ONE host sync per burst
             comp_host = np.asarray(comp)
             scores_np = np.array(scores_dev, np.float32)
@@ -1233,8 +1539,11 @@ class ServingEngine:
                                 for j in range(s_g))
                     histories[base] = hist
                     budget_left[base] -= s_g
-                busy_slot_steps += s_g * beam
-                wasted_row_steps += (steps - s_g) * beam
+                # parked rows of narrow requests are computed-but-idle grid
+                b_req = width_of[req.req_id]
+                busy_slot_steps += s_g * b_req
+                wasted_row_steps += (steps - s_g) * beam + \
+                    s_g * (beam - b_req)
                 if finished_np[base:base + beam].all() or \
                         budget_left[base] <= 0:
                     freed.append(finalize(req, base, t,
@@ -1245,8 +1554,13 @@ class ServingEngine:
                 # fused mode resets dead cursors inside the next admission
                 # burst's prologue (kv_cache.free_inactive) — no dispatch
                 state = dict(state)
-                state["cache"] = kvc.free_groups(
-                    state["cache"], np.asarray(freed, np.int32), beam)
+                if self.paged:
+                    state["cache"] = kvc.free_slots_paged(
+                        state["cache"],
+                        kvc.group_rows(np.asarray(freed, np.int32), beam))
+                else:
+                    state["cache"] = kvc.free_groups(
+                        state["cache"], np.asarray(freed, np.int32), beam)
 
         return ServeResult(requests=reqs, n_slots=R,
                            decode_steps=decode_steps,
@@ -1257,7 +1571,11 @@ class ServingEngine:
                            prefill_dispatches=prefill_dispatches,
                            encoder_tokens=encoder_tokens,
                            fused_admission=fused_admission,
-                           auto_burst=ctrl is not None)
+                           auto_burst=ctrl is not None,
+                           paged=self.paged, page_size=self.page_size,
+                           pages_in_use=allocator.in_use if allocator else 0,
+                           page_hwm=allocator.hwm if allocator else 0,
+                           reorder_bytes=reorder_step_bytes * decode_steps)
 
     # ------------------------------------------------------------------ beam
     def generate_beam(self, batch: Dict[str, np.ndarray], *, beam: int = 4,

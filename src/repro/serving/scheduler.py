@@ -32,7 +32,7 @@ import collections
 import dataclasses
 import queue
 import threading
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -107,6 +107,15 @@ class Request:
     # beam serving: winning hypothesis' length-penalized log-prob (None for
     # greedy decode, where there is exactly one hypothesis per request)
     score: Optional[float] = None
+    # mixed-beam serving: this request's own beam width (None = the serve
+    # call's default).  A request with beam < the grid's group width only
+    # runs (and reserves KV pages for) `beam` of its group's rows; the
+    # rest are parked.  Caller-owned config — the engine resolves widths
+    # into its own map and never writes this field.
+    beam: Optional[int] = None
+    # paged KV cache: flat page ids reserved for this request (scheduler-
+    # managed: allocated at admission, returned at release)
+    pages: Optional[List[int]] = None
 
     @property
     def n_src_tokens(self) -> int:
@@ -205,7 +214,9 @@ class ContinuousScheduler:
     """
 
     def __init__(self, n_slots: int, *, group_size: int = 1,
-                 prefill_token_budget: Optional[int] = None):
+                 prefill_token_budget: Optional[int] = None,
+                 allocator=None,
+                 pages_per_request: Optional[Callable[[Request], int]] = None):
         if n_slots < 1:
             raise ValueError(f"need at least one slot, got {n_slots}")
         if group_size < 1:
@@ -213,10 +224,21 @@ class ContinuousScheduler:
         if n_slots < group_size:
             raise ValueError(f"{n_slots} rows cannot hold a group of "
                              f"{group_size}")
+        if (allocator is None) != (pages_per_request is None):
+            raise ValueError("allocator and pages_per_request go together")
         self.n_slots = n_slots
         self.group_size = group_size
         self.n_groups = n_slots // group_size
         self.prefill_token_budget = prefill_token_budget
+        # paged KV admission: a request needs a free slot group AND
+        # pages_per_request(req) pages from the allocator.  Reservations
+        # are worst-case (the request's full budget), so admission can
+        # never over-commit and decode never needs to preempt; the head of
+        # the FIFO blocks the round when the pool is short (pages return
+        # at release, so it always eventually admits — no starvation, no
+        # deadlock, regardless of the beam-width mix).
+        self.allocator = allocator
+        self.pages_per_request = pages_per_request
         self._waiting: Deque[Request] = collections.deque()
         self._free: List[int] = [g * group_size for g in range(self.n_groups)]
         self.slot_map: Dict[int, Request] = {}
@@ -234,6 +256,7 @@ class ContinuousScheduler:
         req.admitted_step = None
         req.finish_step = None
         req.score = None
+        req.pages = None
         self._waiting.append(req)
 
     def submit_many(self, reqs: Sequence[Request]) -> None:
@@ -259,10 +282,17 @@ class ContinuousScheduler:
             cost = req.n_src_tokens * self.group_size
             if admitted and budget is not None and used + cost > budget:
                 break                    # next round; FIFO order preserved
+            pages = None
+            if self.allocator is not None:
+                n_pages = self.pages_per_request(req)
+                pages = self.allocator.alloc(n_pages)
+                if pages is None:
+                    break    # pool short: the FIFO head waits for releases
             self._waiting.popleft()
             slot = self._free.pop(0)
             req.status = "running"
             req.slot = slot
+            req.pages = pages
             req.admitted_s = now
             req.admitted_step = step
             self.slot_map[slot] = req
@@ -322,6 +352,9 @@ class ContinuousScheduler:
         req.finish_s = now
         req.finish_step = step
         req.slot = None
+        if req.pages is not None:
+            self.allocator.release(req.pages)
+            req.pages = None
         del self.slot_map[slot]
         self._free.append(slot)
         self._free.sort()
