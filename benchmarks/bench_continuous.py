@@ -34,6 +34,11 @@ Rows:
   bench-smoke job fails on any dispatch-count regression.
 * ``token_identity``       — continuous greedy output equals per-request
   ``generate`` output, token for token.
+* ``prefix_cache_*``       — repeated-prefix admission mix served cold vs
+  with ``prefix_cache=True``: output token identity, the proportional
+  ``encoder_tokens`` cut (a hit skips the encoder entirely), ≥1 reused
+  chain page per hit, and an all-hit / zero-allocation re-serve on the
+  warmed engine are all **asserted** for CI.
 * ``admission_enc_bucket`` — compile-variant regression: a serve sweep
   over several source-length mixes compiles one fused-burst variant per
   distinct ``enc_len`` under ``admission_enc_bucket="exact"`` but
@@ -41,7 +46,9 @@ Rows:
   variant-count drop is **asserted** (CI fails if the bucketing stops
   deduplicating programs).
 
-``--smoke`` shrinks the request count and measurement passes for CI.
+``--smoke`` shrinks the request count and measurement passes for CI;
+``--only SUBSTR`` runs just the sections whose name contains ``SUBSTR``
+(``pack``, ``continuous``, ``fused``, ``bucket``, ``prefix``).
 """
 
 from __future__ import annotations
@@ -118,20 +125,33 @@ def _run_continuous(engine, requests, budgets):
     return res, order, wall
 
 
-def run(smoke: bool = False) -> list:
+def run(smoke: bool = False, only: str = None) -> list:
     rows = []
     n_requests = 24 if smoke else N_REQUESTS
     passes = 1 if smoke else MEASURE_PASSES
     engine, requests, budgets = _engine_and_requests(n_requests)
 
+    def want(section: str) -> bool:
+        return only is None or only in section
+
     # 1 — prefill pad waste: fixed-size sorted batches vs FFD budget bins
-    fixed = padding_stats(requests, make_batches(requests, BATCH_SIZE,
-                                                 "tokens"))
-    ffd = padding_stats(requests, pack_batches_token_budget(requests, 256))
-    rows.append(("pack_pad_waste_fixed16", 0.0,
-                 f"pad_waste={fixed['pad_waste']:.4f}"))
-    rows.append(("pack_pad_waste_ffd256", 0.0,
-                 f"pad_waste={ffd['pad_waste']:.4f}"))
+    if want("pack"):
+        fixed = padding_stats(requests, make_batches(requests, BATCH_SIZE,
+                                                     "tokens"))
+        ffd = padding_stats(requests,
+                            pack_batches_token_budget(requests, 256))
+        rows.append(("pack_pad_waste_fixed16", 0.0,
+                     f"pad_waste={fixed['pad_waste']:.4f}"))
+        rows.append(("pack_pad_waste_ffd256", 0.0,
+                     f"pad_waste={ffd['pad_waste']:.4f}"))
+
+    if not want("continuous"):
+        rows.extend(_fused_rows(engine, requests, smoke, passes)
+                    if want("fused") else [])
+        rows.extend(_bucket_rows(engine) if want("bucket") else [])
+        rows.extend(_prefix_rows(engine, requests, smoke)
+                    if want("prefix") else [])
+        return rows
 
     # 2 — warmup both paths (jit compile, timed and reported separately),
     # then measure in interleaved pairs: each pass runs static then
@@ -173,11 +193,41 @@ def run(smoke: bool = False) -> list:
                  f"(static_util={sim['static_utilization']:.2f} "
                  f"cont_util={sim['continuous_utilization']:.2f})"))
 
-    # 3 — fused admission A/B: same workload, fused_admission on/off.
-    # Identity and the ≥2× host-sync cut are hard invariants (CI fails on
-    # regression): with budgets ≤ burst_len and requests ≡ 0 mod slots,
-    # unfused pays exactly 2 syncs/round (prefill drain + burst drain),
-    # fused exactly 1.
+    # 3 — fused admission A/B (hard invariants, CI fails on regression)
+    if want("fused"):
+        rows.extend(_fused_rows(engine, requests, smoke, passes))
+
+    # 4 — token identity: serve() output == per-request generate()
+    mismatches = 0
+    for i in range(0, n_requests, 12):
+        src, lens = pad_batch([requests[i].src])
+        g = engine.generate({"src_tokens": src, "src_lengths": lens},
+                            max_new_tokens=int(budgets[i]))
+        if not np.array_equal(np.asarray(g.tokens[0]), res.tokens_for(
+                order.index(i))):
+            mismatches += 1
+    rows.append(("token_identity", 0.0,
+                 f"mismatches={mismatches}/{len(range(0, n_requests, 12))}"))
+
+    # 5 — admission enc_len bucketing (asserted compile-variant dedup)
+    if want("bucket"):
+        rows.extend(_bucket_rows(engine))
+
+    # 6 — prefix cache on a repeated-prefix mix (asserted identity + cut)
+    if want("prefix"):
+        rows.extend(_prefix_rows(engine, requests, smoke))
+    return rows
+
+
+def _fused_rows(engine, requests, smoke: bool, passes: int) -> list:
+    """Fused admission A/B: same workload, fused_admission on/off.
+
+    Identity and the ≥2× host-sync cut are hard invariants (CI fails on
+    regression): with budgets ≤ burst_len and requests ≡ 0 mod slots,
+    unfused pays exactly 2 syncs/round (prefill drain + burst drain),
+    fused exactly 1.
+    """
+    rows = []
     n_fused = 12 if smoke else 32
     fused_reqs = requests[:n_fused]
     caps = [FUSED_BUDGET] * n_fused
@@ -211,25 +261,17 @@ def run(smoke: bool = False) -> list:
                  f"prefill_dispatches={unfused.prefill_dispatches} "
                  f"encoder_tokens={unfused.encoder_tokens} "
                  f"sync_cut={unfused.host_syncs / max(fused.host_syncs, 1):.2f}x"))
+    return rows
 
-    # 4 — token identity: serve() output == per-request generate()
-    mismatches = 0
-    for i in range(0, n_requests, 12):
-        src, lens = pad_batch([requests[i].src])
-        g = engine.generate({"src_tokens": src, "src_lengths": lens},
-                            max_new_tokens=int(budgets[i]))
-        if not np.array_equal(np.asarray(g.tokens[0]), res.tokens_for(
-                order.index(i))):
-            mismatches += 1
-    rows.append(("token_identity", 0.0,
-                 f"mismatches={mismatches}/{len(range(0, n_requests, 12))}"))
 
-    # 5 — admission enc_len bucketing: sweep serves over three source-
-    # length mixes (longest first, the steady-state of a sweep).  The
-    # state cross-K/V buffers and fused-admission inputs are enc_len-
-    # shaped, so "exact" respecializes every burst program per mix while
-    # "max" reuses the single pow2 bucket — asserted, with the drop
-    # reported.  Fresh engines so prior rows' caches don't pollute counts.
+def _bucket_rows(engine) -> list:
+    """Admission enc_len bucketing: sweep serves over three source-length
+    mixes (longest first, the steady-state of a sweep).  The state
+    cross-K/V buffers and fused-admission inputs are enc_len-shaped, so
+    "exact" respecializes every burst program per mix while "max" reuses
+    the single pow2 bucket — asserted, with the drop reported.  Fresh
+    engines so prior rows' caches don't pollute counts.
+    """
     cfg = engine.model.cfg
     sweep_sets = [make_corpus(8, cfg.vocab, seed=20 + i, max_words=w)
                   for i, w in enumerate((12, 6, 2))]
@@ -246,17 +288,81 @@ def run(smoke: bool = False) -> list:
                                     admission_enc_bucket="max"))
     if v_exact is None or v_max is None:
         # this jax exposes no jit-cache introspection: report, don't guess
-        rows.append(("admission_enc_bucket", 0.0,
-                     "variant counting unavailable on this jax version"))
-        return rows
+        return [("admission_enc_bucket", 0.0,
+                 "variant counting unavailable on this jax version")]
     assert v_max < v_exact, (
         "admission_enc_bucket='max' must compile fewer burst-program "
         f"variants than 'exact' over a source-length sweep: {v_max} vs "
         f"{v_exact}")
-    rows.append(("admission_enc_bucket", 0.0,
-                 f"variants_max={v_max} variants_exact={v_exact} "
-                 f"cut={v_exact / max(v_max, 1):.2f}x "
-                 f"(3 source-length mixes, one serve each)"))
+    return [("admission_enc_bucket", 0.0,
+             f"variants_max={v_max} variants_exact={v_exact} "
+             f"cut={v_exact / max(v_max, 1):.2f}x "
+             f"(3 source-length mixes, one serve each)")]
+
+
+def _prefix_rows(engine, requests, smoke: bool) -> list:
+    """Prefix-cache A/B on a repeated-prefix admission mix.
+
+    Each distinct source appears ``repeat`` times, so a warm serve should
+    encode each source once and hit the cache for the other
+    ``repeat - 1`` admissions.  Asserted (the CI smoke step runs this
+    section): per-request token identity against a cold-cache serve, the
+    *exactly* proportional ``encoder_tokens`` cut (a hit skips the
+    encoder entirely, so warm·n == cold·(n − hits)), ≥1 reused chain page
+    per hit, and an all-hit / zero-new-pages re-serve on the warm engine.
+    """
+    rows = []
+    n_uniq = 4 if smoke else 8
+    repeat = 3
+    mix = [requests[i % n_uniq] for i in range(n_uniq * repeat)]
+    n = len(mix)
+    caps = [FUSED_BUDGET] * n
+    cold_eng = ServingEngine(engine.model, engine.params, max_len=64)
+    warm_eng = ServingEngine(engine.model, engine.params, max_len=64,
+                             prefix_cache=True, prefix_pages=64)
+    serve = lambda eng: eng.serve(mix, n_slots=FUSED_SLOTS,
+                                  max_new_tokens=caps,
+                                  burst_len=FUSED_BURST)
+    cold, _, _ = measure(lambda: serve(cold_eng), warmup=1, passes=1)
+    t0 = time.perf_counter()
+    warm = serve(warm_eng)
+    warm_wall = time.perf_counter() - t0
+    for i in range(n):
+        assert np.array_equal(cold.tokens_for(i), warm.tokens_for(i)), (
+            f"prefix cache changed request {i}'s tokens")
+    hits = warm.prefix_hits
+    assert hits >= 1, "repeated-prefix mix produced no cache hits"
+    assert warm.encoder_tokens * n == cold.encoder_tokens * (n - hits), (
+        "encoder_tokens must drop exactly proportionally to the hit "
+        f"rate: cold={cold.encoder_tokens} warm={warm.encoder_tokens} "
+        f"hits={hits}/{n}")
+    assert warm.prefix_hit_pages >= hits, (
+        "every hit must reuse at least one cached chain page: "
+        f"{warm.prefix_hit_pages} pages for {hits} hits")
+    met = warm.metrics()
+    rows.append(("prefix_cache_warm", warm_wall * 1e6 / n,
+                 f"hit_rate={met['prefix_hit_rate']:.2f} "
+                 f"encoder_tokens={warm.encoder_tokens} "
+                 f"(cold={cold.encoder_tokens}) "
+                 f"hit_pages={warm.prefix_hit_pages} "
+                 f"chains={warm.prefix_chains}"))
+    # re-serve on the warmed engine: every admission hits, no new pages
+    t0 = time.perf_counter()
+    rewarm = serve(warm_eng)
+    rewarm_wall = time.perf_counter() - t0
+    for i in range(n):
+        assert np.array_equal(cold.tokens_for(i), rewarm.tokens_for(i)), (
+            f"warmed prefix cache changed request {i}'s tokens")
+    assert rewarm.prefix_hits == n and rewarm.prefix_pages_allocated == 0, (
+        "re-serving the same mix on a warmed engine must hit on every "
+        f"admission with zero new chain pages: hits={rewarm.prefix_hits}"
+        f"/{n}, allocated={rewarm.prefix_pages_allocated}")
+    assert rewarm.encoder_tokens == 0, (
+        f"all-hit serve still encoded {rewarm.encoder_tokens} row-tokens")
+    rows.append(("prefix_cache_rewarm", rewarm_wall * 1e6 / n,
+                 f"hit_rate={rewarm.metrics()['prefix_hit_rate']:.2f} "
+                 f"encoder_tokens=0 pages_allocated=0 "
+                 f"evictions={rewarm.prefix_evictions}"))
     return rows
 
 
@@ -264,6 +370,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small fast configuration for CI")
+    ap.add_argument("--only", default=None, metavar="SUBSTR",
+                    help="run only sections whose name contains SUBSTR "
+                         "(pack, continuous, fused, bucket, prefix)")
     args = ap.parse_args()
-    for r in run(smoke=args.smoke):
+    for r in run(smoke=args.smoke, only=args.only):
         print(",".join(str(x) for x in r))

@@ -34,7 +34,17 @@ def measure(fn: Callable, *, warmup: int = 1, passes: int = 3):
     take ``min`` or ``median`` of the times.  ``fn`` must return host-side
     results (e.g. ``ServeResult``/``GenerationResult``), so each call is
     already synchronized.
+
+    ``warmup`` must be ≥ 1 whenever anything is measured: with no warmup
+    call, jit compilation lands in the first measured pass and silently
+    skews every downstream number.  (``passes=0`` with ``warmup≥1`` is the
+    sanctioned compile-only / correctness-only use.)
     """
+    if warmup < 1 and passes > 0:
+        raise ValueError(
+            f"measure(warmup={warmup}) would fold jit compile into the "
+            "first measured pass; use warmup >= 1 (or passes=0 for an "
+            "unmeasured call)")
     t0 = time.perf_counter()
     for _ in range(warmup):
         fn()

@@ -82,6 +82,14 @@ def main() -> None:
     ap.add_argument("--n-pages", type=int, default=None,
                     help="page-pool size (--paged; default: contiguous-"
                          "equivalent capacity)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share encoded cross-K/V across requests with "
+                         "identical sources: a radix-tree hit bumps a page "
+                         "refcount instead of re-running the encoder "
+                         "(--mode continuous only; token-identical output)")
+    ap.add_argument("--prefix-pages", type=int, default=256,
+                    help="prefix-cache chain-pool size in pages "
+                         "(--prefix-cache; LRU-evicted under pressure)")
     args = ap.parse_args()
     burst_len = args.burst_len if args.burst_len == "auto" \
         else int(args.burst_len)
@@ -116,7 +124,9 @@ def main() -> None:
         engine = ServingEngine(model, params, quant=qctx, max_len=96,
                                burst_len=burst_len, paged=args.paged,
                                page_size=args.page_size,
-                               n_pages=args.n_pages)
+                               n_pages=args.n_pages,
+                               prefix_cache=args.prefix_cache,
+                               prefix_pages=args.prefix_pages)
         bins = pack_batches_token_budget(requests, args.token_budget)
         order = [i for b in bins for i in b]     # FFD admission order
         beam = args.beam if args.beam > 1 else None
@@ -153,6 +163,14 @@ def main() -> None:
                   f"({res.page_hwm * res.page_size} tokens), "
                   f"{res.pages_in_use} leaked, "
                   f"beam-reorder bytes {res.reorder_bytes}")
+        if res.prefix_cache:
+            print(f"prefix cache: {res.prefix_hits} hits / "
+                  f"{res.prefix_hits + res.prefix_misses} admissions "
+                  f"(hit rate {met['prefix_hit_rate']:.2f}), "
+                  f"{res.prefix_hit_pages} chain pages reused, "
+                  f"{res.prefix_pages_allocated} allocated, "
+                  f"{res.prefix_evictions} evicted, "
+                  f"{res.prefix_chains} chains resident")
         print(f"latency: first-token mean "
               f"{met['first_token_latency_mean_s']:.3f}s "
               f"p95 {met['first_token_latency_p95_s']:.3f}s; total mean "

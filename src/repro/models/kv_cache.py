@@ -575,35 +575,30 @@ def insert_rows_paged(cache: PagedKVCache, sub: KVCache, slots: jax.Array,
     )
 
 
-def gather_beams_paged(cache: PagedKVCache, beam_idx: jax.Array
-                       ) -> PagedKVCache:
-    """Zero-copy beam reorder: permute block tables, not payload.
+def cow_write_slot(cache: PagedKVCache) -> PagedKVCache:
+    """Copy-on-write for each row's *current write slot* page.
 
-    The contiguous :func:`gather_beams` moves the whole (L, B, S, HKV, dh)
-    slab every beam step; here the reorder is
+    For every row, copy the page its block table currently maps for the
+    next write position into the row's privately-owned page for that slot
+    (``own_pages``) and repoint the table entry there.  After this, the
+    next ``append_token_paged`` is guaranteed to land in a page the row
+    owns exclusively — it never writes into a page another row (or a
+    cached prefix chain with refcount > 1) also maps.
 
-    1. gather the (B, maxP) block tables and (B,) cursors by ``beam_idx``
-       (int32 index traffic only);
-    2. copy the source lineage's *current partial page* into the
-       destination row's own page for that slot and point the table entry
-       there — so the next append (which lands in that slot) writes into a
-       page the row owns privately, never into a page a sibling also
-       writes.
-
-    Invariant maintained: at append time, the table entry for the slot
-    being written always comes from ``own_pages`` — fresh admissions set
-    the whole table to ``own_pages`` and every reorder re-establishes it
-    for the next write slot.  Full (read-only) pages stay shared between
-    beams; sharing is always intra-group, and a group's rows are freed
-    atomically, so no refcounting is needed on device.
+    Rows whose table entry already points at their own page copy a page
+    onto itself (a no-op on content); rows whose own slot is the
+    unreserved sentinel drop the copy (``mode="drop"``).  This is the
+    primitive behind the zero-copy beam reorder (see
+    :func:`gather_beams_paged`) and the copy-on-write contract of shared
+    prefix pages: shared pages are only ever *read* through block tables,
+    and any row about to write through a shared mapping first diverts the
+    write slot into its own reservation here.
     """
     P, ps, maxP = cache.n_pages, cache.page_size, cache.max_pages
     B = cache.block_tables.shape[0]
     b_idx = jnp.arange(B)
-    tables = jnp.take(cache.block_tables, beam_idx, axis=0)
-    lengths = jnp.take(cache.lengths, beam_idx, axis=0)
-    sp = jnp.minimum(lengths // ps, maxP - 1)        # next write slot
-    src_page = jnp.clip(tables[b_idx, sp], 0, P - 1)
+    sp = jnp.minimum(cache.lengths // ps, maxP - 1)  # next write slot
+    src_page = jnp.clip(cache.block_tables[b_idx, sp], 0, P - 1)
     dst_page = cache.own_pages[b_idx, sp]            # sentinel → copy drops
 
     def cow(pool):
@@ -615,10 +610,87 @@ def gather_beams_paged(cache: PagedKVCache, beam_idx: jax.Array
     return PagedKVCache(
         k=cow(cache.k), v=cow(cache.v),
         k_scale=cow(cache.k_scale), v_scale=cow(cache.v_scale),
-        block_tables=tables.at[b_idx, sp].set(dst_page),
+        block_tables=cache.block_tables.at[b_idx, sp].set(dst_page),
         own_pages=cache.own_pages,                   # physical, never moves
-        lengths=lengths,
+        lengths=cache.lengths,
     )
+
+
+def gather_beams_paged(cache: PagedKVCache, beam_idx: jax.Array
+                       ) -> PagedKVCache:
+    """Zero-copy beam reorder: permute block tables, not payload.
+
+    The contiguous :func:`gather_beams` moves the whole (L, B, S, HKV, dh)
+    slab every beam step; here the reorder is
+
+    1. gather the (B, maxP) block tables and (B,) cursors by ``beam_idx``
+       (int32 index traffic only);
+    2. :func:`cow_write_slot`: copy the source lineage's *current partial
+       page* into the destination row's own page for that slot and point
+       the table entry there — so the next append (which lands in that
+       slot) writes into a page the row owns privately, never into a page
+       a sibling also writes.
+
+    Invariant maintained: at append time, the table entry for the slot
+    being written always comes from ``own_pages`` — fresh admissions set
+    the whole table to ``own_pages`` and every reorder re-establishes it
+    for the next write slot.  Full (read-only) pages stay shared between
+    beams; sharing is always intra-group, and a group's rows are freed
+    atomically, so no refcounting is needed on device.
+    """
+    return cow_write_slot(PagedKVCache(
+        k=cache.k, v=cache.v, k_scale=cache.k_scale, v_scale=cache.v_scale,
+        block_tables=jnp.take(cache.block_tables, beam_idx, axis=0),
+        own_pages=cache.own_pages,
+        lengths=jnp.take(cache.lengths, beam_idx, axis=0),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# prefix-chain pools: page-granular storage for cached cross-attention K/V
+# ---------------------------------------------------------------------------
+#
+# The prefix cache (serving/prefix_cache.py) stores each cached source's
+# encoded cross-attention K/V as a chain of fixed-size pages in a dedicated
+# pool of shape (L, n_pages, page_size, HKV, dh), kept in the activation
+# dtype (never re-quantized: a cached read must be bit-identical to a fresh
+# encode).  These two helpers are the only device ops it needs: scatter a
+# freshly encoded batch into reserved chains, and gather chains back into
+# the (L, B, S, HKV, dh) layout that ``splice_prefill`` consumes.
+
+def insert_chain_pages(pool: jax.Array, part: jax.Array,
+                       pages: jax.Array) -> jax.Array:
+    """Scatter per-row payload into reserved page chains.
+
+    ``pool``: (L, P, ps, …); ``part``: (L, B, S, …); ``pages``: (B, nP)
+    int32 with ``nP = ceil(S / ps)`` — sentinel entries (≥ P) drop their
+    chunk, so padding rows write nowhere.
+    """
+    L, B, S = part.shape[0], part.shape[1], part.shape[2]
+    ps = pool.shape[2]
+    nP = pages.shape[1]
+    pad = nP * ps - S
+    if pad:
+        part = jnp.pad(part, [(0, 0), (0, 0), (0, pad)]
+                       + [(0, 0)] * (part.ndim - 3))
+    chunks = part.reshape((L, B * nP, ps) + part.shape[3:])
+    ids = jnp.asarray(pages, jnp.int32).reshape(B * nP)
+    return pool.at[:, ids].set(chunks.astype(pool.dtype), mode="drop")
+
+
+def gather_chain_pages(pool: jax.Array, pages: jax.Array,
+                       seq_len: int) -> jax.Array:
+    """Read page chains back as contiguous rows.
+
+    ``pages``: (B, nP) int32 → (L, B, seq_len, …).  Sentinel entries clamp
+    into the pool and read garbage past each chain's valid span — callers
+    mask by source length exactly as they would a fresh encode's padding.
+    """
+    P = pool.shape[1]
+    B, nP = pages.shape
+    got = pool[:, jnp.clip(pages, 0, P - 1)]         # (L, B, nP, ps, …)
+    got = got.reshape((pool.shape[0], B, nP * pool.shape[2]) + pool.shape[3:])
+    return got[:, :, :seq_len]
 
 
 class PageAllocator:
@@ -627,9 +699,16 @@ class PageAllocator:
     The scheduler reserves ``pages_per_row(budget) × live rows`` pages at
     admission and returns them at release, so admission is gated by real
     HBM instead of contiguous row capacity.  Refcounts support shared
-    reservations (``retain``); the serving engine keeps every reservation
-    exclusive (sharing happens on device, strictly inside beam groups that
-    free atomically), so its counts are only ever 0 or 1.
+    reservations (``retain``): the prefix cache hash-conses page chains
+    across requests, so counts > 1 are real — the chain's tree entry holds
+    one reference and every request currently reading it holds another.
+    Decode reservations stay exclusive (sharing there happens on device,
+    strictly inside beam groups that free atomically).
+
+    Every mutating call validates its *entire* argument first and only
+    then mutates, so a bad call (double free, retain of a free page,
+    duplicate page ids whose combined drop exceeds the refcount) raises
+    without changing any state — callers can treat errors as atomic.
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -653,29 +732,60 @@ class PageAllocator:
     def pages_for_tokens(self, n_tokens: int) -> int:
         return pages_per_row(n_tokens, self.page_size)
 
+    def _check(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if not 0 <= p < self.n_pages:
+                raise ValueError(f"page id {p} outside pool "
+                                 f"[0, {self.n_pages})")
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Take ``n`` pages (refcount 1 each) or None if the pool can't."""
+        """Take ``n`` pages (refcount 1 each) or None if the pool can't.
+
+        The free list is peeked and validated *before* any page leaves it:
+        a corrupted pool (a free-listed page with a live refcount) raises
+        with the free list intact rather than handing out the page.  These
+        are raised exceptions, not asserts — the invariants must hold
+        under ``python -O`` too, now that refcounts > 1 are real.
+        """
         if n < 0:
             raise ValueError(f"cannot alloc {n} pages")
         if n > len(self._free):
             return None
-        pages = [self._free.pop() for _ in range(n)]
+        candidates = self._free[len(self._free) - n:]
+        for p in candidates:
+            if self._refcount[p] != 0:
+                raise RuntimeError(
+                    f"page {p} double-assigned: on the free list with "
+                    f"refcount {self._refcount[p]}")
+        del self._free[len(self._free) - n:]
+        pages = list(reversed(candidates))               # pop() order
         for p in pages:
-            assert self._refcount[p] == 0, f"page {p} double-assigned"
             self._refcount[p] = 1
         self.hwm = max(self.hwm, self.in_use)
         return pages
 
     def retain(self, pages: Sequence[int]) -> None:
+        self._check(pages)
         for p in pages:
             if self._refcount[p] <= 0:
                 raise ValueError(f"retain of unallocated page {p}")
+        for p in pages:
             self._refcount[p] += 1
 
     def release(self, pages: Sequence[int]) -> None:
+        # validate the FULL list (with multiplicity: releasing [p, p]
+        # against refcount 1 is a double free) before mutating anything —
+        # a partial release would leave the pool inconsistent.
+        self._check(pages)
+        drops: dict = {}
         for p in pages:
-            if self._refcount[p] <= 0:
-                raise ValueError(f"release of unallocated page {p}")
+            drops[p] = drops.get(p, 0) + 1
+        for p, n in drops.items():
+            if self._refcount[p] < n:
+                raise ValueError(
+                    f"release of page {p} ×{n} exceeds refcount "
+                    f"{self._refcount[p]} (double free)")
+        for p in pages:
             self._refcount[p] -= 1
             if self._refcount[p] == 0:
                 self._free.append(p)

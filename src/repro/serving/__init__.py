@@ -4,6 +4,11 @@ from repro.serving.engine import (  # noqa: F401
     ServeResult,
     ServingEngine,
 )
+from repro.serving.prefix_cache import (  # noqa: F401
+    CachedChain,
+    PrefixCache,
+    PrefixCacheStats,
+)
 from repro.serving.scheduler import (  # noqa: F401
     AdmissionPlan,
     BatchQueue,

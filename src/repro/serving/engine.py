@@ -85,6 +85,7 @@ from repro.data.sorting import next_pow2
 from repro.data.synthetic import EOS, pad_batch
 from repro.models import kv_cache as kvc
 from repro.serving.burst_control import AdaptiveBurst
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import ContinuousScheduler, Request, \
     pad_rows_pow2
 
@@ -160,6 +161,16 @@ class ServeResult:
     reorder_bytes: int = 0            # total bytes beam reorders moved
     #                                   (slab gathers unpaged; block-table
     #                                   permutation + partial-page copy paged)
+    # cross-request prefix cache (per-serve deltas; the cache itself —
+    # tree, chains, pool — persists on the engine across serves)
+    prefix_cache: bool = False
+    prefix_hits: int = 0              # admissions that skipped the encoder
+    prefix_misses: int = 0
+    prefix_inserts: int = 0           # misses that cached their encode
+    prefix_evictions: int = 0
+    prefix_hit_pages: int = 0         # chain pages hits read instead of wrote
+    prefix_pages_allocated: int = 0   # chain pages reserved by this serve
+    prefix_chains: int = 0            # chains resident at serve end
 
     @property
     def n_groups(self) -> int:
@@ -224,6 +235,16 @@ class ServeResult:
             "pages_in_use": float(self.pages_in_use),
             "page_hwm": float(self.page_hwm),
             "reorder_bytes": float(self.reorder_bytes),
+            "prefix_cache": float(self.prefix_cache),
+            "prefix_hits": float(self.prefix_hits),
+            "prefix_misses": float(self.prefix_misses),
+            "prefix_inserts": float(self.prefix_inserts),
+            "prefix_evictions": float(self.prefix_evictions),
+            "prefix_hit_pages": float(self.prefix_hit_pages),
+            "prefix_pages_allocated": float(self.prefix_pages_allocated),
+            "prefix_chains": float(self.prefix_chains),
+            "prefix_hit_rate": (self.prefix_hits /
+                                max(self.prefix_hits + self.prefix_misses, 1)),
             "first_token_latency_mean_s": float(np.mean(first)) if first else 0.0,
             "first_token_latency_p95_s":
                 float(np.percentile(first, 95)) if first else 0.0,
@@ -240,7 +261,10 @@ class ServingEngine:
                  burst_len: Union[int, str] = 8,
                  paged: bool = False, page_size: int = 16,
                  n_pages: Optional[int] = None,
-                 admission_enc_bucket: str = "max"):
+                 admission_enc_bucket: str = "max",
+                 prefix_cache: bool = False,
+                 prefix_pages: int = 256,
+                 prefix_page_size: Optional[int] = None):
         self.model = model
         self.params = params
         self.quant = quant
@@ -266,6 +290,17 @@ class ServingEngine:
                              f"'exact', got {admission_enc_bucket!r}")
         self.admission_enc_bucket = admission_enc_bucket
         self._enc_bucket_hwm = 0
+        # cross-request prefix cache: persists ACROSS serve() calls on this
+        # engine (the pool's page granularity makes its device shape
+        # independent of any one serve's enc_len or grid size).  Built
+        # lazily so engines that never enable it pay nothing.
+        self.prefix_cache_default = bool(prefix_cache)
+        self.prefix_pages = int(prefix_pages)
+        self.prefix_page_size = int(prefix_page_size or page_size)
+        self._prefix_cache_obj: Optional[PrefixCache] = None
+        self._prefix_pool: Optional[Tuple[jax.Array, jax.Array]] = None
+        self._pool_insert_jit: Optional[Callable] = None
+        self._hit_splice_jits: Dict[int, Callable] = {}
 
         self._prefill = jax.jit(
             lambda p, b, s: model.prefill(p, b, s, quant=quant))
@@ -396,6 +431,96 @@ class ServingEngine:
             out[i * rows_per_req:i * rows_per_req + live, :ppr] = per_row
         return out
 
+    # ------------------------------------------------------------ prefix cache
+    def _ensure_prefix_cache(self) -> PrefixCache:
+        """The engine-lifetime prefix cache + its device-side chain pool.
+
+        The pool is a pair of ``(L, prefix_pages, ps, HKV, dh)`` arrays in
+        the *activation* dtype — NOT the decode cache's (possibly int8)
+        dtype: a chain must read back bit-identical to a fresh
+        ``encode_cross_kv``, and the quantize→dequantize round trip of the
+        INT8 decode pool would break the token-identity gate.  During a
+        serve the arrays ride inside the decode state (so fused bursts
+        scatter/gather them in-program and donation recycles their
+        buffers); between serves the engine re-binds them here.
+        """
+        if self._prefix_cache_obj is None:
+            self._prefix_cache_obj = PrefixCache(
+                kvc.PageAllocator(self.prefix_pages, self.prefix_page_size))
+            cfg = self.model.cfg
+            shape = (cfg.n_layers, self.prefix_pages, self.prefix_page_size,
+                     cfg.n_kv_heads, cfg.hd)
+            self._prefix_pool = (jnp.zeros(shape, cfg.activation_dtype),
+                                 jnp.zeros(shape, cfg.activation_dtype))
+        return self._prefix_cache_obj
+
+    def _resolve_prefix_cache(self, prefix_cache: Optional[bool]
+                              ) -> Optional[PrefixCache]:
+        use = (self.prefix_cache_default if prefix_cache is None
+               else bool(prefix_cache))
+        return self._ensure_prefix_cache() if use else None
+
+    def _prefix_result_fields(self, pc: Optional[PrefixCache],
+                              stats0) -> Dict[str, Any]:
+        """ServeResult kwargs: per-serve deltas of the persistent stats."""
+        if pc is None:
+            return {}
+        s = pc.stats
+        return dict(prefix_cache=True,
+                    prefix_hits=s.hits - stats0.hits,
+                    prefix_misses=s.misses - stats0.misses,
+                    prefix_inserts=s.inserts - stats0.inserts,
+                    prefix_evictions=s.evictions - stats0.evictions,
+                    prefix_hit_pages=s.hit_pages - stats0.hit_pages,
+                    prefix_pages_allocated=(s.pages_allocated
+                                            - stats0.pages_allocated),
+                    prefix_chains=pc.n_chains)
+
+    def _pool_insert_fn(self) -> Callable:
+        """Jitted unfused-path pool insert: scatter a prefilled side
+        batch's cross-K/V into reserved chain pages (fused admission does
+        the same scatter inside the burst program)."""
+        if self._pool_insert_jit is None:
+            def fn(state, ck, cv, pages):
+                out = dict(state)
+                out["prefix_k"] = kvc.insert_chain_pages(
+                    state["prefix_k"], ck, pages)
+                out["prefix_v"] = kvc.insert_chain_pages(
+                    state["prefix_v"], cv, pages)
+                return out
+            donate = (0,) if self._donate_state else ()
+            self._pool_insert_jit = jax.jit(fn, donate_argnums=donate)
+        return self._pool_insert_jit
+
+    def _hit_splice_fn(self, group: int) -> Callable:
+        """Jitted unfused-path hit splice: gather cached chains from the
+        prefix pool and splice them into the admitted rows — no encoder.
+        The rows' first token is deferred to the next burst (BOS seed),
+        exactly the fused-admission seeding, so token *streams* stay
+        identical (per-request content is pacing-independent)."""
+        fn = self._hit_splice_jits.get(group)
+        if fn is None:
+            model = self.model
+
+            def splice(state, tokens, hit_pages, hit_lens, hit_rows, extra):
+                enc_len = state["cross_k"].shape[2]
+                hk = kvc.gather_chain_pages(state["prefix_k"], hit_pages,
+                                            enc_len)
+                hv = kvc.gather_chain_pages(state["prefix_v"], hit_pages,
+                                            enc_len)
+                state = model.splice_prefill(
+                    state, hk, hv, hit_lens, hit_rows, group=group,
+                    pages=extra.get("dec_pages"))
+                rows = kvc.group_rows(jnp.asarray(hit_rows, jnp.int32),
+                                      group)
+                tokens = tokens.at[rows].set(0, mode="drop")       # BOS
+                return state, tokens
+
+            donate = (0, 1) if self._donate_state else ()
+            fn = jax.jit(splice, donate_argnums=donate)
+            self._hit_splice_jits[group] = fn
+        return fn
+
     @staticmethod
     def _beam_gather_state(state: Dict[str, Any], idx: jax.Array):
         """Reorder every batch-major leaf of the decode state (paper §5.3).
@@ -425,6 +550,10 @@ class ServingEngine:
             elif k in ("cross_k", "cross_v"):
                 # layer-major (L, B, S, H, dh): the batch axis is 1
                 out[k] = jnp.take(v, idx, axis=1)
+            elif k in ("prefix_k", "prefix_v"):
+                # chain page pools have no batch axis — beam reorders
+                # permute rows, and chains are read-only row-agnostic data
+                out[k] = v
             else:
                 out[k] = jax.tree_util.tree_map(gather, v)
         return out
@@ -525,24 +654,63 @@ class ServingEngine:
         return self._insert(state, sub, tokens, sub_tokens,
                             jnp.asarray(slots))
 
-    def _free_and_splice(self, state, live, ck, cv, slens, adm_rows,
-                         adm_pages, group: int = 1):
+    def _admission_prologue(self, params, state, tokens, live, adm_src,
+                            adm_lens, adm_rows, extra, group: int = 1):
         """Fused-admission prologue shared by the greedy and beam burst
-        programs, so the token-identity-critical free→splice sequence
-        exists exactly once: reset dead rows (cursor only unpaged; cursor
-        + sentinel tables paged — their pages may be reassigned by this
-        very splice), then install the admitted rows' cross-K/V (and, on
-        the paged cache, their page reservations from ``adm_pages[0]`` —
-        the varargs tuple is empty on unpaged engines)."""
+        programs, so the token-identity-critical free→encode→splice
+        sequence exists exactly once:
+
+        1. reset dead rows (cursor only unpaged; cursor + sentinel tables
+           paged — their pages may be reassigned by this very splice);
+        2. if the round has encode rows (``adm_src`` non-empty — a static
+           shape, so empty rounds compile the branch away): encode them,
+           optionally scatter the fresh cross-K/V into reserved prefix
+           chains (``extra["ins_pages"]``), splice into the grid (paged
+           reservations from ``extra["pages"]``), and seed BOS;
+        3. if the round has prefix *hits* (``extra["hit_rows"]``): gather
+           their chains from the prefix pool and splice those rows with no
+           encoder work at all — the refcount bump already happened on the
+           host.  The insert scatter in (2) is ordered before this gather,
+           so a source admitted twice in one round reads the pages its
+           sibling wrote moments earlier in the same program.
+
+        ``extra`` is a dict pytree: key *presence* is static (each
+        combination traces its own specialization, a small bounded set),
+        which is how zero-width encode/hit rounds cost nothing.
+        """
+        model, quant = self.model, self.quant
         state = dict(state)
         if self.paged:
             state["cache"] = kvc.free_inactive_paged(state["cache"], live)
-            return self.model.splice_prefill(state, ck, cv, slens, adm_rows,
-                                             group=group,
-                                             pages=adm_pages[0])
-        state["cache"] = kvc.free_inactive(state["cache"], live)
-        return self.model.splice_prefill(state, ck, cv, slens, adm_rows,
-                                         group=group)
+        else:
+            state["cache"] = kvc.free_inactive(state["cache"], live)
+        enc_len = adm_src.shape[1]
+        if adm_src.shape[0]:
+            ck, cv, slens = model.encode_cross_kv(
+                params, {"src_tokens": adm_src, "src_lengths": adm_lens},
+                quant=quant)
+            if "ins_pages" in extra:
+                state["prefix_k"] = kvc.insert_chain_pages(
+                    state["prefix_k"], ck, extra["ins_pages"])
+                state["prefix_v"] = kvc.insert_chain_pages(
+                    state["prefix_v"], cv, extra["ins_pages"])
+            state = model.splice_prefill(state, ck, cv, slens, adm_rows,
+                                         group=group,
+                                         pages=extra.get("pages"))
+            rows = kvc.group_rows(jnp.asarray(adm_rows, jnp.int32), group)
+            tokens = tokens.at[rows].set(0, mode="drop")           # BOS
+        if "hit_rows" in extra:
+            hk = kvc.gather_chain_pages(state["prefix_k"],
+                                        extra["hit_pages"], enc_len)
+            hv = kvc.gather_chain_pages(state["prefix_v"],
+                                        extra["hit_pages"], enc_len)
+            state = model.splice_prefill(state, hk, hv, extra["hit_lens"],
+                                         extra["hit_rows"], group=group,
+                                         pages=extra.get("hit_dec_pages"))
+            rows = kvc.group_rows(
+                jnp.asarray(extra["hit_rows"], jnp.int32), group)
+            tokens = tokens.at[rows].set(0, mode="drop")           # BOS
+        return state, tokens
 
     # ---------------------------------------------------------------- bursts
     def _greedy_burst_fn(self, width: int) -> Callable:
@@ -632,18 +800,13 @@ class ServingEngine:
         padding (dropped by scatter semantics), so the program specializes
         only on the pow2 admission width, never the admitted count.
         """
-        model, quant = self.model, self.quant
-        free_and_splice = self._free_and_splice
+        prologue = self._admission_prologue
         loop = self._greedy_while(width)
 
         def burst(params, tokens, remaining, steps_cap, state,
-                  adm_src, adm_lens, adm_rows, *adm_pages):
-            ck, cv, slens = model.encode_cross_kv(
-                params, {"src_tokens": adm_src, "src_lengths": adm_lens},
-                quant=quant)
-            state = free_and_splice(state, remaining > 0, ck, cv, slens,
-                                    adm_rows, adm_pages)
-            tokens = tokens.at[adm_rows].set(0, mode="drop")       # BOS
+                  adm_src, adm_lens, adm_rows, extra):
+            state, tokens = prologue(params, state, tokens, remaining > 0,
+                                     adm_src, adm_lens, adm_rows, extra)
             return loop(params, tokens, remaining, steps_cap, state)
 
         donate = (1, 4) if self._donate_state else ()
@@ -857,20 +1020,14 @@ class ServingEngine:
         so the group's first tokens are the top-``beam`` tokens of the
         beam-0 logits, at the beam-0 log-probs.
         """
-        model, quant = self.model, self.quant
-        free_and_splice = self._free_and_splice
+        prologue = self._admission_prologue
         loop = self._beam_serve_while(width, beam)
 
         def burst(params, tokens, scores, finished, remaining, steps_cap,
-                  state, parked, adm_src, adm_lens, adm_bases, *adm_pages):
-            ck, cv, slens = model.encode_cross_kv(
-                params, {"src_tokens": adm_src, "src_lengths": adm_lens},
-                quant=quant)
+                  state, parked, adm_src, adm_lens, adm_bases, extra):
             live = jnp.repeat(remaining > 0, beam)                 # (R,)
-            state = free_and_splice(state, live, ck, cv, slens, adm_bases,
-                                    adm_pages, group=beam)
-            rows = kvc.group_rows(jnp.asarray(adm_bases, jnp.int32), beam)
-            tokens = tokens.at[rows].set(0, mode="drop")           # BOS
+            state, tokens = prologue(params, state, tokens, live, adm_src,
+                                     adm_lens, adm_bases, extra, group=beam)
             return loop(params, tokens, scores, finished, remaining,
                         steps_cap, state, parked)
 
@@ -959,7 +1116,8 @@ class ServingEngine:
               burst_len: Optional[Union[int, str]] = None,
               beam: Optional[Union[int, Sequence[int]]] = None,
               alpha: float = 0.6,
-              fused_admission: bool = True) -> ServeResult:
+              fused_admission: bool = True,
+              prefix_cache: Optional[bool] = None) -> ServeResult:
         """Continuous-batching decode over a request stream.
 
         ``requests`` may be ``Sentence``s, raw token arrays, or ``Request``
@@ -1012,6 +1170,15 @@ class ServingEngine:
         ``burst_len="auto"`` lets :class:`burst_control.AdaptiveBurst`
         move the step cap between bursts (pow2 values under one compiled
         ring-width bucket, so adapting never recompiles).
+
+        ``prefix_cache`` (None = the engine constructor's setting) turns
+        on cross-request prefix sharing: an admission whose source exactly
+        matches a cached one skips the encoder and splices the cached
+        cross-K/V chain (a host-side refcount bump instead of encode +
+        store); misses cache their encode for the next requester.  The
+        cache persists across serve() calls on this engine.  Token
+        streams are identical to a cold-cache serve — hits change *where*
+        the cross-K/V comes from, never its values.
         """
         if beam is not None:
             return self._serve_beam(
@@ -1020,7 +1187,7 @@ class ServingEngine:
                 prefill_token_budget=prefill_token_budget,
                 admit_min_free=admit_min_free,
                 pad_to_multiple=pad_to_multiple, burst_len=burst_len,
-                fused_admission=fused_admission)
+                fused_admission=fused_admission, prefix_cache=prefix_cache)
         K = self._resolve_burst(burst_len)
         ctrl = self._burst_controller(K)
         reqs = self._as_requests(requests, max_new_tokens)
@@ -1040,6 +1207,8 @@ class ServingEngine:
         fused_burst = (self._fused_greedy_burst_fn(width)
                        if fused_admission else None)
         enc_len = self._enc_bucket(reqs, pad_to_multiple)
+        pc = self._resolve_prefix_cache(prefix_cache)
+        stats0 = pc.stats.snapshot() if pc else None
 
         allocator = None
         if self.paged:
@@ -1055,7 +1224,8 @@ class ServingEngine:
             allocator=allocator,
             pages_per_request=(
                 (lambda r: self._pages_per_request(r, 1))
-                if allocator else None))
+                if allocator else None),
+            prefix_cache=pc)
         sched.submit_many(reqs)
 
         quantized = self.quant.quantize_kv
@@ -1063,6 +1233,8 @@ class ServingEngine:
             n_slots, self.max_len, quantized=quantized, enc_len=enc_len,
             paged=self.paged, page_size=self.page_size,
             n_pages=allocator.n_pages if allocator else None)
+        if pc is not None:
+            state["prefix_k"], state["prefix_v"] = self._prefix_pool
         tokens = jnp.zeros((n_slots,), jnp.int32)
 
         t0 = time.perf_counter()
@@ -1085,6 +1257,11 @@ class ServingEngine:
             # argmax at the padded width: device shapes depend only on the
             # pow2 bucket; the admission-group size g appears host-side
             first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            if pc is not None and any(r.prefix_role == "insert"
+                                      for r in admitted):
+                ins = sched.chain_pages_matrix(admitted, width, enc_len)
+                state = self._pool_insert_fn()(
+                    state, sub["cross_k"], sub["cross_v"], jnp.asarray(ins))
             pages = (self._page_rows(admitted, 1, width, allocator.n_pages)
                      if allocator else None)
             state, tokens = self._splice_rows(
@@ -1124,11 +1301,34 @@ class ServingEngine:
                 admitted = sched.admit(now(), step=decode_steps)
                 if admitted:
                     prefill_rounds += 1
-                    prefill_dispatches += 1
-                    host_syncs += 1   # first-token drain syncs the host
-                    encoder_tokens += len(admitted) * enc_len
-                    state, tokens = prefill_into_slots(admitted, state,
-                                                       tokens)
+                    hits: List[Request] = []
+                    if pc is not None:
+                        # zero-budget requests skip prefix routing: they
+                        # release inside prefill_into_slots before any
+                        # finish() could pair with their admit()
+                        misses, hits = sched.assign_prefix(
+                            [r for r in admitted if r.max_new_tokens > 0])
+                        enc_list = misses + [r for r in admitted
+                                             if r.max_new_tokens <= 0]
+                    else:
+                        enc_list = admitted
+                    if enc_list:
+                        prefill_dispatches += 1
+                        host_syncs += 1   # first-token drain syncs the host
+                        encoder_tokens += len(enc_list) * enc_len
+                        state, tokens = prefill_into_slots(enc_list, state,
+                                                           tokens)
+                    if hits:
+                        # no encoder: gather the cached chains and defer
+                        # the first token to the next burst (BOS seed)
+                        hrows, hlens, hpages, hw = sched.shape_hits(
+                            hits, enc_len=enc_len, oob_row=n_slots)
+                        extra = ({"dec_pages": jnp.asarray(self._page_rows(
+                                     hits, 1, hw, allocator.n_pages))}
+                                 if allocator else {})
+                        state, tokens = self._hit_splice_fn(1)(
+                            state, tokens, jnp.asarray(hpages),
+                            jnp.asarray(hlens), jnp.asarray(hrows), extra)
             if not sched.slot_map:
                 continue        # every admitted request finished on token 1
 
@@ -1138,20 +1338,25 @@ class ServingEngine:
                 remaining[slot] = req.max_new_tokens - len(req.tokens)
             cap = jnp.asarray(ctrl.k, jnp.int32) if ctrl else cap_fixed
             t_dispatch = time.perf_counter()
-            if plan is not None and plan.width and allocator:
+            if plan is not None and (plan.width or plan.hit_width):
+                extra = {}
+                if allocator and plan.width:
+                    extra["pages"] = jnp.asarray(self._page_rows(
+                        plan.requests, 1, plan.width, allocator.n_pages))
+                if pc is not None and plan.width:
+                    extra["ins_pages"] = jnp.asarray(plan.ins_pages)
+                if plan.hit_width:
+                    extra["hit_rows"] = jnp.asarray(plan.hit_rows)
+                    extra["hit_lens"] = jnp.asarray(plan.hit_lengths)
+                    extra["hit_pages"] = jnp.asarray(plan.hit_pages)
+                    if allocator:
+                        extra["hit_dec_pages"] = jnp.asarray(self._page_rows(
+                            plan.hits, 1, plan.hit_width, allocator.n_pages))
                 tokens, _, state, buf, steps_dev = fused_burst(
                     self.params, tokens, jnp.asarray(remaining), cap, state,
                     jnp.asarray(plan.src_tokens),
                     jnp.asarray(plan.src_lengths),
-                    jnp.asarray(plan.base_rows),
-                    jnp.asarray(self._page_rows(plan.requests, 1, plan.width,
-                                                allocator.n_pages)))
-            elif plan is not None and plan.width:
-                tokens, _, state, buf, steps_dev = fused_burst(
-                    self.params, tokens, jnp.asarray(remaining), cap, state,
-                    jnp.asarray(plan.src_tokens),
-                    jnp.asarray(plan.src_lengths),
-                    jnp.asarray(plan.base_rows))
+                    jnp.asarray(plan.base_rows), extra)
             else:
                 tokens, _, state, buf, steps_dev = burst(
                     self.params, tokens, jnp.asarray(remaining), cap, state)
@@ -1196,6 +1401,10 @@ class ServingEngine:
                 state["cache"] = free(state["cache"],
                                       np.asarray(freed, np.int32))
 
+        if pc is not None:
+            # hand the (possibly donated-through) pool arrays back to the
+            # engine so the next serve and the tree agree on contents
+            self._prefix_pool = (state["prefix_k"], state["prefix_v"])
         return ServeResult(requests=reqs, n_slots=n_slots,
                            decode_steps=decode_steps,
                            busy_slot_steps=busy_slot_steps,
@@ -1208,7 +1417,8 @@ class ServingEngine:
                            auto_burst=ctrl is not None,
                            paged=self.paged, page_size=self.page_size,
                            pages_in_use=allocator.in_use if allocator else 0,
-                           page_hwm=allocator.hwm if allocator else 0)
+                           page_hwm=allocator.hwm if allocator else 0,
+                           **self._prefix_result_fields(pc, stats0))
 
     # ------------------------------------------------- continuous beam search
     def _serve_beam(self, requests: Sequence[Any], *, n_slots: int,
@@ -1217,7 +1427,8 @@ class ServingEngine:
                     prefill_token_budget: Optional[int],
                     admit_min_free: int, pad_to_multiple: int,
                     burst_len: Optional[Union[int, str]],
-                    fused_admission: bool = True) -> ServeResult:
+                    fused_admission: bool = True,
+                    prefix_cache: Optional[bool] = None) -> ServeResult:
         """Continuous beam search: beam-group slot lifecycle.
 
         Structure mirrors the greedy ``serve`` loop, at group granularity:
@@ -1307,6 +1518,8 @@ class ServingEngine:
         fused_burst = (self._fused_beam_serve_burst_fn(width, beam)
                        if fused_admission else None)
         enc_len = self._enc_bucket(reqs, pad_to_multiple)
+        pc = self._resolve_prefix_cache(prefix_cache)
+        stats0 = pc.stats.snapshot() if pc else None
 
         allocator = None
         if self.paged:
@@ -1322,7 +1535,8 @@ class ServingEngine:
             allocator=allocator,
             pages_per_request=(
                 (lambda r: self._pages_per_request(r, width_of[r.req_id]))
-                if allocator else None))
+                if allocator else None),
+            prefix_cache=pc)
         sched.submit_many(reqs)
 
         quantized = self.quant.quantize_kv
@@ -1330,6 +1544,8 @@ class ServingEngine:
             R, self.max_len, quantized=quantized, enc_len=enc_len,
             paged=self.paged, page_size=self.page_size,
             n_pages=allocator.n_pages if allocator else None)
+        if pc is not None:
+            state["prefix_k"], state["prefix_v"] = self._prefix_pool
         tokens = jnp.zeros((R,), jnp.int32)
         # bytes one beam step's cache reorder moves: paged = the table
         # permutation + one partial-page copy per row; unpaged = the whole
@@ -1386,6 +1602,14 @@ class ServingEngine:
             logits, sub, width = self._prefill_padded(
                 np.repeat(src_pad, beam, axis=0),
                 np.repeat(lens, beam, axis=0))
+            if pc is not None and any(r.prefix_role == "insert"
+                                      for r in admitted):
+                # the tiled side batch holds request i's (batch-independent)
+                # encode at row i*beam — scatter that row into its chain
+                ins = sched.chain_pages_matrix(admitted, width, enc_len,
+                                               stride=beam)
+                state = self._pool_insert_fn()(
+                    state, sub["cross_k"], sub["cross_v"], jnp.asarray(ins))
             # log-softmax at the padded width (device shapes stay a
             # function of the pow2 bucket); the (g, beam)-shaped first-step
             # top-k moves to the host, where a stable argsort of the
@@ -1455,7 +1679,7 @@ class ServingEngine:
                 if plan.n_admitted:
                     prefill_rounds += 1
                 encoder_tokens += len(plan.requests) * enc_len
-                for r in plan.requests:
+                for r in plan.requests + plan.hits:
                     base, b = r.slot, width_of[r.req_id]
                     scores_np[base] = 0.0
                     scores_np[base + 1:base + beam] = BEAM_SEED_NEG
@@ -1467,12 +1691,49 @@ class ServingEngine:
                 admitted = sched.admit(now(), step=decode_steps)
                 if admitted:
                     prefill_rounds += 1
-                    prefill_dispatches += 1
-                    host_syncs += 1   # first-token drain syncs the host
-                    # the unfused side batch tiles each source beam× through
-                    # the encoder — the FLOP tax encode-once fusion removes
-                    encoder_tokens += len(admitted) * beam * enc_len
-                    state, tokens = prefill_groups(admitted, state, tokens)
+                    hits: List[Request] = []
+                    if pc is not None:
+                        # zero-budget requests skip prefix routing: they
+                        # release inside prefill_groups before any
+                        # finish() could pair with their admit()
+                        misses, hits = sched.assign_prefix(
+                            [r for r in admitted if r.max_new_tokens > 0])
+                        enc_list = misses + [r for r in admitted
+                                             if r.max_new_tokens <= 0]
+                    else:
+                        enc_list = admitted
+                    if enc_list:
+                        prefill_dispatches += 1
+                        host_syncs += 1   # first-token drain syncs the host
+                        # the unfused side batch tiles each source beam×
+                        # through the encoder — the FLOP tax encode-once
+                        # fusion removes
+                        encoder_tokens += len(enc_list) * beam * enc_len
+                        state, tokens = prefill_groups(enc_list, state,
+                                                       tokens)
+                    if hits:
+                        # no encoder: gather cached chains, splice them
+                        # across each group's rows, and seed the group
+                        # exactly like fused admission (first tokens arrive
+                        # with the next burst, in final beam order)
+                        hrows, hlens, hpages, hw = sched.shape_hits(
+                            hits, enc_len=enc_len, oob_row=R)
+                        extra = ({"dec_pages": jnp.asarray(self._page_rows(
+                                     hits, beam, hw, allocator.n_pages,
+                                     widths=[width_of[r.req_id]
+                                             for r in hits]))}
+                                 if allocator else {})
+                        state, tokens = self._hit_splice_fn(beam)(
+                            state, tokens, jnp.asarray(hpages),
+                            jnp.asarray(hlens), jnp.asarray(hrows), extra)
+                        for r in hits:
+                            base, b = r.slot, width_of[r.req_id]
+                            scores_np[base] = 0.0
+                            scores_np[base + 1:base + beam] = BEAM_SEED_NEG
+                            finished_np[base:base + b] = False
+                            finished_np[base + b:base + beam] = True
+                            histories[base] = []
+                            budget_left[base] = r.max_new_tokens
             if not sched.slot_map:
                 continue    # every admitted group finished on token 1
 
@@ -1484,26 +1745,32 @@ class ServingEngine:
             parked = jnp.asarray(parked_np)
             cap = jnp.asarray(ctrl.k, jnp.int32) if ctrl else cap_fixed
             t_dispatch = time.perf_counter()
-            if plan is not None and plan.width and allocator:
-                (tokens, scores_dev, finished_dev, remaining_dev, comp,
-                 state, buf, steps_dev) = fused_burst(
-                    self.params, tokens, jnp.asarray(scores_np),
-                    jnp.asarray(finished_np), jnp.asarray(remaining_in),
-                    cap, state, parked, jnp.asarray(plan.src_tokens),
-                    jnp.asarray(plan.src_lengths),
-                    jnp.asarray(plan.base_rows),
-                    jnp.asarray(self._page_rows(
+            if plan is not None and (plan.width or plan.hit_width):
+                extra = {}
+                if allocator and plan.width:
+                    extra["pages"] = jnp.asarray(self._page_rows(
                         plan.requests, beam, plan.width, allocator.n_pages,
                         widths=[width_of[r.req_id]
-                                for r in plan.requests])))
-            elif plan is not None and plan.width:
+                                for r in plan.requests]))
+                if pc is not None and plan.width:
+                    extra["ins_pages"] = jnp.asarray(plan.ins_pages)
+                if plan.hit_width:
+                    extra["hit_rows"] = jnp.asarray(plan.hit_rows)
+                    extra["hit_lens"] = jnp.asarray(plan.hit_lengths)
+                    extra["hit_pages"] = jnp.asarray(plan.hit_pages)
+                    if allocator:
+                        extra["hit_dec_pages"] = jnp.asarray(self._page_rows(
+                            plan.hits, beam, plan.hit_width,
+                            allocator.n_pages,
+                            widths=[width_of[r.req_id]
+                                    for r in plan.hits]))
                 (tokens, scores_dev, finished_dev, remaining_dev, comp,
                  state, buf, steps_dev) = fused_burst(
                     self.params, tokens, jnp.asarray(scores_np),
                     jnp.asarray(finished_np), jnp.asarray(remaining_in),
                     cap, state, parked, jnp.asarray(plan.src_tokens),
                     jnp.asarray(plan.src_lengths),
-                    jnp.asarray(plan.base_rows))
+                    jnp.asarray(plan.base_rows), extra)
             else:
                 (tokens, scores_dev, finished_dev, remaining_dev, comp,
                  state, buf, steps_dev) = burst(
@@ -1562,6 +1829,10 @@ class ServingEngine:
                     state["cache"] = kvc.free_groups(
                         state["cache"], np.asarray(freed, np.int32), beam)
 
+        if pc is not None:
+            # hand the (possibly donated-through) pool arrays back to the
+            # engine so the next serve and the tree agree on contents
+            self._prefix_pool = (state["prefix_k"], state["prefix_v"])
         return ServeResult(requests=reqs, n_slots=R,
                            decode_steps=decode_steps,
                            busy_slot_steps=busy_slot_steps,
@@ -1575,7 +1846,8 @@ class ServingEngine:
                            paged=self.paged, page_size=self.page_size,
                            pages_in_use=allocator.in_use if allocator else 0,
                            page_hwm=allocator.hwm if allocator else 0,
-                           reorder_bytes=reorder_step_bytes * decode_steps)
+                           reorder_bytes=reorder_step_bytes * decode_steps,
+                           **self._prefix_result_fields(pc, stats0))
 
     # ------------------------------------------------------------------ beam
     def generate_beam(self, batch: Dict[str, np.ndarray], *, beam: int = 4,

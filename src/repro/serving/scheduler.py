@@ -116,6 +116,11 @@ class Request:
     # paged KV cache: flat page ids reserved for this request (scheduler-
     # managed: allocated at admission, returned at release)
     pages: Optional[List[int]] = None
+    # prefix cache (scheduler-managed): how this admission was routed
+    # ("hit" | "insert" | "skip" | None when the cache is off) and the
+    # chain whose reference this request holds until release
+    prefix_role: Optional[str] = None
+    prefix_chain: Optional[object] = None
 
     @property
     def n_src_tokens(self) -> int:
@@ -159,6 +164,10 @@ def pad_rows_pow2(src: np.ndarray, lens: np.ndarray
     return src, lens, width
 
 
+_EMPTY_I32 = np.zeros((0,), np.int32)
+_EMPTY_I32_2D = np.zeros((0, 0), np.int32)
+
+
 @dataclasses.dataclass
 class AdmissionPlan:
     """One admission round, shaped for the fused decode-burst program.
@@ -180,10 +189,26 @@ class AdmissionPlan:
     src_lengths: np.ndarray            # (width,) int32
     base_rows: np.ndarray              # (width,) int32; padding → oob_row
     width: int                         # pow2 batch width (0 = no device work)
+    # ---- prefix cache extension (all empty/zero when the cache is off).
+    # ``requests`` above then holds only the *encode* rows (prefix misses);
+    # hits skip the encoder entirely and arrive pre-shaped here.
+    hits: List[Request] = dataclasses.field(default_factory=list)
+    hit_rows: np.ndarray = _EMPTY_I32          # (hit_width,) base rows
+    hit_lengths: np.ndarray = _EMPTY_I32       # (hit_width,) source lengths
+    hit_pages: np.ndarray = _EMPTY_I32_2D      # (hit_width, maxPP) chains
+    hit_width: int = 0                         # pow2 (0 = no hits)
+    # per-encode-row chain reservations: rows routed "insert" carry their
+    # chain's page ids (sentinel-padded); "skip"/padding rows all-sentinel
+    ins_pages: np.ndarray = _EMPTY_I32_2D      # (width, maxPP)
 
     @property
     def n_admitted(self) -> int:
-        return len(self.requests) + len(self.released)
+        return len(self.requests) + len(self.hits) + len(self.released)
+
+    @property
+    def prefix_hit_pages(self) -> int:
+        """Chain pages whose encode+store this round's hits skipped."""
+        return sum(r.prefix_chain.n_pages for r in self.hits)
 
 
 class ContinuousScheduler:
@@ -216,7 +241,8 @@ class ContinuousScheduler:
     def __init__(self, n_slots: int, *, group_size: int = 1,
                  prefill_token_budget: Optional[int] = None,
                  allocator=None,
-                 pages_per_request: Optional[Callable[[Request], int]] = None):
+                 pages_per_request: Optional[Callable[[Request], int]] = None,
+                 prefix_cache=None):
         if n_slots < 1:
             raise ValueError(f"need at least one slot, got {n_slots}")
         if group_size < 1:
@@ -239,6 +265,12 @@ class ContinuousScheduler:
         # deadlock, regardless of the beam-width mix).
         self.allocator = allocator
         self.pages_per_request = pages_per_request
+        # cross-request prefix cache: routes each admission "hit" /
+        # "insert" / "skip".  Chain pages come from the cache's OWN
+        # allocator (separate pool), so chain reservations can never eat
+        # into the decode page budget above — a full prefix pool degrades
+        # to uncached admission, it cannot wedge the FIFO.
+        self.prefix_cache = prefix_cache
         self._waiting: Deque[Request] = collections.deque()
         self._free: List[int] = [g * group_size for g in range(self.n_groups)]
         self.slot_map: Dict[int, Request] = {}
@@ -257,6 +289,8 @@ class ContinuousScheduler:
         req.finish_step = None
         req.score = None
         req.pages = None
+        req.prefix_role = None
+        req.prefix_chain = None
         self._waiting.append(req)
 
     def submit_many(self, reqs: Sequence[Request]) -> None:
@@ -300,6 +334,68 @@ class ContinuousScheduler:
             admitted.append(req)
         return admitted
 
+    def assign_prefix(self, reqs: Sequence[Request]
+                      ) -> "tuple[List[Request], List[Request]]":
+        """Route live admissions through the prefix cache.
+
+        Returns ``(misses, hits)``: misses (roles "insert"/"skip") must be
+        encoded; hits skip the encoder and splice their cached chain.
+        Routing is sequential on purpose — a source admitted twice in ONE
+        round makes the first occurrence the "insert" and the second a
+        "hit" on the chain reserved moments earlier (the engine orders the
+        pool scatter before the hit gather inside one program, so the
+        same-round hit reads the freshly written pages).
+        """
+        if self.prefix_cache is None:
+            return list(reqs), []
+        misses: List[Request] = []
+        hits: List[Request] = []
+        for req in reqs:
+            role, chain = self.prefix_cache.admit(req.src)
+            req.prefix_role = role
+            req.prefix_chain = chain
+            (hits if role == "hit" else misses).append(req)
+        return misses, hits
+
+    def chain_pages_matrix(self, reqs: Sequence[Request], width: int,
+                           enc_len: int, stride: int = 1) -> np.ndarray:
+        """(width, maxPP) chain page ids, sentinel-padded.
+
+        ``maxPP`` is the chain length of a full ``enc_len`` source against
+        the *prefix* allocator's page size; rows without a chain (role
+        "skip", padding) are all-sentinel so their page-chunk scatters and
+        gathers drop/clamp.  ``stride``: request ``i``'s chain lands on
+        row ``i × stride`` (the unfused beam side batch tiles each source
+        ``beam×``, and only the group's first row feeds the pool insert).
+        """
+        al = self.prefix_cache.allocator
+        maxPP = (enc_len + al.page_size - 1) // al.page_size
+        out = np.full((width, max(maxPP, 1)), al.n_pages, np.int32)
+        for i, req in enumerate(reqs):
+            if req.prefix_chain is not None:
+                out[i * stride, :req.prefix_chain.n_pages] = \
+                    req.prefix_chain.pages
+        return out
+
+    def shape_hits(self, hits: Sequence[Request], *, enc_len: int,
+                   oob_row: int
+                   ) -> "tuple[np.ndarray, np.ndarray, np.ndarray, int]":
+        """Shape prefix hits for a device splice: pow2-padded
+        ``(hit_rows, hit_lengths, hit_pages, hit_width)`` under the same
+        row-0-replay / oob-destination contract as :func:`pad_rows_pow2`.
+        """
+        hlens = np.asarray([r.n_src_tokens for r in hits], np.int32)
+        hrows = np.asarray([r.slot for r in hits], np.int32)
+        hw = next_pow2(len(hits))
+        pad = hw - len(hits)
+        hit_lengths = np.concatenate(
+            [hlens, np.broadcast_to(hlens[:1], (pad,))])
+        hit_rows = np.concatenate(
+            [hrows, np.full((pad,), oob_row, np.int32)])
+        hit_pages = self.chain_pages_matrix(hits, hw, enc_len)
+        hit_pages[len(hits):] = hit_pages[0]         # padding replays row 0
+        return hit_rows, hit_lengths, hit_pages, hw
+
     def plan_admission(self, now: float = 0.0, *, step: Optional[int] = None,
                        enc_len: int, oob_row: int) -> AdmissionPlan:
         """Admit one round and shape it for the fused burst program.
@@ -310,6 +406,15 @@ class ContinuousScheduler:
         contract: sources right-padded to ``enc_len``, batch padded to a
         power-of-two width with row-0 replays, destinations padded with
         the ``oob_row`` sentinel so in-program scatters drop them.
+
+        With a prefix cache attached the round splits: cache hits skip the
+        encoder (``hit_*`` fields carry their chain pages, base rows and
+        source lengths, pow2-padded under the same row-0-replay contract)
+        and only the misses occupy encode rows; misses routed "insert"
+        additionally carry their chain reservation in ``ins_pages`` so the
+        fused program can store the fresh encode for the next requester.
+        Zero-budget requests are excluded *before* cache routing — they
+        never encode, so an "insert" for one would cache garbage.
         """
         live: List[Request] = []
         released: List[Request] = []
@@ -320,20 +425,28 @@ class ContinuousScheduler:
                 released.append(req)
             else:
                 live.append(req)
-        if not live:
-            return AdmissionPlan(
-                requests=[], released=released, width=0,
-                src_tokens=np.zeros((0, enc_len), np.int32),
-                src_lengths=np.zeros((0,), np.int32),
-                base_rows=np.zeros((0,), np.int32))
-        src, lens = pad_batch([r.src for r in live], length=enc_len)
-        src, lens, width = pad_rows_pow2(src, lens)
-        base = np.full((width,), oob_row, np.int32)
-        base[:len(live)] = [r.slot for r in live]
-        return AdmissionPlan(requests=live, released=released,
+        misses, hits = self.assign_prefix(live)
+        if misses:
+            src, lens = pad_batch([r.src for r in misses], length=enc_len)
+            src, lens, width = pad_rows_pow2(src, lens)
+            base = np.full((width,), oob_row, np.int32)
+            base[:len(misses)] = [r.slot for r in misses]
+        else:
+            width = 0
+            src = np.zeros((0, enc_len), np.int32)
+            lens = base = np.zeros((0,), np.int32)
+        plan = AdmissionPlan(requests=misses, released=released,
                              src_tokens=np.ascontiguousarray(src),
                              src_lengths=np.ascontiguousarray(lens),
                              base_rows=base, width=width)
+        if self.prefix_cache is not None:
+            plan.ins_pages = self.chain_pages_matrix(misses, width, enc_len)
+            if hits:
+                (plan.hit_rows, plan.hit_lengths, plan.hit_pages,
+                 plan.hit_width) = self.shape_hits(hits, enc_len=enc_len,
+                                                   oob_row=oob_row)
+                plan.hits = hits
+        return plan
 
     def release(self, req: Request, now: float = 0.0, *,
                 step: Optional[int] = None) -> int:
@@ -355,6 +468,9 @@ class ContinuousScheduler:
         if req.pages is not None:
             self.allocator.release(req.pages)
             req.pages = None
+        if req.prefix_chain is not None:
+            self.prefix_cache.finish(req.prefix_chain)
+            req.prefix_chain = None
         del self.slot_map[slot]
         self._free.append(slot)
         self._free.sort()

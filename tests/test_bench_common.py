@@ -1,0 +1,51 @@
+"""benchmarks/common.py: the measure() warmup guard.
+
+``measure(warmup=0)`` used to fold jit compile into the first measured
+pass — every downstream throughput/hit-rate number quietly included
+compile time.  Now it raises unless nothing is measured.
+"""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import measure  # noqa: E402
+
+
+def test_measure_rejects_unwarmed_measurement():
+    calls = []
+    with pytest.raises(ValueError, match="warmup"):
+        measure(lambda: calls.append(1), warmup=0, passes=3)
+    assert not calls                     # rejected before any call ran
+    with pytest.raises(ValueError):
+        measure(lambda: calls.append(1), warmup=-1, passes=1)
+    assert not calls
+
+
+def test_measure_allows_compile_only_use():
+    """warmup≥1 with passes=0 is the sanctioned unmeasured call shape
+    (bench_continuous uses it to report compile cost as its own row)."""
+    calls = []
+    out, times, warm_s = measure(lambda: calls.append(1) or "r",
+                                 warmup=1, passes=0)
+    assert calls == [1] and times == [] and out is None
+    assert warm_s >= 0.0
+    # warmup=0, passes=0 measures nothing: also fine
+    out, times, _ = measure(lambda: calls.append(1), warmup=0, passes=0)
+    assert len(calls) == 1 and times == []
+
+
+def test_measure_counts_and_returns_last_result():
+    calls = []
+
+    def fn():
+        calls.append(len(calls))
+        return len(calls)
+
+    out, times, warm_s = measure(fn, warmup=2, passes=3)
+    assert len(calls) == 5               # 2 warmup + 3 measured
+    assert out == 5                      # last measured result
+    assert len(times) == 3 and all(t >= 0.0 for t in times)

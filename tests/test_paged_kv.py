@@ -212,6 +212,167 @@ def test_property_mixed_beam_admission_never_deadlocks(max_beam, seed):
     assert all(al.refcount(p) == 0 for p in range(n_pages))
 
 
+def test_allocator_release_is_atomic():
+    """A bad release (double free, out-of-pool id, duplicate ids whose
+    combined drop exceeds the refcount) raises WITHOUT mutating: the
+    regression was validate-while-mutating, which returned a prefix of
+    the list before raising and left the pool inconsistent."""
+    al = kvc.PageAllocator(8, 4)
+    a = al.alloc(3)
+    b = al.alloc(2)
+    al.release(b)
+
+    def snapshot():
+        return ([al.refcount(p) for p in range(8)], al.n_free, al.in_use)
+
+    before = snapshot()
+    with pytest.raises(ValueError):
+        al.release(a + b)            # b already free: would drop a first
+    assert snapshot() == before      # ...but must not have
+    with pytest.raises(ValueError):
+        al.release([a[0], a[0]])     # duplicate ids vs refcount 1
+    assert snapshot() == before
+    with pytest.raises(ValueError):
+        al.release([a[0], 99])       # out-of-pool id after a valid one
+    assert snapshot() == before
+    al.release(a)                    # the valid release still works
+    assert al.in_use == 0
+
+
+def test_allocator_alloc_raises_on_corrupt_pool():
+    """Double-assignment detection is a raised exception (not a bare
+    assert that vanishes under ``python -O``), and alloc validates before
+    popping so the free list survives the error."""
+    al = kvc.PageAllocator(4, 4)
+    with pytest.raises(ValueError):
+        al.alloc(-1)
+    held = al.alloc(2)
+    # white-box corruption: a free-listed page with a live refcount
+    victim = next(p for p in range(4) if p not in held)
+    al._refcount[victim] = 1
+    free_before = al.n_free
+    with pytest.raises(RuntimeError):
+        al.alloc(4 - len(held))
+    assert al.n_free == free_before  # peek-validate: nothing left the list
+    al._refcount[victim] = 0
+    got = al.alloc(2)
+    assert sorted(held + got) == list(range(4))
+
+
+@given(st.integers(min_value=2, max_value=32),
+       st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_property_shared_reservation_churn(n_pages, seed):
+    """Chains with refcounts > 1 (one owner + independent readers, the
+    prefix-cache shape): random retain/release interleavings keep
+    ``in_use`` equal to the pages with any live reference, never free a
+    page early, and fully reclaim once every reference drops."""
+    rng = np.random.default_rng(seed)
+    al = kvc.PageAllocator(n_pages, 4)
+    chains = []                          # (pages, n_refs) — owner + readers
+    for _ in range(60):
+        op = rng.integers(0, 3)
+        if op == 0:
+            got = al.alloc(int(rng.integers(1, n_pages + 1)))
+            if got is not None:
+                chains.append([got, 1])
+        elif op == 1 and chains:
+            c = chains[int(rng.integers(0, len(chains)))]
+            al.retain(c[0])              # a reader joins
+            c[1] += 1
+        elif op == 2 and chains:
+            i = int(rng.integers(0, len(chains)))
+            chains[i][1] -= 1            # one reference drops
+            al.release(chains[i][0])
+            if chains[i][1] == 0:
+                pages = chains.pop(i)[0]
+                assert all(al.refcount(p) == 0 for p in pages)
+        live = {p for c in chains for p in c[0]}
+        assert al.in_use == len(live)
+        for pages, refs in chains:
+            assert all(al.refcount(p) == refs for p in pages)
+    for pages, refs in chains:
+        for _ in range(refs):
+            al.release(pages)
+    assert al.in_use == 0
+    assert all(al.refcount(p) == 0 for p in range(n_pages))
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_cow_never_writes_shared_page(rng, quantized):
+    """Copy-on-write invariant: resolving a row's write slot never writes
+    a page with refcount > 1 — the shared source page's payload is
+    bit-unchanged and the copy lands in the row's own reservation."""
+    paged, _ = _paged_with_rows(rng, quantized=quantized, n_rows=2,
+                                lengths=(6, 6))
+    sentinel = paged.n_pages
+    al = kvc.PageAllocator(paged.n_pages, 4)
+    shared = al.alloc(2)                 # both rows read these
+    own0 = al.alloc(2)                   # each row's private reservation
+    own1 = al.alloc(2)
+    al.retain(shared)                    # rc 2: a second reader joined
+    sp = 6 // 4                          # the partial write slot
+    tables = np.full((2, 4), sentinel, np.int32)
+    own = np.full((2, 4), sentinel, np.int32)
+    tables[0, :2] = tables[1, :2] = shared
+    own[0, :2], own[1, :2] = own0, own1
+    cache = kvc.PagedKVCache(
+        k=paged.k, v=paged.v, k_scale=paged.k_scale, v_scale=paged.v_scale,
+        block_tables=jnp.asarray(tables), own_pages=jnp.asarray(own),
+        lengths=paged.lengths)
+    out = kvc.cow_write_slot(cache)
+    tab_after = np.asarray(out.block_tables)
+    for r in range(2):
+        dst = int(tab_after[r, sp])
+        assert al.refcount(dst) == 1, (
+            f"CoW wrote page {dst} with refcount {al.refcount(dst)}")
+        assert dst == int(own[r, sp])    # the row's own reservation
+    # shared page payload bit-unchanged; the copy carries its history
+    src = int(tables[1, sp])
+    np.testing.assert_array_equal(np.asarray(out.k[:, src]),
+                                  np.asarray(cache.k[:, src]))
+    np.testing.assert_array_equal(
+        np.asarray(out.k[:, int(tab_after[1, sp])]),
+        np.asarray(cache.k[:, src]))
+    # full (pre-slot) shared pages stay shared — no copy amplification
+    np.testing.assert_array_equal(tab_after[:, :sp], tables[:, :sp])
+
+
+@given(st.integers(min_value=1, max_value=12),
+       st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_property_prefix_admission_never_deadlocks(pool_pages, seed):
+    """Prefix-cache admission against an arbitrarily small chain pool
+    always makes progress: every admit() returns hit/insert/skip (skip =
+    serve uncached), eviction only touches unreferenced chains, and after
+    every reader finishes + clear() the pool is fully reclaimed."""
+    from repro.serving.prefix_cache import PrefixCache
+    rng = np.random.default_rng(seed)
+    pc = PrefixCache(kvc.PageAllocator(pool_pages, 4))
+    sources = [np.asarray(rng.integers(1, 9, size=rng.integers(1, 13)),
+                          np.int32) for _ in range(6)]
+    open_chains = []
+    for _ in range(80):
+        if open_chains and rng.random() < 0.4:
+            pc.finish(open_chains.pop(int(rng.integers(0,
+                                                       len(open_chains)))))
+            continue
+        src = sources[int(rng.integers(0, len(sources)))]
+        role, chain = pc.admit(src)
+        assert role in ("hit", "insert", "skip")
+        if role == "skip":
+            assert chain is None         # uncached but never wedged
+        else:
+            assert chain.src_len == len(src)
+            open_chains.append(chain)
+    for chain in open_chains:
+        pc.finish(chain)
+    pc.clear()
+    assert pc.n_chains == 0
+    assert pc.allocator.in_use == 0
+    assert all(pc.allocator.refcount(p) == 0 for p in range(pool_pages))
+
+
 # ------------------------------------------------------------- cache units
 def _paged_with_rows(rng, *, quantized, n_rows=3, lengths=(5, 8, 0)):
     """A paged cache with per-row reservations + the contiguous cache

@@ -1,0 +1,236 @@
+"""Cross-request prefix sharing (ISSUE 6): radix tree + chain pool.
+
+Three layers:
+
+* **Tree semantics**: exact-match only (a strict prefix or extension of a
+  cached source is NOT a hit — the encoder is bidirectional), page-chunk
+  keying, LRU eviction that never touches a chain someone is reading,
+  refcount lifecycle (tree ref + one per reader), and skip-not-deadlock
+  under pool pressure.
+* **Engine identity**: ``serve(prefix_cache=True)`` on a repeated-source
+  mix is token-identical to the cold-cache serve — greedy and beam
+  (uniform + mixed widths), FP and INT8, fused and unfused admission,
+  fixed and auto burst — with hits > 0 asserted so the matrix can't pass
+  vacuously.
+* **Persistence**: the cache spans serve() calls — re-serving the same
+  sources is all-hit, allocates nothing, and never runs the encoder.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import QuantPolicy, quantize_model
+from repro.data import make_corpus
+from repro.models import kv_cache as kvc
+from repro.serving import PrefixCache, ServingEngine
+
+MAX_LEN = 32
+PAGE_SIZE = 8
+BUDGETS = [3, 7, 5, 3, 7, 5]            # repeated sources → repeated budgets
+MIXED = [4, 2, 1, 4, 2, 1]
+
+
+# ------------------------------------------------------------------ fixtures
+_CACHED = {}
+
+
+def _module_state():
+    if "model" not in _CACHED:
+        cfg = get_config("transformer-base").reduced(
+            vocab=32, d_model=48, n_layers=1, n_enc_layers=1, d_ff=96,
+            n_heads=2, n_kv_heads=2, head_dim=24)
+        from repro.models import build_model
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        qparams, qctx = quantize_model(params, {},
+                                       QuantPolicy(act_quant="dynamic"))
+        corpus = make_corpus(3, cfg.vocab, seed=11, max_words=8)
+        # each distinct source twice: second occurrence must hit
+        srcs = [r.src for r in corpus] * 2
+        _CACHED.update(cfg=cfg, model=model, params=params,
+                       qparams=qparams, qctx=qctx, srcs=srcs, colds={})
+    return _CACHED
+
+
+def _engine(quant, paged, warm):
+    s = _module_state()
+    kw = dict(max_len=MAX_LEN, paged=paged, page_size=PAGE_SIZE)
+    if quant == "int8":
+        kw["quant"] = s["qctx"]
+    params = s["qparams"] if quant == "int8" else s["params"]
+    if warm:
+        kw.update(prefix_cache=True, prefix_pages=64)
+    return ServingEngine(s["model"], params, **kw)
+
+
+def _serve(eng, *, beam, fused, burst):
+    s = _module_state()
+    return eng.serve(s["srcs"], max_new_tokens=BUDGETS, n_slots=8,
+                     beam=beam, burst_len=burst, fused_admission=fused)
+
+
+def _cold(quant, paged, beam, fused, burst):
+    """Cold-cache reference streams, cached per configuration."""
+    s = _module_state()
+    key = (quant, paged, tuple(beam) if isinstance(beam, list) else beam,
+           fused, burst)
+    if key not in s["colds"]:
+        res = _serve(_engine(quant, paged, warm=False), beam=beam,
+                     fused=fused, burst=burst)
+        s["colds"][key] = ([list(r.tokens) for r in res.requests],
+                           [r.score for r in res.requests])
+    return s["colds"][key]
+
+
+# ------------------------------------------------------------- tree semantics
+def _pc(n_pages=16, page_size=4):
+    return PrefixCache(kvc.PageAllocator(n_pages, page_size))
+
+
+def test_exact_match_only():
+    """A strict prefix or extension of a cached source is a miss: the
+    bidirectional encoder makes partial reuse change tokens."""
+    pc = _pc()
+    src = np.arange(1, 8, dtype=np.int32)            # 7 tokens, ps=4
+    role, chain = pc.admit(src)
+    assert role == "insert" and chain.n_pages == 2
+    assert pc.lookup(src) is chain
+    assert pc.lookup(src[:4]) is None                # page-aligned prefix
+    assert pc.lookup(src[:6]) is None                # same chunk count
+    assert pc.lookup(np.concatenate([src, [8]])) is None     # extension
+    role2, chain2 = pc.admit(src)
+    assert role2 == "hit" and chain2 is chain
+    # distinct sources with a shared page-aligned prefix coexist
+    other = np.concatenate([src[:4], [9, 9]]).astype(np.int32)
+    role3, chain3 = pc.admit(other)
+    assert role3 == "insert" and chain3 is not chain
+    assert pc.lookup(src) is chain and pc.lookup(other) is chain3
+
+
+def test_refcount_lifecycle():
+    """Tree holds one reference per chain; every reader holds another."""
+    pc = _pc()
+    src = np.arange(1, 6, dtype=np.int32)
+    _, chain = pc.admit(src)                         # tree + inserter
+    assert all(pc.allocator.refcount(p) == 2 for p in chain.pages)
+    _, c2 = pc.admit(src)                            # a second reader
+    assert all(pc.allocator.refcount(p) == 3 for p in chain.pages)
+    pc.finish(chain)
+    pc.finish(c2)
+    assert all(pc.allocator.refcount(p) == 1 for p in chain.pages)
+    assert pc.allocator.in_use == chain.n_pages      # tree keeps it cached
+    pc.clear()
+    assert pc.allocator.in_use == 0
+
+
+def test_lru_eviction_skips_retained_chains():
+    """Eviction pressure removes the LRU *unreferenced* chain; a chain a
+    request is still reading is never evicted, and when nothing is
+    evictable admission degrades to skip (not deadlock, not eviction)."""
+    pc = _pc(n_pages=4, page_size=4)
+    a = np.asarray([1, 1, 1, 1, 1, 1], np.int32)     # 2 pages each
+    b = np.asarray([2, 2, 2, 2, 2, 2], np.int32)
+    c = np.asarray([3, 3, 3, 3, 3, 3], np.int32)
+    _, ca = pc.admit(a)
+    _, cb = pc.admit(b)
+    pc.finish(cb)                                    # b: cold, evictable
+    role, cc = pc.admit(c)                           # needs b's pages
+    assert role == "insert" and pc.stats.evictions == 1
+    assert pc.lookup(b) is None and pc.lookup(a) is ca   # a survived: held
+    role_b, got = pc.admit(b)                        # a held, c held: full
+    assert role_b == "skip" and got is None
+    assert pc.stats.evictions == 1                   # nothing was evicted
+    pc.finish(ca)
+    pc.finish(cc)
+    _, _ = pc.admit(b)                               # now evictable again
+    assert pc.stats.evictions >= 2
+
+
+def test_lru_order_follows_hits():
+    """A hit bumps recency: the *least recently used* chain is the one
+    evicted under pressure, not the oldest-inserted."""
+    pc = _pc(n_pages=4, page_size=4)
+    a = np.asarray([1] * 4, np.int32)                # 1 page each
+    b = np.asarray([2] * 4, np.int32)
+    c = np.asarray([3] * 4, np.int32)
+    for s in (a, b, c):
+        _, ch = pc.admit(s)
+        pc.finish(ch)
+    _, ch = pc.admit(a)                              # bump a over b
+    pc.finish(ch)
+    _, _ = pc.admit(np.asarray([4] * 9, np.int32))   # 3 pages: evicts 2
+    assert pc.lookup(b) is None and pc.lookup(c) is None
+    assert pc.lookup(a) is not None
+
+
+def test_empty_source_is_cacheable():
+    pc = _pc()
+    role, chain = pc.admit(np.zeros((0,), np.int32))
+    assert role == "insert"
+    role2, chain2 = pc.admit(np.zeros((0,), np.int32))
+    assert role2 == "hit" and chain2 is chain
+
+
+# ------------------------------------------------------------ engine identity
+@pytest.mark.parametrize("quant,paged,fused,burst", [
+    ("fp", False, True, 4),
+    ("fp", True, False, 4),
+    ("int8", True, True, "auto"),
+    ("int8", False, False, 1),
+])
+def test_greedy_identity_with_hits(quant, paged, fused, burst):
+    warm = _serve(_engine(quant, paged, warm=True), beam=None, fused=fused,
+                  burst=burst)
+    want, _ = _cold(quant, paged, None, fused, burst)
+    assert warm.prefix_hits >= len(_module_state()["srcs"]) // 2
+    assert warm.prefix_hit_pages >= warm.prefix_hits
+    got = [list(r.tokens) for r in warm.requests]
+    assert got == want
+
+
+@pytest.mark.parametrize("quant,paged,beam,fused,burst", [
+    ("fp", True, 4, True, 4),
+    ("int8", True, 4, False, 4),
+    ("fp", False, MIXED, False, 4),
+    ("int8", False, MIXED, True, "auto"),
+])
+def test_beam_identity_with_hits(quant, paged, beam, fused, burst):
+    warm = _serve(_engine(quant, paged, warm=True), beam=beam, fused=fused,
+                  burst=burst)
+    want, want_scores = _cold(quant, paged, beam, fused, burst)
+    assert warm.prefix_hits >= 1
+    got = [list(r.tokens) for r in warm.requests]
+    assert got == want
+    np.testing.assert_allclose([r.score for r in warm.requests],
+                               want_scores, rtol=1e-6)
+
+
+def test_cache_persists_across_serves():
+    """Second serve on the same warm engine: all-hit, zero new chain
+    pages, zero encoder tokens — and still token-identical."""
+    eng = _engine("fp", True, warm=True)
+    first = _serve(eng, beam=None, fused=True, burst=4)
+    second = _serve(eng, beam=None, fused=True, burst=4)
+    n = len(_module_state()["srcs"])
+    assert second.prefix_hits == n
+    assert second.prefix_misses == 0
+    assert second.prefix_pages_allocated == 0
+    assert second.encoder_tokens == 0
+    assert ([list(r.tokens) for r in second.requests]
+            == [list(r.tokens) for r in first.requests])
+    m = second.metrics()
+    assert m["prefix_hit_rate"] == 1.0 and m["prefix_cache"] == 1.0
+
+
+def test_serve_flag_overrides_engine_default():
+    """serve(prefix_cache=False) on a cache-enabled engine must bypass
+    the cache entirely (no stats movement, no prefix fields set)."""
+    eng = _engine("fp", False, warm=True)
+    res = eng.serve(_module_state()["srcs"], max_new_tokens=BUDGETS,
+                    n_slots=8, burst_len=4, prefix_cache=False)
+    assert not res.prefix_cache
+    assert res.prefix_hits == 0 and res.prefix_misses == 0
+    assert eng._prefix_cache_obj is None or \
+        eng._prefix_cache_obj.stats.hits == 0
