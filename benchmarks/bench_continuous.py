@@ -39,6 +39,15 @@ Rows:
   ``encoder_tokens`` cut (a hit skips the encoder entirely), ≥1 reused
   chain page per hit, and an all-hit / zero-allocation re-serve on the
   warmed engine are all **asserted** for CI.
+* ``preempt_*``            — overload section on a bimodal workload:
+  ``overcommit`` A/B on a page pool deliberately too small for the
+  worst-case reservation (strictly higher admitted concurrency with token
+  identity is **asserted**), a chunked-prefill A/B on a long/short source
+  mix (a lower worst first-token latency for the short interactive
+  requests is **asserted** — long sources stage one encoder layer per
+  round instead of head-of-line-blocking the admission encode), and a
+  chaos run reporting preemption/spill traffic (fired preemptions, token
+  identity, and full page + spill-store reclaim are **asserted**).
 * ``admission_enc_bucket`` — compile-variant regression: a serve sweep
   over several source-length mixes compiles one fused-burst variant per
   distinct ``enc_len`` under ``admission_enc_bucket="exact"`` but
@@ -48,7 +57,8 @@ Rows:
 
 ``--smoke`` shrinks the request count and measurement passes for CI;
 ``--only SUBSTR`` runs just the sections whose name contains ``SUBSTR``
-(``pack``, ``continuous``, ``fused``, ``bucket``, ``prefix``).
+(``pack``, ``continuous``, ``fused``, ``bucket``, ``prefix``,
+``preempt``).
 """
 
 from __future__ import annotations
@@ -65,7 +75,7 @@ from repro.data import make_corpus, pack_batches_token_budget, padding_stats
 from repro.data.sorting import make_batches
 from repro.data.synthetic import pad_batch
 from repro.models import build_model
-from repro.serving import ServingEngine, TokenSortedScheduler, \
+from repro.serving import ServingEngine, TokenSortedScheduler, make_chaos, \
     simulate_continuous
 
 N_REQUESTS = 96
@@ -151,6 +161,7 @@ def run(smoke: bool = False, only: str = None) -> list:
         rows.extend(_bucket_rows(engine) if want("bucket") else [])
         rows.extend(_prefix_rows(engine, requests, smoke)
                     if want("prefix") else [])
+        rows.extend(_preempt_rows(engine, smoke) if want("preempt") else [])
         return rows
 
     # 2 — warmup both paths (jit compile, timed and reported separately),
@@ -216,6 +227,10 @@ def run(smoke: bool = False, only: str = None) -> list:
     # 6 — prefix cache on a repeated-prefix mix (asserted identity + cut)
     if want("prefix"):
         rows.extend(_prefix_rows(engine, requests, smoke))
+
+    # 7 — overload: overcommit / chunked prefill / chaos (asserted)
+    if want("preempt"):
+        rows.extend(_preempt_rows(engine, smoke))
     return rows
 
 
@@ -366,13 +381,154 @@ def _prefix_rows(engine, requests, smoke: bool) -> list:
     return rows
 
 
+def _preempt_rows(engine, smoke: bool) -> list:
+    """Overload section on a bimodal workload (hard invariants, CI fails
+    on regression).
+
+    * overcommit A/B: the page pool holds 2 worst-case rows, so at
+      ``overcommit=1.0`` admission reserves conservatively and the grid
+      runs starved; ``overcommit=1.5`` admits past the worst case and
+      covers the gap with growth + preempt-by-page-spill.  Strictly
+      higher ``peak_running``, per-request token identity, and full
+      page/spill reclaim are asserted.
+    * chunked prefill A/B: long sources ahead of short interactive ones.
+      Monolithic admission encodes the whole mix before anyone's first
+      token; with ``prefill_chunk`` the long sources stage one encoder
+      layer per serving round while the shorts admit and decode
+      immediately.  The shorts' worst first-token latency (best of
+      ``passes`` paired runs) must strictly drop, with token identity.
+    * chaos: a seeded preempt-every-round schedule on the starved pool —
+      preemptions must fire, tokens stay identical, everything reclaims.
+    """
+    rows = []
+    cfg = engine.model.cfg
+    passes = 2 if smoke else MEASURE_PASSES
+
+    # --- overcommit A/B on a starved pool (2 worst-case rows of 20-token
+    # budgets; the 4-token shorts make the reservation gap bimodal)
+    n = 6
+    reqs = make_corpus(n, cfg.vocab, seed=41, max_words=6)
+    budgets = [20 if i % 2 == 0 else 4 for i in range(n)]
+    peng = ServingEngine(engine.model, engine.params, max_len=32,
+                         paged=True, page_size=8, n_pages=6)
+    serve_oc = lambda oc: peng.serve(reqs, n_slots=4, max_new_tokens=budgets,
+                                     burst_len=4, overcommit=oc)
+    # one warm serve absorbs compile — at the highest level, so the growth/
+    # spill/resume programs it alone exercises are also warm (overcommit is
+    # host-side: every level reuses the same programs) — then one timed
+    # serve per level reporting first-token p50/p99 vs the occupancy bought
+    # ... and at 1.0, whose narrower admission widths bucket differently
+    _, _, warm_s = measure(lambda: (serve_oc(1.5), serve_oc(1.0)),
+                           warmup=1, passes=0)
+    by_level = {}
+    for lvl in (1.0, 1.25, 1.5):
+        t0 = time.perf_counter()
+        r = serve_oc(lvl)
+        wall = time.perf_counter() - t0
+        by_level[lvl] = r
+        ft = [q.first_token_latency_s for q in r.requests
+              if q.first_token_latency_s is not None]
+        p50, p99 = np.percentile(ft, [50, 99])
+        rows.append((f"preempt_overcommit_{lvl:g}", wall * 1e6 / n,
+                     f"peak_running={r.peak_running} "
+                     f"grid_util={r.utilization:.3f} "
+                     f"first_tok_p50_s={p50:.4f} p99_s={p99:.4f} "
+                     f"preemptions={r.preemptions} "
+                     f"spilled_bytes={r.spilled_bytes} "
+                     f"free_lwm={r.free_lwm}" +
+                     (f" (compile_s={warm_s:.2f})" if lvl == 1.0 else "")))
+    base, oc = by_level[1.0], by_level[1.5]
+    for lvl, r in by_level.items():
+        for i in range(n):
+            assert np.array_equal(base.tokens_for(i), r.tokens_for(i)), (
+                f"overcommit={lvl} changed request {i}'s tokens")
+        assert r.pages_in_use == 0 and r.spill_events == r.restore_events, (
+            f"overcommit={lvl} serve leaked: pages_in_use={r.pages_in_use} "
+            f"spills={r.spill_events} restores={r.restore_events}")
+    assert oc.peak_running > base.peak_running, (
+        "overcommit=1.5 must strictly raise admitted concurrency on the "
+        f"starved pool: base={base.peak_running} oc={oc.peak_running}")
+
+    # --- chaos on the same starved pool: forced evictions every round
+    chaos_res = peng.serve(reqs, n_slots=4, max_new_tokens=budgets,
+                           burst_len=4,
+                           chaos=make_chaos(4, n_rounds=64, preempt_every=1))
+    for i in range(n):
+        assert np.array_equal(base.tokens_for(i), chaos_res.tokens_for(i)), (
+            f"chaos schedule changed request {i}'s tokens")
+    assert chaos_res.preemptions > 0, "chaos schedule never fired"
+    assert chaos_res.pages_in_use == 0 and \
+        chaos_res.spill_events == chaos_res.restore_events, (
+            f"chaos serve leaked: pages_in_use={chaos_res.pages_in_use} "
+            f"spills={chaos_res.spill_events} "
+            f"restores={chaos_res.restore_events}")
+    rows.append(("preempt_chaos", 0.0,
+                 f"preemptions={chaos_res.preemptions} "
+                 f"spill_events={chaos_res.spill_events} "
+                 f"spilled_bytes={chaos_res.spilled_bytes} "
+                 f"identity=ok reclaim=ok"))
+
+    # --- chunked prefill A/B: 12 long sources head-of-line ahead of 4
+    # short interactive ones; burst_len small so the admission encode
+    # dominates the first-token edge
+    longs = make_corpus(12, cfg.vocab, seed=43, max_words=14)
+    shorts = make_corpus(4, cfg.vocab, seed=44, max_words=3)
+    mix = longs + shorts
+    n_mix = len(mix)
+    ceng = ServingEngine(engine.model, engine.params, max_len=32,
+                         paged=True, page_size=8)
+    serve_chunk = lambda chunk: ceng.serve(
+        mix, n_slots=16, max_new_tokens=6, burst_len=2,
+        prefill_chunk=chunk)
+    measure(lambda: serve_chunk(None), warmup=1, passes=0)
+    measure(lambda: serve_chunk(7), warmup=1, passes=0)
+
+    def shorts_worst_first_token(res):
+        lats = [r.first_token_latency_s for r in res.requests[len(longs):]]
+        assert all(v is not None for v in lats)
+        return max(lats)
+
+    mono = chunked = None
+    mono_p, chunk_p = [], []
+    for _ in range(passes):        # paired passes damp shared-machine noise
+        mono = serve_chunk(None)
+        chunked = serve_chunk(7)
+        mono_p.append(shorts_worst_first_token(mono))
+        chunk_p.append(shorts_worst_first_token(chunked))
+    for i in range(n_mix):
+        assert np.array_equal(mono.tokens_for(i), chunked.tokens_for(i)), (
+            f"chunked prefill changed request {i}'s tokens")
+    assert chunked.chunked_admissions == len(longs), (
+        f"expected every long source staged: {chunked.chunked_admissions}"
+        f"/{len(longs)}")
+    assert chunked.pages_in_use == 0, "chunked serve leaked pages"
+    mono_ft, chunk_ft = min(mono_p), min(chunk_p)
+    assert chunk_ft < mono_ft, (
+        "chunked prefill must lower the short requests' worst first-token "
+        f"latency: monolithic={mono_ft:.4f}s chunked={chunk_ft:.4f}s")
+    mono_p50 = float(np.percentile(
+        [r.first_token_latency_s for r in mono.requests[len(longs):]], 50))
+    chunk_p50 = float(np.percentile(
+        [r.first_token_latency_s for r in chunked.requests[len(longs):]], 50))
+    rows.append(("preempt_chunked_prefill", 0.0,
+                 f"short_first_tok_p50_s={mono_p50:.4f}->{chunk_p50:.4f} "
+                 f"worst_s={mono_ft:.4f}->{chunk_ft:.4f} "
+                 f"cut={mono_ft / max(chunk_ft, 1e-9):.2f}x "
+                 f"chunked_admissions={chunked.chunked_admissions} "
+                 f"chunk_rounds={chunked.chunk_rounds} "
+                 f"encoder_tokens={mono.encoder_tokens}->"
+                 f"{chunked.encoder_tokens}"))
+    return rows
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small fast configuration for CI")
     ap.add_argument("--only", default=None, metavar="SUBSTR",
                     help="run only sections whose name contains SUBSTR "
-                         "(pack, continuous, fused, bucket, prefix)")
+                         "(pack, continuous, fused, bucket, prefix, "
+                         "preempt)")
     args = ap.parse_args()
     for r in run(smoke=args.smoke, only=args.only):
         print(",".join(str(x) for x in r))

@@ -35,9 +35,19 @@ class StepWatchdog:
 
     def stop(self) -> bool:
         """Record the step; returns True if it was a straggler."""
-        assert self._t0 is not None, "watchdog.stop() without start()"
+        if self._t0 is None:
+            # raised, not asserted: the pairing invariant must hold under
+            # ``python -O`` too (same convention as the PageAllocator)
+            raise RuntimeError("watchdog.stop() without start()")
         dt = time.perf_counter() - self._t0
         self._t0 = None
+        return self.observe(dt)
+
+    def observe(self, dt: float) -> bool:
+        """Record a step of ``dt`` seconds against the rolling median;
+        returns True if it was a straggler.  Split out of :meth:`stop` so
+        fault injectors (serving chaos harness) can feed synthetic slow
+        rounds without faking wall clocks."""
         self.step += 1
         hist = self.durations[-self.window:]
         self.durations.append(dt)

@@ -34,7 +34,8 @@ from repro.core import Calibrator, QuantMode, QuantPolicy, Taps, quantize_model
 from repro.core.ptq import FP_CONTEXT
 from repro.data import corpus_bleu, make_corpus, pack_batches_token_budget
 from repro.models import build_model
-from repro.serving import ParallelStreams, ServingEngine, TokenSortedScheduler
+from repro.serving import ParallelStreams, Request, ServingEngine, \
+    TokenSortedScheduler, make_chaos
 
 
 def main() -> None:
@@ -90,6 +91,28 @@ def main() -> None:
     ap.add_argument("--prefix-pages", type=int, default=256,
                     help="prefix-cache chain-pool size in pages "
                          "(--prefix-cache; LRU-evicted under pressure)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline on the serve clock (--mode "
+                         "continuous): the wait queue runs EDF-with-aging "
+                         "and provably-unmeetable requests are shed with "
+                         "status 'rejected' instead of admitted (note: "
+                         "jit compile lands inside the first serve, so "
+                         "tight SLOs shed on cold starts)")
+    ap.add_argument("--overcommit", type=float, default=1.0,
+                    help="KV page reservation cap as a multiple of the "
+                         "physical pool (--paged; >1 admits past worst-"
+                         "case reservation, preempt-by-page-spill covers "
+                         "the shortfall when budgets actually collide)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="sources longer than this many tokens stage one "
+                         "encoder layer per serving round instead of "
+                         "blocking an admission round on the full encode "
+                         "(--mode continuous with fused admission)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="serving chaos harness: inject a seeded forced-"
+                         "preemption schedule at burst edges (--paged); "
+                         "output tokens are identical to an uninterrupted "
+                         "serve — use to drill spill/restore in situ")
     args = ap.parse_args()
     burst_len = args.burst_len if args.burst_len == "auto" \
         else int(args.burst_len)
@@ -130,12 +153,23 @@ def main() -> None:
         bins = pack_batches_token_budget(requests, args.token_budget)
         order = [i for b in bins for i in b]     # FFD admission order
         beam = args.beam if args.beam > 1 else None
+        reqs = [requests[i] for i in order]
+        if args.deadline_ms is not None:
+            reqs = [Request(req_id=k, src=np.asarray(s.src, np.int32),
+                            max_new_tokens=args.max_new_tokens,
+                            deadline_s=args.deadline_ms / 1e3)
+                    for k, s in enumerate(reqs)]
+        chaos = (make_chaos(args.chaos_seed, n_rounds=256, preempt_every=2)
+                 if args.chaos_seed is not None else None)
         t0 = time.perf_counter()
-        res = engine.serve([requests[i] for i in order],
+        res = engine.serve(reqs,
                            n_slots=args.slots,
                            max_new_tokens=args.max_new_tokens,
                            beam=beam,
-                           fused_admission=not args.unfused_admission)
+                           fused_admission=not args.unfused_admission,
+                           overcommit=args.overcommit,
+                           prefill_chunk=args.prefill_chunk,
+                           chaos=chaos)
         dt = time.perf_counter() - t0
         met = res.metrics()
         print(f"served {args.requests} requests in {dt:.2f}s "
@@ -171,6 +205,20 @@ def main() -> None:
                   f"{res.prefix_pages_allocated} allocated, "
                   f"{res.prefix_evictions} evicted, "
                   f"{res.prefix_chains} chains resident")
+        if (res.preemptions or res.chunked_admissions or res.rejected
+                or res.overcommit != 1.0 or chaos is not None
+                or args.deadline_ms is not None):
+            print(f"overload: overcommit={res.overcommit} "
+                  f"peak_running={res.peak_running}, "
+                  f"{res.preemptions} preemptions "
+                  f"({res.spill_events} spills / {res.restore_events} "
+                  f"restores, {res.spilled_bytes / 1024:.1f} KiB to host), "
+                  f"free_lwm={res.free_lwm}")
+            print(f"         {res.chunked_admissions} chunked admissions "
+                  f"({res.chunk_rounds} staged encoder rounds), "
+                  f"{res.rejected} shed, "
+                  f"{res.deadline_misses} deadline misses, "
+                  f"{res.straggler_rounds} straggler rounds")
         print(f"latency: first-token mean "
               f"{met['first_token_latency_mean_s']:.3f}s "
               f"p95 {met['first_token_latency_p95_s']:.3f}s; total mean "

@@ -277,6 +277,79 @@ class EncDecLM:
             ck, cv = jnp.stack(ks), jnp.stack(vs)
         return ck, cv, src_lengths
 
+    # ----------------------------------------------- staged (chunked) encode
+    # The encoder is bidirectional (every layer attends over the full
+    # source), so a long source cannot be prefilled token-chunk by
+    # token-chunk the way a causal decoder stack can.  What *can* be
+    # split across serving rounds is depth: embed once, then run one
+    # encoder layer per round, then project cross K/V and splice.  Each
+    # stage is a small dispatch riding alongside the decode burst, so a
+    # long source adds at most one layer of encoder work per round
+    # instead of monopolizing a whole fused-admission round.  The three
+    # functions below are exact restatements of :meth:`encode` +
+    # :meth:`encode_cross_kv` (same op sequence, same quant sites), so a
+    # staged prefill is bit-identical to the monolithic one.
+
+    def encode_staged_begin(self, params, batch) -> jax.Array:
+        """Embedding + position half of :meth:`encode`; returns ``x``."""
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        if "src_embeds" in batch:
+            x = batch["src_embeds"].astype(dt)
+        else:
+            x = embed(params["embed"], batch["src_tokens"], dt)
+            x = x * math.sqrt(cfg.d_model)
+        B, S, D = x.shape
+        return x + sinusoidal_positions(S, D, dt)[None]
+
+    def encode_staged_layer(self, params, x: jax.Array, layer_idx: int, *,
+                            src_lengths: Optional[jax.Array] = None,
+                            quant: QuantContext = FP_CONTEXT) -> jax.Array:
+        """One encoder layer of :meth:`encode` (``layer_idx`` static)."""
+        cfg = self.cfg
+        if cfg.scan_layers:
+            bparams = jax.tree_util.tree_map(lambda p: p[layer_idx],
+                                             params["enc_blocks"])
+            site = "enc_blocks.*"
+        else:
+            bparams = params[f"enc_blocks.{layer_idx}"]
+            site = f"enc_blocks.{layer_idx}"
+        h = norm(bparams["attn_norm"], x, cfg.norm)
+        a, _ = attention(bparams["attn"], h, cfg=cfg, site=f"{site}/attn",
+                         quant=quant, taps=None, causal=False, rope=False,
+                         kv_lengths=src_lengths, unroll=False)
+        x = x + a
+        h = norm(bparams["ffn_norm"], x, cfg.norm)
+        return x + ffn(bparams["ffn"], h, cfg=cfg, site=f"{site}/ffn",
+                       quant=quant, taps=None)
+
+    def encode_staged_finish(self, params, x: jax.Array, *,
+                             src_lengths: Optional[jax.Array] = None,
+                             quant: QuantContext = FP_CONTEXT
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Final norm + cross-K/V projections (back half of
+        :meth:`encode_cross_kv`); returns ``(ck, cv, src_lengths)``."""
+        cfg = self.cfg
+        memory = norm(params["enc_final_norm"], x, cfg.norm)
+        B = memory.shape[0]
+        if src_lengths is None:
+            src_lengths = jnp.full((B,), memory.shape[1], jnp.int32)
+        if cfg.scan_layers:
+            def layer(_, bp):
+                k, v = self._cross_kv(bp, memory, site="dec_blocks.*",
+                                      quant=quant, taps=None)
+                return None, (k, v)
+            _, (ck, cv) = jax.lax.scan(layer, None, params["dec_blocks"])
+        else:
+            ks, vs = [], []
+            for i in range(cfg.n_layers):
+                k, v = self._cross_kv(params[f"dec_blocks.{i}"], memory,
+                                      site=f"dec_blocks.{i}", quant=quant,
+                                      taps=None)
+                ks.append(k); vs.append(v)
+            ck, cv = jnp.stack(ks), jnp.stack(vs)
+        return ck, cv, jnp.asarray(src_lengths, jnp.int32)
+
     def splice_prefill(self, state: Dict[str, Any], cross_k: jax.Array,
                        cross_v: jax.Array, src_lengths: jax.Array,
                        base_rows: jax.Array, *, group: int = 1,

@@ -711,15 +711,23 @@ class PageAllocator:
     without changing any state — callers can treat errors as atomic.
     """
 
-    def __init__(self, n_pages: int, page_size: int):
+    def __init__(self, n_pages: int, page_size: int, *,
+                 overcommit_limit: float = 1.0):
         if n_pages < 1 or page_size < 1:
             raise ValueError(f"bad pool: n_pages={n_pages}, "
                              f"page_size={page_size}")
+        if overcommit_limit < 1.0:
+            raise ValueError(
+                f"overcommit_limit={overcommit_limit} must be >= 1.0")
         self.n_pages = int(n_pages)
         self.page_size = int(page_size)
+        self.overcommit_limit = float(overcommit_limit)
         self._free = list(range(self.n_pages - 1, -1, -1))   # pop() = page 0
         self._refcount = [0] * self.n_pages
         self.hwm = 0
+        self.free_lwm = self.n_pages      # low-water mark of the free list
+        self.reserved = 0                 # virtual worst-case reservations
+        self.spilled = 0                  # pages' worth of KV held on host
 
     @property
     def n_free(self) -> int:
@@ -762,7 +770,68 @@ class PageAllocator:
         for p in pages:
             self._refcount[p] = 1
         self.hwm = max(self.hwm, self.in_use)
+        self.free_lwm = min(self.free_lwm, len(self._free))
         return pages
+
+    # -------------------------------------------- overcommit reservations
+    # ``reserve``/``unreserve`` track *virtual* worst-case page claims: the
+    # scheduler reserves each admitted request's full worst case but only
+    # physically allocates what the next burst needs, so the sum of
+    # reservations may exceed the physical pool — up to
+    # ``overcommit_limit × n_pages``.  The gap is backed by preemption
+    # (spill a victim's pages to host when a physical alloc comes up
+    # short), which is what makes overcommit deadlock-free.
+
+    @property
+    def reserve_cap(self) -> int:
+        return int(self.overcommit_limit * self.n_pages)
+
+    def can_reserve(self, n: int) -> bool:
+        if n < 0:
+            raise ValueError(f"cannot reserve {n} pages")
+        return self.reserved + n <= self.reserve_cap
+
+    def reserve(self, n: int) -> bool:
+        if not self.can_reserve(n):
+            return False
+        self.reserved += n
+        return True
+
+    def unreserve(self, n: int) -> None:
+        if n < 0 or n > self.reserved:
+            raise ValueError(f"unreserve({n}) with reserved={self.reserved}")
+        self.reserved -= n
+
+    # ------------------------------------------------- spill accounting
+    def spill(self, pages: Sequence[int]) -> None:
+        """Release ``pages`` whose content moved to a host spill store.
+
+        Atomic: validates exactly like :meth:`release` (it *is* a release)
+        before mutating, then counts the pages as spilled so leak checks
+        can demand ``spilled == 0`` after every chaos schedule.
+        """
+        self.release(pages)          # validate-then-mutate, may raise
+        self.spilled += len(pages)
+
+    def unspill(self, n: int) -> None:
+        """Account ``n`` spilled pages' worth of KV restored on device
+        (the physical pages come from a fresh :meth:`alloc`)."""
+        if n < 0 or n > self.spilled:
+            raise ValueError(f"unspill({n}) with spilled={self.spilled}")
+        self.spilled -= n
+
+    @property
+    def fragmentation(self) -> float:
+        """Free-list scatter in [0, 1]: 0 when the free pages form one
+        contiguous id run, →1 as every free page sits in its own run.
+        Paged serving is immune to it (any page serves any slot); the stat
+        exists to show that churn *does* scatter the pool and the engine
+        keeps running at full occupancy anyway."""
+        if len(self._free) <= 1:
+            return 0.0
+        ids = sorted(self._free)
+        runs = 1 + sum(1 for a, b in zip(ids, ids[1:]) if b != a + 1)
+        return (runs - 1) / (len(self._free) - 1)
 
     def retain(self, pages: Sequence[int]) -> None:
         self._check(pages)

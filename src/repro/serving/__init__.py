@@ -1,8 +1,14 @@
 from repro.serving.burst_control import AdaptiveBurst  # noqa: F401
+from repro.serving.chaos import ChaosSchedule, make_chaos  # noqa: F401
 from repro.serving.engine import (  # noqa: F401
     GenerationResult,
     ServeResult,
     ServingEngine,
+)
+from repro.serving.preemption import (  # noqa: F401
+    SpilledRequest,
+    SpillStore,
+    pick_victims,
 )
 from repro.serving.prefix_cache import (  # noqa: F401
     CachedChain,

@@ -83,8 +83,11 @@ import numpy as np
 from repro.core.ptq import FP_CONTEXT, QuantContext
 from repro.data.sorting import next_pow2
 from repro.data.synthetic import EOS, pad_batch
+from repro.distributed.fault import StepWatchdog
 from repro.models import kv_cache as kvc
 from repro.serving.burst_control import AdaptiveBurst
+from repro.serving.chaos import ChaosSchedule
+from repro.serving.preemption import SpilledRequest, SpillStore, pick_victims
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import ContinuousScheduler, Request, \
     pad_rows_pow2
@@ -171,6 +174,21 @@ class ServeResult:
     prefix_hit_pages: int = 0         # chain pages hits read instead of wrote
     prefix_pages_allocated: int = 0   # chain pages reserved by this serve
     prefix_chains: int = 0            # chains resident at serve end
+    # overload machinery (preempt-by-page-spill / deadline admission /
+    # chunked prefill — all zero on a serve that never hit pressure)
+    overcommit: float = 1.0           # reserve cap ÷ physical pool size
+    preemptions: int = 0              # evictions (chaos-forced + pressure)
+    spill_events: int = 0             # KV page sets copied to host
+    restore_events: int = 0           # spills re-spliced on re-admission
+    spilled_bytes: int = 0            # cumulative host bytes spilled
+    straggler_rounds: int = 0         # watchdog-flagged burst rounds
+    chunked_admissions: int = 0       # requests whose prefill was staged
+    chunk_rounds: int = 0             # staged encoder dispatches
+    peak_running: int = 0             # max concurrent running requests
+    rejected: int = 0                 # requests shed (deadline unmeetable)
+    deadline_misses: int = 0          # shed + finished past their deadline
+    free_lwm: int = 0                 # page free-list low-water mark
+    fragmentation: float = 0.0        # final free-list scatter in [0, 1]
 
     @property
     def n_groups(self) -> int:
@@ -245,6 +263,19 @@ class ServeResult:
             "prefix_chains": float(self.prefix_chains),
             "prefix_hit_rate": (self.prefix_hits /
                                 max(self.prefix_hits + self.prefix_misses, 1)),
+            "overcommit": float(self.overcommit),
+            "preemptions": float(self.preemptions),
+            "spill_events": float(self.spill_events),
+            "restore_events": float(self.restore_events),
+            "spilled_bytes": float(self.spilled_bytes),
+            "straggler_rounds": float(self.straggler_rounds),
+            "chunked_admissions": float(self.chunked_admissions),
+            "chunk_rounds": float(self.chunk_rounds),
+            "peak_running": float(self.peak_running),
+            "rejected": float(self.rejected),
+            "deadline_misses": float(self.deadline_misses),
+            "free_lwm": float(self.free_lwm),
+            "fragmentation": float(self.fragmentation),
             "first_token_latency_mean_s": float(np.mean(first)) if first else 0.0,
             "first_token_latency_p95_s":
                 float(np.percentile(first, 95)) if first else 0.0,
@@ -322,6 +353,16 @@ class ServingEngine:
         self._beam_serve_jits: Dict[Tuple[int, int], Callable] = {}
         self._fused_burst_jits: Dict[int, Callable] = {}
         self._fused_beam_serve_jits: Dict[Tuple[int, int], Callable] = {}
+        # overload machinery: preempt-by-page-spill gathers/scatters,
+        # overcommit page growth, and chunked-prefill staged encodes —
+        # keyed by row count (1 greedy, group width beam) / encoder layer
+        self._spill_jits: Dict[int, Callable] = {}
+        self._resume_jits: Dict[int, Callable] = {}
+        self._grow_jits: Dict[int, Callable] = {}
+        self._chunk_splice_jits: Dict[int, Callable] = {}
+        self._stage_begin_jit: Optional[Callable] = None
+        self._stage_finish_jit: Optional[Callable] = None
+        self._stage_layer_jits: Dict[int, Callable] = {}
 
     # ------------------------------------------------------------------ util
     def _init_state(self, batch_size: int):
@@ -342,6 +383,26 @@ class ServingEngine:
         if k < 1:
             raise ValueError(f"burst_len must be ≥ 1, got {k}")
         return k
+
+    def _check_overload_args(self, overcommit: float,
+                             prefill_chunk: Optional[int],
+                             chaos: Optional[ChaosSchedule],
+                             fused_admission: bool) -> None:
+        if overcommit < 1.0:
+            raise ValueError(f"overcommit must be >= 1.0, got {overcommit}")
+        if overcommit > 1.0 and not self.paged:
+            raise ValueError("overcommit needs the paged KV cache "
+                             "(preempt-by-page-spill backs it)")
+        if chaos is not None and not self.paged:
+            raise ValueError("chaos preemption needs the paged KV cache "
+                             "(spill/restore move pages)")
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, "
+                                 f"got {prefill_chunk}")
+            if not fused_admission:
+                raise ValueError("prefill_chunk requires fused_admission "
+                                 "(staged encodes ride the fused rounds)")
 
     def _burst_controller(self, K: Union[int, str]
                           ) -> Optional[AdaptiveBurst]:
@@ -399,12 +460,28 @@ class ServingEngine:
     def _max_pages(self) -> int:
         return self.max_len // self.page_size
 
-    def _make_allocator(self, n_rows: int) -> kvc.PageAllocator:
+    def _make_allocator(self, n_rows: int,
+                        overcommit: float = 1.0) -> kvc.PageAllocator:
         """Fresh page pool for one serve: ``n_pages`` from the constructor,
         or contiguous-equivalent capacity (every grid row could hold
-        ``max_len`` tokens) when unset."""
+        ``max_len`` tokens) when unset.  ``overcommit`` scales the
+        *virtual* reservation cap past the physical pool (preemption by
+        page spill covers the gap)."""
         n_pages = self.n_pages or n_rows * self._max_pages
-        return kvc.PageAllocator(n_pages, self.page_size)
+        return kvc.PageAllocator(n_pages, self.page_size,
+                                 overcommit_limit=overcommit)
+
+    def _initial_pages(self, req: Request, rows: int, hint: int) -> int:
+        """Pages physically allocated at (re-)admission under overcommit:
+        enough to hold what the request already decoded (its spill cursor
+        when resuming) plus one max-length burst — growth covers the rest,
+        round by round."""
+        have = 0
+        if req.spill is not None:
+            have = int(np.max(req.spill.lengths))
+        cap_tok = min(req.max_new_tokens, self.max_len)
+        return rows * kvc.pages_per_row(min(have + hint, cap_tok),
+                                        self.page_size)
 
     def _pages_per_request(self, req: Request, rows: int) -> int:
         """Worst-case reservation: the request's full decode budget, per
@@ -430,6 +507,143 @@ class ServingEngine:
             per_row = flat.reshape(live, ppr)
             out[i * rows_per_req:i * rows_per_req + live, :ppr] = per_row
         return out
+
+    # ------------------------------------------------- preempt-by-page-spill
+    def _spill_fn(self, n_rows: int) -> Callable:
+        """Jitted spill gather: linearize ``n_rows`` paged cache rows into
+        logical ``(L, W, cap, …)`` views (INT8 payload + scales verbatim —
+        no requantization round trip) plus cursors, current tokens, and
+        cross-K/V.  One dispatch + one host sync per preemption; junk past
+        each cursor rides along and is masked on restore exactly like any
+        partially filled row.  NOT donating: the live state survives."""
+        fn = self._spill_jits.get(n_rows)
+        if fn is None:
+            def spill(state, tokens, rows):
+                cache = state["cache"]
+                P = cache.n_pages
+                cap = cache.max_pages * cache.page_size
+                tb = jnp.clip(cache.block_tables[rows], 0, P - 1)
+
+                def lin(pool):
+                    if pool is None:
+                        return None
+                    got = pool[:, tb]          # (L, W, maxP, ps, …)
+                    return got.reshape((pool.shape[0], n_rows, cap)
+                                       + pool.shape[3:])
+
+                return (lin(cache.k), lin(cache.v), lin(cache.k_scale),
+                        lin(cache.v_scale), cache.lengths[rows],
+                        tokens[rows], state["cross_k"][:, rows],
+                        state["cross_v"][:, rows],
+                        state["src_lengths"][rows])
+
+            fn = jax.jit(spill)
+            self._spill_jits[n_rows] = fn
+        return fn
+
+    def _resume_fn(self, n_rows: int) -> Callable:
+        """Jitted resume scatter: the spilled logical rows become a host-
+        built contiguous side batch and re-enter through the SAME paged
+        splice admission uses (``kv_cache.insert_rows_paged``), plus the
+        cross-K/V / source-length / current-token scatters — so a resumed
+        request is indistinguishable from one that was never preempted."""
+        fn = self._resume_jits.get(n_rows)
+        if fn is None:
+            def resume(state, tokens, slots, pages, k, v, ks, vs, lengths,
+                       row_tokens, ck, cv, slens):
+                sub = kvc.KVCache(k=k, v=v, k_scale=ks, v_scale=vs,
+                                  lengths=lengths)
+                out = dict(state)
+                out["cache"] = kvc.insert_rows_paged(state["cache"], sub,
+                                                     slots, pages)
+                out["cross_k"] = state["cross_k"].at[:, slots].set(
+                    ck.astype(state["cross_k"].dtype), mode="drop")
+                out["cross_v"] = state["cross_v"].at[:, slots].set(
+                    cv.astype(state["cross_v"].dtype), mode="drop")
+                out["src_lengths"] = state["src_lengths"].at[slots].set(
+                    slens, mode="drop")
+                tokens = tokens.at[slots].set(row_tokens, mode="drop")
+                return out, tokens
+
+            donate = (0, 1) if self._donate_state else ()
+            fn = jax.jit(resume, donate_argnums=donate)
+            self._resume_jits[n_rows] = fn
+        return fn
+
+    def _grow_fn(self, n_rows: int) -> Callable:
+        """Jitted page growth: install freshly allocated page ids into
+        ``n_rows`` rows' block tables.  ``upd`` is (n_rows, maxP) int32
+        with -1 = keep; new slots are written to BOTH ``block_tables`` and
+        ``own_pages`` — a grown slot is owned by construction, which is
+        the copy-on-write invariant every beam reorder relies on."""
+        fn = self._grow_jits.get(n_rows)
+        if fn is None:
+            def grow(state, rows, upd):
+                cache = state["cache"]
+                new_t = jnp.where(upd >= 0, upd, cache.block_tables[rows])
+                new_o = jnp.where(upd >= 0, upd, cache.own_pages[rows])
+                out = dict(state)
+                out["cache"] = dataclasses.replace(
+                    cache,
+                    block_tables=cache.block_tables.at[rows].set(
+                        new_t, mode="drop"),
+                    own_pages=cache.own_pages.at[rows].set(
+                        new_o, mode="drop"))
+                return out
+
+            donate = (0,) if self._donate_state else ()
+            fn = jax.jit(grow, donate_argnums=donate)
+            self._grow_jits[n_rows] = fn
+        return fn
+
+    # ---------------------------------------------------- chunked prefill
+    def _stage_fns(self) -> Tuple[Callable, Callable]:
+        """Jitted begin/finish of a depth-staged encode (chunked prefill).
+        The bidirectional encoder cannot chunk over source *tokens*, so a
+        long source's encode is spread over *layers*: one width-1 encoder
+        layer per serving round rides between decode bursts instead of one
+        monolithic width-W encode stalling a whole round."""
+        if self._stage_begin_jit is None:
+            model, quant = self.model, self.quant
+            self._stage_begin_jit = jax.jit(
+                lambda p, src, lens: model.encode_staged_begin(
+                    p, {"src_tokens": src, "src_lengths": lens}))
+            self._stage_finish_jit = jax.jit(
+                lambda p, x, lens: model.encode_staged_finish(
+                    p, x, src_lengths=lens, quant=quant))
+        return self._stage_begin_jit, self._stage_finish_jit
+
+    def _stage_layer_fn(self, layer_idx: int) -> Callable:
+        fn = self._stage_layer_jits.get(layer_idx)
+        if fn is None:
+            model, quant = self.model, self.quant
+            fn = jax.jit(lambda p, x, lens: model.encode_staged_layer(
+                p, x, layer_idx, src_lengths=lens, quant=quant))
+            self._stage_layer_jits[layer_idx] = fn
+        return fn
+
+    def _chunk_splice_fn(self, group: int) -> Callable:
+        """Jitted completion of a staged encode: splice the finished
+        cross-K/V into the request's grid rows and seed BOS — exactly the
+        fused-admission splice, one round later than a monolithic encode
+        would have landed it."""
+        fn = self._chunk_splice_jits.get(group)
+        if fn is None:
+            model = self.model
+
+            def csplice(state, tokens, ck, cv, slens, base_rows, extra):
+                state = model.splice_prefill(state, ck, cv, slens,
+                                             base_rows, group=group,
+                                             pages=extra.get("pages"))
+                rows = kvc.group_rows(jnp.asarray(base_rows, jnp.int32),
+                                      group)
+                tokens = tokens.at[rows].set(0, mode="drop")       # BOS
+                return state, tokens
+
+            donate = (0, 1) if self._donate_state else ()
+            fn = jax.jit(csplice, donate_argnums=donate)
+            self._chunk_splice_jits[group] = fn
+        return fn
 
     # ------------------------------------------------------------ prefix cache
     def _ensure_prefix_cache(self) -> PrefixCache:
@@ -475,6 +689,31 @@ class ServingEngine:
                     prefix_pages_allocated=(s.pages_allocated
                                             - stats0.pages_allocated),
                     prefix_chains=pc.n_chains)
+
+    @staticmethod
+    def _overload_result_fields(overcommit, preempt_count, store, watchdog,
+                                sched, reqs, allocator, peak_running,
+                                chunked_admissions, chunk_rounds
+                                ) -> Dict[str, Any]:
+        """ServeResult kwargs for the overload machinery counters."""
+        misses = len(sched.rejected) + sum(
+            1 for r in reqs
+            if (r.status == "finished" and r.deadline_s is not None
+                and r.finish_s is not None and r.finish_s > r.deadline_s))
+        return dict(
+            overcommit=overcommit,
+            preemptions=preempt_count,
+            spill_events=store.spill_events,
+            restore_events=store.restore_events,
+            spilled_bytes=store.spilled_bytes,
+            straggler_rounds=len(watchdog.straggler_steps),
+            chunked_admissions=chunked_admissions,
+            chunk_rounds=chunk_rounds,
+            peak_running=peak_running,
+            rejected=len(sched.rejected),
+            deadline_misses=misses,
+            free_lwm=allocator.free_lwm if allocator else 0,
+            fragmentation=allocator.fragmentation if allocator else 0.0)
 
     def _pool_insert_fn(self) -> Callable:
         """Jitted unfused-path pool insert: scatter a prefilled side
@@ -1117,7 +1356,10 @@ class ServingEngine:
               beam: Optional[Union[int, Sequence[int]]] = None,
               alpha: float = 0.6,
               fused_admission: bool = True,
-              prefix_cache: Optional[bool] = None) -> ServeResult:
+              prefix_cache: Optional[bool] = None,
+              overcommit: float = 1.0,
+              prefill_chunk: Optional[int] = None,
+              chaos: Optional[ChaosSchedule] = None) -> ServeResult:
         """Continuous-batching decode over a request stream.
 
         ``requests`` may be ``Sentence``s, raw token arrays, or ``Request``
@@ -1179,6 +1421,32 @@ class ServingEngine:
         cache persists across serve() calls on this engine.  Token
         streams are identical to a cold-cache serve — hits change *where*
         the cross-K/V comes from, never its values.
+
+        **Overload behaviour** (all default-off; tokens stay identical to
+        an unloaded serve in every mode):
+
+        * ``overcommit > 1.0`` (paged cache only) admits past worst-case
+          page reservation — a request's full-budget reservation becomes
+          *virtual* (capped at ``overcommit × n_pages``), only next-burst
+          pages are allocated up front, rows grow page by page between
+          bursts, and when growth or a more urgent admission comes up
+          short a victim is **preempted by page spill**: its KV pages,
+          cursors and tokens are copied to host
+          (``serving/preemption.py``), its pages freed, and it resumes
+          later through the normal paged splice, bit-identically.
+        * ``Request.deadline_s`` / ``Request.priority`` order the wait
+          queue EDF-first (with starvation aging) and pick preemption
+          victims; a request whose deadline has already passed at an
+          admission edge is **shed** (status "rejected" with a reason)
+          instead of wasting encode work.
+        * ``prefill_chunk`` (fused admission only) stages sources longer
+          than the chunk over serving rounds — one width-1 encoder layer
+          per round between decode bursts — so one long prefill cannot
+          stall every running request's next token.
+        * ``chaos`` injects deterministic seeded faults at round edges
+          (``serving/chaos.py``): forced preemptions and synthetic slow
+          rounds for the ``StepWatchdog``.  The test harness uses it to
+          prove the preempt/resume identity.
         """
         if beam is not None:
             return self._serve_beam(
@@ -1187,7 +1455,11 @@ class ServingEngine:
                 prefill_token_budget=prefill_token_budget,
                 admit_min_free=admit_min_free,
                 pad_to_multiple=pad_to_multiple, burst_len=burst_len,
-                fused_admission=fused_admission, prefix_cache=prefix_cache)
+                fused_admission=fused_admission, prefix_cache=prefix_cache,
+                overcommit=overcommit, prefill_chunk=prefill_chunk,
+                chaos=chaos)
+        self._check_overload_args(overcommit, prefill_chunk, chaos,
+                                  fused_admission)
         K = self._resolve_burst(burst_len)
         ctrl = self._burst_controller(K)
         reqs = self._as_requests(requests, max_new_tokens)
@@ -1212,20 +1484,29 @@ class ServingEngine:
 
         allocator = None
         if self.paged:
-            allocator = self._make_allocator(n_slots)
+            allocator = self._make_allocator(n_slots, overcommit)
             for r in reqs:
                 need = self._pages_per_request(r, 1)
                 if need > allocator.n_pages:
                     raise ValueError(
                         f"request {r.req_id} needs {need} pages but the "
                         f"pool holds {allocator.n_pages}")
+        # overcommit: admission allocates only next-burst pages; the loop
+        # grows rows and preempts-by-spill under pressure.  The hint is
+        # the largest step cap a burst can take, so a freshly (re)admitted
+        # row never needs growth before its first burst.
+        burst_hint = ctrl.max_burst if ctrl else K
+        initial_fn = None
+        if allocator is not None and overcommit > 1.0:
+            initial_fn = lambda r: self._initial_pages(r, 1, burst_hint)
         sched = ContinuousScheduler(
             n_slots, prefill_token_budget=prefill_token_budget,
             allocator=allocator,
             pages_per_request=(
                 (lambda r: self._pages_per_request(r, 1))
                 if allocator else None),
-            prefix_cache=pc)
+            prefix_cache=pc, initial_pages=initial_fn,
+            prefill_chunk=prefill_chunk)
         sched.submit_many(reqs)
 
         quantized = self.quant.quantize_kv
@@ -1247,6 +1528,168 @@ class ServingEngine:
         encoder_tokens = 0
         # fixed caps upload the device scalar once; auto rebuilds per round
         cap_fixed = None if ctrl else jnp.asarray(K, jnp.int32)
+        # ---- overload machinery (all inert on an unloaded serve)
+        store = SpillStore()
+        watchdog = StepWatchdog()
+        staging: Dict[int, Dict[str, Any]] = {}   # slot → staged-encode state
+        # with growth (overcommit) or preemption in play, freed pages can
+        # be handed to OTHER rows between fused prologues — dead rows must
+        # be sentineled eagerly, not lazily at the next admission burst
+        eager_free = (overcommit > 1.0) or (chaos is not None)
+        preempt_count = 0
+        peak_running = 0
+        chunked_admissions = 0
+        chunk_rounds = 0
+        round_idx = 0
+        maxP = self._max_pages
+
+        def preempt_req(req: Request) -> None:
+            """Spill one running request's device state to host and evict
+            it (a mid-stage chunked prefill holds no device state worth
+            saving: drop the stage and restage from scratch on
+            re-admission — deterministic, so tokens are unaffected)."""
+            nonlocal state, host_syncs, preempt_count
+            slot = req.slot
+            if slot in staging:
+                staging.pop(slot)
+                sched.preempt(req, now())
+            else:
+                outs = self._spill_fn(1)(
+                    state, tokens, jnp.asarray(np.asarray([slot], np.int32)))
+                k, v, ks, vs, lens, toks, ck, cv, slens = [
+                    None if o is None else np.asarray(o) for o in outs]
+                host_syncs += 1
+                req.spill = SpilledRequest(
+                    req_id=req.req_id, n_rows=1, k=k, v=v, k_scale=ks,
+                    v_scale=vs, lengths=lens, tokens_row=toks, cross_k=ck,
+                    cross_v=cv, src_lengths=slens,
+                    n_pages=len(req.pages or []))
+                store.put(req.spill)
+                sched.preempt(req, now())
+            preempt_count += 1
+            # sentinel the victim row NOW: its stale block table would
+            # otherwise route the next burst's (masked but real) writes
+            # into pages growth/resume may already have handed to others
+            state = dict(state)
+            state["cache"] = kvc.free_slots_paged(
+                state["cache"], np.asarray([slot], np.int32))
+
+        def grow_rows(k_cap: int) -> None:
+            """Pre-burst page growth for overcommitted rows: every running
+            row gets pages to cover its cursor + the next burst, evicting
+            least-urgent victims when the pool is dry (mandatory — a row
+            that cannot grow cannot take its next step)."""
+            nonlocal state
+            if initial_fn is None:
+                return
+            for slot, req in list(sched.slot_map.items()):
+                if sched.slot_map.get(slot) is not req or slot in staging:
+                    continue       # victim of an earlier growth this round
+                cursor = len(req.tokens)
+                cap_tok = min(req.max_new_tokens, self.max_len)
+                need = kvc.pages_per_row(min(cursor + k_cap, cap_tok),
+                                         self.page_size)
+                extra = need - len(req.pages)
+                if extra <= 0:
+                    continue
+                newp = allocator.alloc(extra)
+                while newp is None:
+                    victims = pick_victims(
+                        [r for r in sched.slot_map.values() if r is not req],
+                        pages_needed=extra - allocator.n_free,
+                        key_fn=sched.victim_key,
+                        pages_held_fn=lambda r: len(r.pages or []))
+                    if not victims:
+                        raise RuntimeError(
+                            "page growth wedged: no preemptable victim "
+                            f"for request {req.req_id} (need {extra} pages)")
+                    for v in victims:
+                        preempt_req(v)
+                    newp = allocator.alloc(extra)
+                have = len(req.pages)
+                upd = np.full((1, maxP), -1, np.int32)
+                upd[0, have:have + extra] = newp
+                req.pages.extend(newp)
+                state = self._grow_fn(1)(
+                    state, jnp.asarray(np.asarray([slot], np.int32)),
+                    jnp.asarray(upd))
+
+        def preempt_for_admission() -> None:
+            """Admission-driven preemption: free pages for the most urgent
+            waiting request by evicting strictly-less-urgent running ones
+            (``min_key`` — equal urgency never evicts, so requests cannot
+            ping-pong)."""
+            if initial_fn is None:
+                return
+            for _ in range(n_slots + len(reqs)):
+                short = sched.admission_shortfall()
+                if short is None:
+                    return
+                need = max(short["pages_short"], 1)
+                victims = pick_victims(
+                    list(sched.slot_map.values()), pages_needed=need,
+                    key_fn=sched.victim_key,
+                    pages_held_fn=lambda r: len(r.pages or []),
+                    min_key=short["head_key"])
+                if not victims:
+                    return
+                for v in victims:
+                    preempt_req(v)
+
+        def restore_resumed(resumed: List[Request]) -> None:
+            """Re-splice spilled payloads into freshly admitted rows —
+            the resume half of preempt-by-page-spill."""
+            nonlocal state, tokens
+            for req in resumed:
+                sp = req.spill
+                pages = np.full((1, maxP), allocator.n_pages, np.int32)
+                pages[0, :len(req.pages)] = req.pages
+                state, tokens = self._resume_fn(1)(
+                    state, tokens,
+                    jnp.asarray(np.asarray([req.slot], np.int32)),
+                    jnp.asarray(pages),
+                    jnp.asarray(sp.k), jnp.asarray(sp.v),
+                    None if sp.k_scale is None else jnp.asarray(sp.k_scale),
+                    None if sp.v_scale is None else jnp.asarray(sp.v_scale),
+                    jnp.asarray(sp.lengths), jnp.asarray(sp.tokens_row),
+                    jnp.asarray(sp.cross_k), jnp.asarray(sp.cross_v),
+                    jnp.asarray(sp.src_lengths))
+                store.pop(req.req_id)
+                allocator.unspill(sp.n_pages)
+                req.spill = None
+
+        def advance_staging() -> None:
+            """Run ONE encoder layer for every staged (chunked) prefill;
+            finished stages splice their cross-K/V and seed BOS, so the
+            request starts decoding next round."""
+            nonlocal state, tokens, chunk_rounds
+            n_enc = self.model.cfg.n_enc_layers
+            for slot, st in list(staging.items()):
+                req = st["req"]
+                if st["x"] is None:
+                    src = np.zeros((1, enc_len), np.int32)
+                    src[0, :req.n_src_tokens] = req.src
+                    st["lens"] = jnp.asarray(
+                        np.asarray([req.n_src_tokens], np.int32))
+                    begin, _ = self._stage_fns()
+                    st["x"] = begin(self.params, jnp.asarray(src),
+                                    st["lens"])
+                st["x"] = self._stage_layer_fn(st["li"])(
+                    self.params, st["x"], st["lens"])
+                st["li"] += 1
+                chunk_rounds += 1
+                if st["li"] >= n_enc:
+                    _, finish = self._stage_fns()
+                    ck, cv, slens = finish(self.params, st["x"], st["lens"])
+                    extra = {}
+                    if allocator:
+                        extra["pages"] = jnp.asarray(self._page_rows(
+                            [req], 1, 1, allocator.n_pages))
+                    state, tokens = self._chunk_splice_fn(1)(
+                        state, tokens, ck, cv, slens,
+                        jnp.asarray(np.asarray([req.slot], np.int32)),
+                        extra)
+                    staging.pop(slot)
 
         def prefill_into_slots(admitted, state, tokens):
             """Prefill newly admitted requests and splice them in."""
@@ -1283,6 +1726,17 @@ class ServingEngine:
             return state, tokens
 
         while not sched.all_done:
+            rnd = round_idx
+            round_idx += 1
+            # (a) chaos: forced preemptions at this round edge
+            if chaos is not None and sched.slot_map:
+                by_id = {r.req_id: r for r in sched.slot_map.values()}
+                for rid in chaos.victims_for(rnd, list(by_id)):
+                    preempt_req(by_id[rid])
+            # (b) overcommit growth for mid-flight rows (may itself evict)
+            grow_rows(ctrl.k if ctrl else K)
+            # (c) admission pressure: evict strictly-less-urgent victims
+            preempt_for_admission()
             plan = None
             admitted = []
             want_admit = (sched.n_waiting and sched.n_free >=
@@ -1297,21 +1751,32 @@ class ServingEngine:
                 if plan.n_admitted:
                     prefill_rounds += 1
                 encoder_tokens += len(plan.requests) * enc_len
+                if plan.resumed:
+                    restore_resumed(plan.resumed)
+                for r in plan.staged:
+                    staging[r.slot] = {"req": r, "x": None, "li": 0,
+                                       "lens": None}
+                chunked_admissions += len(plan.staged)
+                encoder_tokens += len(plan.staged) * enc_len
             elif want_admit:
                 admitted = sched.admit(now(), step=decode_steps)
                 if admitted:
                     prefill_rounds += 1
+                    resumed = [r for r in admitted if r.spill is not None]
+                    fresh = [r for r in admitted if r.spill is None]
+                    if resumed:
+                        restore_resumed(resumed)
                     hits: List[Request] = []
                     if pc is not None:
                         # zero-budget requests skip prefix routing: they
                         # release inside prefill_into_slots before any
                         # finish() could pair with their admit()
                         misses, hits = sched.assign_prefix(
-                            [r for r in admitted if r.max_new_tokens > 0])
-                        enc_list = misses + [r for r in admitted
+                            [r for r in fresh if r.max_new_tokens > 0])
+                        enc_list = misses + [r for r in fresh
                                              if r.max_new_tokens <= 0]
                     else:
-                        enc_list = admitted
+                        enc_list = fresh
                     if enc_list:
                         prefill_dispatches += 1
                         host_syncs += 1   # first-token drain syncs the host
@@ -1329,13 +1794,25 @@ class ServingEngine:
                         state, tokens = self._hit_splice_fn(1)(
                             state, tokens, jnp.asarray(hpages),
                             jnp.asarray(hlens), jnp.asarray(hrows), extra)
+            peak_running = max(peak_running, sched.n_running)
             if not sched.slot_map:
                 continue        # every admitted request finished on token 1
 
-            # per-row budgets: every occupied slot has ≥1 token left to emit
+            # per-row budgets: every occupied slot has ≥1 token left to
+            # emit.  Staging slots stay at 0 — they hold no KV yet, so the
+            # fused prologue treats them as dead (re-sentinels their
+            # tables) until their chunked encode completes.
             remaining = np.zeros((n_slots,), np.int32)
             for slot, req in sched.slot_map.items():
+                if slot in staging:
+                    continue
                 remaining[slot] = req.max_new_tokens - len(req.tokens)
+            has_adm = plan is not None and (plan.width or plan.hit_width)
+            if not remaining.any() and not has_adm:
+                # pure-staging round: nothing to decode — push the staged
+                # encodes one layer and come back
+                advance_staging()
+                continue
             cap = jnp.asarray(ctrl.k, jnp.int32) if ctrl else cap_fixed
             t_dispatch = time.perf_counter()
             if plan is not None and (plan.width or plan.hit_width):
@@ -1373,6 +1850,12 @@ class ServingEngine:
             freed = []
             wasted_row_steps = 0
             for slot, req in list(sched.slot_map.items()):
+                if slot in staging:
+                    # mid-stage rows are inert grid: their ring columns
+                    # are masked EOS, not output (draining one would
+                    # falsely release the request)
+                    wasted_row_steps += steps
+                    continue
                 if req.first_token_s is None:
                     req.first_token_s = t   # fused: emitted by this burst
                 used = steps
@@ -1393,13 +1876,21 @@ class ServingEngine:
                 wasted_row_steps += steps - used
             if ctrl:
                 ctrl.observe(burst_wall, steps, wasted_row_steps, n_slots)
-            if freed and not fused_admission:
-                # fused mode resets dead cursors inside the next admission
-                # burst's prologue (kv_cache.free_inactive) — no dispatch
+            watchdog.observe(burst_wall +
+                             (chaos.slow_for(rnd) if chaos else 0.0))
+            if freed and (not fused_admission or eager_free):
+                # fused mode normally resets dead cursors inside the next
+                # admission burst's prologue — but under growth/preemption
+                # freed pages can be handed out before any prologue runs,
+                # so dead rows are sentineled eagerly here
                 state = dict(state)
                 free = kvc.free_slots_paged if self.paged else kvc.free_slots
                 state["cache"] = free(state["cache"],
                                       np.asarray(freed, np.int32))
+            # (h) advance chunked prefills one encoder layer, after the
+            # drain so a stage admitted this round runs its first layer
+            # in this round but never rides this round's burst
+            advance_staging()
 
         if pc is not None:
             # hand the (possibly donated-through) pool arrays back to the
@@ -1418,6 +1909,10 @@ class ServingEngine:
                            paged=self.paged, page_size=self.page_size,
                            pages_in_use=allocator.in_use if allocator else 0,
                            page_hwm=allocator.hwm if allocator else 0,
+                           **self._overload_result_fields(
+                               overcommit, preempt_count, store, watchdog,
+                               sched, reqs, allocator, peak_running,
+                               chunked_admissions, chunk_rounds),
                            **self._prefix_result_fields(pc, stats0))
 
     # ------------------------------------------------- continuous beam search
@@ -1428,7 +1923,10 @@ class ServingEngine:
                     admit_min_free: int, pad_to_multiple: int,
                     burst_len: Optional[Union[int, str]],
                     fused_admission: bool = True,
-                    prefix_cache: Optional[bool] = None) -> ServeResult:
+                    prefix_cache: Optional[bool] = None,
+                    overcommit: float = 1.0,
+                    prefill_chunk: Optional[int] = None,
+                    chaos: Optional[ChaosSchedule] = None) -> ServeResult:
         """Continuous beam search: beam-group slot lifecycle.
 
         Structure mirrors the greedy ``serve`` loop, at group granularity:
@@ -1469,7 +1967,16 @@ class ServingEngine:
         paged cache, parked rows reserve **no pages**, so mixed widths
         cost HBM proportional to the widths actually requested — no
         fragmentation-aware free list, because pages cannot fragment.
+
+        Overload machinery (overcommit growth, preempt-by-page-spill,
+        deadline shedding, chunked prefill, chaos) works at *group*
+        granularity: a preemption spills the whole group — all ``beam``
+        rows' pages plus the host-side search state (scores, finished
+        mask, token history, budget) — and resume re-seeds both sides
+        bit-identically.
         """
+        self._check_overload_args(overcommit, prefill_chunk, chaos,
+                                  fused_admission)
         reqs = self._as_requests(requests, max_new_tokens)
         # resolve each request's effective width WITHOUT mutating the
         # caller's Request objects (a serve()-written default would stick
@@ -1523,20 +2030,26 @@ class ServingEngine:
 
         allocator = None
         if self.paged:
-            allocator = self._make_allocator(R)
+            allocator = self._make_allocator(R, overcommit)
             for r in reqs:
                 need = self._pages_per_request(r, width_of[r.req_id])
                 if need > allocator.n_pages:
                     raise ValueError(
                         f"request {r.req_id} needs {need} pages but the "
                         f"pool holds {allocator.n_pages}")
+        burst_hint = ctrl.max_burst if ctrl else K
+        initial_fn = None
+        if allocator is not None and overcommit > 1.0:
+            initial_fn = lambda r: self._initial_pages(
+                r, width_of[r.req_id], burst_hint)
         sched = ContinuousScheduler(
             R, group_size=beam, prefill_token_budget=prefill_token_budget,
             allocator=allocator,
             pages_per_request=(
                 (lambda r: self._pages_per_request(r, width_of[r.req_id]))
                 if allocator else None),
-            prefix_cache=pc)
+            prefix_cache=pc, initial_pages=initial_fn,
+            prefill_chunk=prefill_chunk)
         sched.submit_many(reqs)
 
         quantized = self.quant.quantize_kv
@@ -1575,6 +2088,181 @@ class ServingEngine:
         encoder_tokens = 0
         # fixed caps upload the device scalar once; auto rebuilds per round
         cap_fixed = None if ctrl else jnp.asarray(K, jnp.int32)
+        # ---- overload machinery (all inert on an unloaded serve)
+        store = SpillStore()
+        watchdog = StepWatchdog()
+        staging: Dict[int, Dict[str, Any]] = {}   # base → staged-encode state
+        eager_free = (overcommit > 1.0) or (chaos is not None)
+        preempt_count = 0
+        peak_running = 0
+        chunked_admissions = 0
+        chunk_rounds = 0
+        round_idx = 0
+        maxP = self._max_pages
+
+        def preempt_req(req: Request) -> None:
+            """Spill one running group — all ``beam`` rows' device state
+            plus the host-side search state — and evict it (a mid-stage
+            chunked prefill just drops its stage and restages later)."""
+            nonlocal state, host_syncs, preempt_count
+            base = req.slot
+            if base in staging:
+                staging.pop(base)
+                sched.preempt(req, now())
+            else:
+                rows = np.arange(base, base + beam, dtype=np.int32)
+                outs = self._spill_fn(beam)(state, tokens,
+                                            jnp.asarray(rows))
+                k, v, ks, vs, lens, toks, ck, cv, slens = [
+                    None if o is None else np.asarray(o) for o in outs]
+                host_syncs += 1
+                req.spill = SpilledRequest(
+                    req_id=req.req_id, n_rows=beam, k=k, v=v, k_scale=ks,
+                    v_scale=vs, lengths=lens, tokens_row=toks, cross_k=ck,
+                    cross_v=cv, src_lengths=slens,
+                    n_pages=len(req.pages or []),
+                    beam={"scores": scores_np[base:base + beam].copy(),
+                          "finished": finished_np[base:base + beam].copy(),
+                          "history": histories.pop(base, []),
+                          "budget_left": budget_left.pop(base, 0)})
+                store.put(req.spill)
+                sched.preempt(req, now())
+                finished_np[base:base + beam] = True   # rows now inert
+            preempt_count += 1
+            state = dict(state)
+            state["cache"] = kvc.free_slots_paged(
+                state["cache"],
+                np.arange(base, base + beam, dtype=np.int32))
+
+        def grow_rows(k_cap: int) -> None:
+            """Pre-burst page growth at group granularity: each live row
+            of a running group gets pages for its cursor + next burst."""
+            nonlocal state
+            if initial_fn is None:
+                return
+            for base, req in list(sched.slot_map.items()):
+                if sched.slot_map.get(base) is not req or base in staging:
+                    continue
+                b = width_of[req.req_id]
+                cursor = req.max_new_tokens - budget_left[base]
+                cap_tok = min(req.max_new_tokens, self.max_len)
+                need = kvc.pages_per_row(min(cursor + k_cap, cap_tok),
+                                         self.page_size)
+                have_pr = len(req.pages) // b
+                extra_pr = need - have_pr
+                if extra_pr <= 0:
+                    continue
+                extra = extra_pr * b
+                newp = allocator.alloc(extra)
+                while newp is None:
+                    victims = pick_victims(
+                        [r for r in sched.slot_map.values() if r is not req],
+                        pages_needed=extra - allocator.n_free,
+                        key_fn=sched.victim_key,
+                        pages_held_fn=lambda r: len(r.pages or []))
+                    if not victims:
+                        raise RuntimeError(
+                            "page growth wedged: no preemptable victim "
+                            f"for request {req.req_id} (need {extra} pages)")
+                    for v in victims:
+                        preempt_req(v)
+                    newp = allocator.alloc(extra)
+                upd = np.full((beam, maxP), -1, np.int32)
+                for i in range(b):
+                    upd[i, have_pr:have_pr + extra_pr] = \
+                        newp[i * extra_pr:(i + 1) * extra_pr]
+                # flat page list becomes interleaved after growth — only
+                # len() (growth) and release (order-agnostic) read it from
+                # here on; a resume always reallocates fresh
+                req.pages.extend(newp)
+                state = self._grow_fn(beam)(
+                    state,
+                    jnp.asarray(np.arange(base, base + beam,
+                                          dtype=np.int32)),
+                    jnp.asarray(upd))
+
+        def preempt_for_admission() -> None:
+            if initial_fn is None:
+                return
+            for _ in range(n_groups + len(reqs)):
+                short = sched.admission_shortfall()
+                if short is None:
+                    return
+                need = max(short["pages_short"], 1)
+                victims = pick_victims(
+                    list(sched.slot_map.values()), pages_needed=need,
+                    key_fn=sched.victim_key,
+                    pages_held_fn=lambda r: len(r.pages or []),
+                    min_key=short["head_key"])
+                if not victims:
+                    return
+                for v in victims:
+                    preempt_req(v)
+
+        def restore_resumed(resumed: List[Request]) -> None:
+            """Re-splice spilled groups: device KV through the paged
+            splice, host search state verbatim."""
+            nonlocal state, tokens
+            for req in resumed:
+                sp = req.spill
+                base, b = req.slot, width_of[req.req_id]
+                pages = self._page_rows([req], beam, 1, allocator.n_pages,
+                                        widths=[b])
+                rows = np.arange(base, base + beam, dtype=np.int32)
+                state, tokens = self._resume_fn(beam)(
+                    state, tokens, jnp.asarray(rows), jnp.asarray(pages),
+                    jnp.asarray(sp.k), jnp.asarray(sp.v),
+                    None if sp.k_scale is None else jnp.asarray(sp.k_scale),
+                    None if sp.v_scale is None else jnp.asarray(sp.v_scale),
+                    jnp.asarray(sp.lengths), jnp.asarray(sp.tokens_row),
+                    jnp.asarray(sp.cross_k), jnp.asarray(sp.cross_v),
+                    jnp.asarray(sp.src_lengths))
+                scores_np[base:base + beam] = sp.beam["scores"]
+                finished_np[base:base + beam] = sp.beam["finished"]
+                histories[base] = list(sp.beam["history"])
+                budget_left[base] = sp.beam["budget_left"]
+                store.pop(req.req_id)
+                allocator.unspill(sp.n_pages)
+                req.spill = None
+
+        def advance_staging() -> None:
+            """One encoder layer per round for staged (chunked) prefills;
+            completion splices the group and seeds its beam state exactly
+            like fused admission."""
+            nonlocal state, tokens, chunk_rounds
+            n_enc = self.model.cfg.n_enc_layers
+            for base, st in list(staging.items()):
+                req = st["req"]
+                if st["x"] is None:
+                    src = np.zeros((1, enc_len), np.int32)
+                    src[0, :req.n_src_tokens] = req.src
+                    st["lens"] = jnp.asarray(
+                        np.asarray([req.n_src_tokens], np.int32))
+                    begin, _ = self._stage_fns()
+                    st["x"] = begin(self.params, jnp.asarray(src),
+                                    st["lens"])
+                st["x"] = self._stage_layer_fn(st["li"])(
+                    self.params, st["x"], st["lens"])
+                st["li"] += 1
+                chunk_rounds += 1
+                if st["li"] >= n_enc:
+                    _, finish = self._stage_fns()
+                    ck, cv, slens = finish(self.params, st["x"], st["lens"])
+                    b = width_of[req.req_id]
+                    extra = {}
+                    if allocator:
+                        extra["pages"] = jnp.asarray(self._page_rows(
+                            [req], beam, 1, allocator.n_pages, widths=[b]))
+                    state, tokens = self._chunk_splice_fn(beam)(
+                        state, tokens, ck, cv, slens,
+                        jnp.asarray(np.asarray([base], np.int32)), extra)
+                    scores_np[base] = 0.0
+                    scores_np[base + 1:base + beam] = BEAM_SEED_NEG
+                    finished_np[base:base + b] = False
+                    finished_np[base + b:base + beam] = True
+                    histories[base] = []
+                    budget_left[base] = req.max_new_tokens
+                    staging.pop(base)
 
         def finalize(req: Request, base: int, t: float, step: int) -> int:
             """Pick the group's winner (same helper ``generate_beam``
@@ -1663,6 +2351,17 @@ class ServingEngine:
             return state, tokens
 
         while not sched.all_done:
+            rnd = round_idx
+            round_idx += 1
+            # (a) chaos: forced preemptions at this round edge
+            if chaos is not None and sched.slot_map:
+                by_id = {r.req_id: r for r in sched.slot_map.values()}
+                for rid in chaos.victims_for(rnd, list(by_id)):
+                    preempt_req(by_id[rid])
+            # (b) overcommit growth for mid-flight groups (may itself evict)
+            grow_rows(ctrl.k if ctrl else K)
+            # (c) admission pressure: evict strictly-less-urgent victims
+            preempt_for_admission()
             plan = None
             admitted = []
             want_admit = (sched.n_waiting and sched.n_free >=
@@ -1679,6 +2378,13 @@ class ServingEngine:
                 if plan.n_admitted:
                     prefill_rounds += 1
                 encoder_tokens += len(plan.requests) * enc_len
+                if plan.resumed:
+                    restore_resumed(plan.resumed)
+                for r in plan.staged:
+                    staging[r.slot] = {"req": r, "x": None, "li": 0,
+                                       "lens": None}
+                chunked_admissions += len(plan.staged)
+                encoder_tokens += len(plan.staged) * enc_len
                 for r in plan.requests + plan.hits:
                     base, b = r.slot, width_of[r.req_id]
                     scores_np[base] = 0.0
@@ -1691,17 +2397,21 @@ class ServingEngine:
                 admitted = sched.admit(now(), step=decode_steps)
                 if admitted:
                     prefill_rounds += 1
+                    resumed = [r for r in admitted if r.spill is not None]
+                    fresh = [r for r in admitted if r.spill is None]
+                    if resumed:
+                        restore_resumed(resumed)
                     hits: List[Request] = []
                     if pc is not None:
                         # zero-budget requests skip prefix routing: they
                         # release inside prefill_groups before any
                         # finish() could pair with their admit()
                         misses, hits = sched.assign_prefix(
-                            [r for r in admitted if r.max_new_tokens > 0])
-                        enc_list = misses + [r for r in admitted
+                            [r for r in fresh if r.max_new_tokens > 0])
+                        enc_list = misses + [r for r in fresh
                                              if r.max_new_tokens <= 0]
                     else:
-                        enc_list = admitted
+                        enc_list = fresh
                     if enc_list:
                         prefill_dispatches += 1
                         host_syncs += 1   # first-token drain syncs the host
@@ -1734,14 +2444,26 @@ class ServingEngine:
                             finished_np[base + b:base + beam] = True
                             histories[base] = []
                             budget_left[base] = r.max_new_tokens
+            peak_running = max(peak_running, sched.n_running)
             if not sched.slot_map:
                 continue    # every admitted group finished on token 1
 
+            # staging groups stay at budget 0 / finished rows — they hold
+            # no KV yet; the fused prologue re-sentinels their tables and
+            # the burst's act mask keeps their rows frozen
             remaining_in = np.zeros((n_groups,), np.int32)
             parked_np = np.zeros((R,), bool)
             for base, req in sched.slot_map.items():
+                if base in staging:
+                    continue
                 remaining_in[base // beam] = budget_left[base]
                 parked_np[base + width_of[req.req_id]:base + beam] = True
+            has_adm = plan is not None and (plan.width or plan.hit_width)
+            if not remaining_in.any() and not has_adm:
+                # pure-staging round: nothing to decode — push the staged
+                # encodes one layer and come back
+                advance_staging()
+                continue
             parked = jnp.asarray(parked_np)
             cap = jnp.asarray(ctrl.k, jnp.int32) if ctrl else cap_fixed
             t_dispatch = time.perf_counter()
@@ -1795,6 +2517,11 @@ class ServingEngine:
             freed = []
             wasted_row_steps = 0
             for base, req in list(sched.slot_map.items()):
+                if base in staging:
+                    # staged encode in flight: the group's rows rode the
+                    # burst frozen (finished, budget 0) — pure overhead
+                    wasted_row_steps += steps * beam
+                    continue
                 gi = base // beam
                 s_g = int(remaining_in[gi] - remaining_out[gi])
                 if req.first_token_s is None:
@@ -1817,9 +2544,15 @@ class ServingEngine:
                                           step=step_base + s_g))
             if ctrl:
                 ctrl.observe(burst_wall, steps, wasted_row_steps, R)
-            if freed and not fused_admission:
+            watchdog.observe(burst_wall +
+                             (chaos.slow_for(rnd) if chaos else 0.0))
+            if freed and (not fused_admission or eager_free):
                 # fused mode resets dead cursors inside the next admission
-                # burst's prologue (kv_cache.free_inactive) — no dispatch
+                # burst's prologue (kv_cache.free_inactive) — no dispatch.
+                # Under overcommit/chaos, free eagerly even then: growth or
+                # resume may hand the freed pages to another group before
+                # any admission prologue runs, and the dead group's stale
+                # block table would route masked-but-real writes into them.
                 state = dict(state)
                 if self.paged:
                     state["cache"] = kvc.free_slots_paged(
@@ -1828,6 +2561,8 @@ class ServingEngine:
                 else:
                     state["cache"] = kvc.free_groups(
                         state["cache"], np.asarray(freed, np.int32), beam)
+            # staged encodes advance one layer per serving round
+            advance_staging()
 
         if pc is not None:
             # hand the (possibly donated-through) pool arrays back to the
@@ -1847,6 +2582,10 @@ class ServingEngine:
                            pages_in_use=allocator.in_use if allocator else 0,
                            page_hwm=allocator.hwm if allocator else 0,
                            reorder_bytes=reorder_step_bytes * decode_steps,
+                           **self._overload_result_fields(
+                               overcommit, preempt_count, store, watchdog,
+                               sched, reqs, allocator, peak_running,
+                               chunked_admissions, chunk_rounds),
                            **self._prefix_result_fields(pc, stats0))
 
     # ------------------------------------------------------------------ beam

@@ -1,0 +1,138 @@
+"""Preempt-by-page-spill: host-side spill store + victim selection.
+
+Under overcommit the scheduler admits more concurrent rows than the page
+pool could back worst-case; the proof that this cannot deadlock is this
+module: any running request can be *preempted* — its KV pages (INT8
+payload + scales), cross-attention K/V, cursors and decode tokens are
+copied to host, its pages returned to the pool, and the request re-enters
+the wait queue.  On re-admission the engine restores the payload through
+the existing paged splice (``kv_cache.insert_rows_paged``) and decoding
+continues bit-identically to an uninterrupted serve — the identity the
+chaos harness (``serving/chaos.py`` + ``tests/test_preemption.py``)
+asserts across the whole greedy/beam × FP/INT8 × fused/unfused matrix.
+
+Everything here is host-side bookkeeping (numpy + dicts); the device
+gathers/scatters live in the engine's jitted ``_spill_fn``/``_resume_fn``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SpilledRequest:
+    """One preempted request's complete decode state, on host.
+
+    Arrays keep the *logical* (linearized) row view — ``(L, W, cap, …)``
+    with ``cap = max_pages × page_size`` — so restore is exactly the
+    unfused-admission splice: build a contiguous side batch, scatter it
+    into freshly allocated pages.  INT8 payload and float32 scales are
+    captured verbatim (no re-quantization round trip), which is what
+    makes resume bit-identical.
+    """
+
+    req_id: int
+    n_rows: int                        # 1 (greedy) or the group width
+    # self-attention KV, linearized logical rows (junk past each cursor —
+    # masked on device exactly like any partially filled cache row)
+    k: np.ndarray                      # (L, W, cap, HKV, dh)
+    v: np.ndarray
+    k_scale: Optional[np.ndarray]      # (L, W, cap, HKV) when quantized
+    v_scale: Optional[np.ndarray]
+    lengths: np.ndarray                # (W,) decode cursors
+    tokens_row: np.ndarray             # (W,) last token fed to each row
+    # cross-attention KV + source lengths (whatever splice installed —
+    # fresh encode, prefix-cache chain, or an earlier restore)
+    cross_k: np.ndarray                # (L, W, S_enc, HKV, dh)
+    cross_v: np.ndarray
+    src_lengths: np.ndarray            # (W,)
+    # allocator accounting: pages' worth of KV this spill represents
+    n_pages: int
+    # beam serving: host-side search state (None for greedy)
+    beam: Optional[dict] = None        # scores, finished, parked, history,
+                                       # budget_left
+
+    @property
+    def n_bytes(self) -> int:
+        total = 0
+        for a in (self.k, self.v, self.k_scale, self.v_scale,
+                  self.cross_k, self.cross_v, self.lengths,
+                  self.tokens_row, self.src_lengths):
+            if a is not None:
+                total += a.nbytes
+        return int(total)
+
+
+class SpillStore:
+    """Host spill store: req_id → :class:`SpilledRequest`, with the
+    counters ``ServeResult.metrics`` surfaces.  A serve must end with the
+    store empty (every spill restored) — the leak check next to the
+    allocator's ``spilled == 0``."""
+
+    def __init__(self) -> None:
+        self._store: Dict[int, SpilledRequest] = {}
+        self.spill_events = 0
+        self.restore_events = 0
+        self.spilled_bytes = 0         # cumulative, for metrics
+
+    def put(self, spill: SpilledRequest) -> None:
+        if spill.req_id in self._store:
+            raise ValueError(f"request {spill.req_id} is already spilled")
+        self._store[spill.req_id] = spill
+        self.spill_events += 1
+        self.spilled_bytes += spill.n_bytes
+
+    def pop(self, req_id: int) -> SpilledRequest:
+        if req_id not in self._store:
+            raise ValueError(f"request {req_id} has no spill to restore")
+        self.restore_events += 1
+        return self._store.pop(req_id)
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, req_id: int) -> bool:
+        return req_id in self._store
+
+
+def pick_victims(candidates: Sequence, *, pages_needed: int,
+                 key_fn, pages_held_fn,
+                 exclude: Iterable = (),
+                 min_key: Optional[float] = None) -> List:
+    """Choose running requests to preempt until ``pages_needed`` pages
+    would come free.
+
+    Least-urgent-first (largest ``key_fn`` value — latest deadline /
+    lowest priority — evicted first), ties broken toward the youngest
+    admission so older work keeps its progress.  ``exclude`` protects
+    rows that must survive this round (the row being grown, this round's
+    fresh admissions).  ``min_key``: only requests *strictly less urgent*
+    than this key may be evicted — the anti-thrash guard for
+    admission-driven preemption (a request never evicts an equally or
+    more urgent one, so two equal-urgency requests cannot ping-pong).
+
+    Returns the (possibly insufficient) victim list; the caller checks
+    whether the freed pages actually cover the need.
+    """
+    if pages_needed <= 0:
+        return []
+    excluded = {id(r) for r in exclude}
+    pool = [r for r in candidates if id(r) not in excluded]
+    if min_key is not None:
+        pool = [r for r in pool if key_fn(r) > min_key]
+    pool.sort(key=lambda r: (-key_fn(r),
+                             -(r.admitted_step if r.admitted_step
+                               is not None else 0)))
+    victims: List = []
+    freed = 0
+    for r in pool:
+        if freed >= pages_needed:
+            break
+        victims.append(r)
+        freed += pages_held_fn(r)
+    return victims if freed >= pages_needed else (
+        victims if min_key is None else [])

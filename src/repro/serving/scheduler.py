@@ -91,9 +91,14 @@ class Request:
     src: np.ndarray                     # (S,) int32 source tokens
     max_new_tokens: int = 64
     arrival_s: float = 0.0
+    # SLO knobs (caller-owned config, like ``beam``): absolute deadline on
+    # the serve clock (None = best-effort) and a priority boost — both
+    # feed the EDF-with-aging wait-queue order and victim selection.
+    deadline_s: Optional[float] = None
+    priority: float = 0.0
 
     # lifecycle (scheduler/engine-maintained)
-    status: str = "waiting"             # waiting | running | finished
+    status: str = "waiting"             # waiting | running | finished | rejected
     slot: Optional[int] = None          # base row of the request's group
     admitted_s: Optional[float] = None
     first_token_s: Optional[float] = None
@@ -121,6 +126,16 @@ class Request:
     # chain whose reference this request holds until release
     prefix_role: Optional[str] = None
     prefix_chain: Optional[object] = None
+    # overload machinery (scheduler/engine-maintained): why a shed request
+    # was rejected; how many times it was preempted; the host-side spill
+    # payload (serving/preemption.py:SpilledRequest) while preempted; how
+    # many admission rounds it has waited (starvation aging); and the
+    # virtual worst-case page reservation it holds under overcommit
+    reject_reason: Optional[str] = None
+    preemptions: int = 0
+    spill: Optional[object] = None
+    wait_rounds: int = 0
+    reserved_pages: int = 0
 
     @property
     def n_src_tokens(self) -> int:
@@ -200,10 +215,18 @@ class AdmissionPlan:
     # per-encode-row chain reservations: rows routed "insert" carry their
     # chain's page ids (sentinel-padded); "skip"/padding rows all-sentinel
     ins_pages: np.ndarray = _EMPTY_I32_2D      # (width, maxPP)
+    # overload extensions: ``resumed`` requests carry a host spill payload
+    # (preempted earlier; the engine restores their KV instead of encoding)
+    # and ``staged`` requests have sources past the chunked-prefill budget
+    # (the engine spreads their encode across rounds, one layer per round;
+    # neither kind occupies an encode row in this plan)
+    resumed: List[Request] = dataclasses.field(default_factory=list)
+    staged: List[Request] = dataclasses.field(default_factory=list)
 
     @property
     def n_admitted(self) -> int:
-        return len(self.requests) + len(self.hits) + len(self.released)
+        return (len(self.requests) + len(self.hits) + len(self.released)
+                + len(self.resumed) + len(self.staged))
 
     @property
     def prefix_hit_pages(self) -> int:
@@ -242,7 +265,10 @@ class ContinuousScheduler:
                  prefill_token_budget: Optional[int] = None,
                  allocator=None,
                  pages_per_request: Optional[Callable[[Request], int]] = None,
-                 prefix_cache=None):
+                 prefix_cache=None,
+                 initial_pages: Optional[Callable[[Request], int]] = None,
+                 prefill_chunk: Optional[int] = None,
+                 starvation_aging: float = 0.5):
         if n_slots < 1:
             raise ValueError(f"need at least one slot, got {n_slots}")
         if group_size < 1:
@@ -256,13 +282,17 @@ class ContinuousScheduler:
         self.group_size = group_size
         self.n_groups = n_slots // group_size
         self.prefill_token_budget = prefill_token_budget
-        # paged KV admission: a request needs a free slot group AND
-        # pages_per_request(req) pages from the allocator.  Reservations
-        # are worst-case (the request's full budget), so admission can
-        # never over-commit and decode never needs to preempt; the head of
-        # the FIFO blocks the round when the pool is short (pages return
-        # at release, so it always eventually admits — no starvation, no
-        # deadlock, regardless of the beam-width mix).
+        # paged KV admission: a request needs a free slot group AND pages
+        # from the allocator.  ``pages_per_request`` is the worst case
+        # (the request's full budget); by default it is also what gets
+        # physically allocated, so admission can never over-commit and
+        # decode never needs to preempt — the head of the queue blocks
+        # the round when the pool is short (pages return at release, so
+        # it always eventually admits).  With ``initial_pages`` set the
+        # worst case becomes a *virtual* reservation (allocator.reserve,
+        # capped at overcommit_limit × n_pages) and only next-burst pages
+        # are allocated up front — the engine grows rows mid-flight and
+        # preempts-by-page-spill when growth or admission comes up short.
         self.allocator = allocator
         self.pages_per_request = pages_per_request
         # cross-request prefix cache: routes each admission "hit" /
@@ -271,10 +301,27 @@ class ContinuousScheduler:
         # into the decode page budget above — a full prefix pool degrades
         # to uncached admission, it cannot wedge the FIFO.
         self.prefix_cache = prefix_cache
+        # overcommit: ``pages_per_request`` stays the worst case (virtual,
+        # tracked by allocator.reserve); ``initial_pages`` — when given —
+        # is what admission *physically* allocates (enough for the next
+        # burst), with growth/preemption covering the gap.  None keeps the
+        # legacy reserve-everything behaviour exactly.
+        self.initial_pages = initial_pages
+        # chunked prefill: sources longer than this (in tokens) are routed
+        # to AdmissionPlan.staged instead of the round's encode rows
+        self.prefill_chunk = prefill_chunk
+        # EDF aging: each admission round a request waits shrinks its
+        # urgency key by this many (virtual) seconds, so a best-effort
+        # request eventually outranks any stream of tight deadlines
+        if starvation_aging < 0:
+            raise ValueError(f"starvation_aging must be >= 0, "
+                             f"got {starvation_aging}")
+        self.starvation_aging = float(starvation_aging)
         self._waiting: Deque[Request] = collections.deque()
         self._free: List[int] = [g * group_size for g in range(self.n_groups)]
         self.slot_map: Dict[int, Request] = {}
         self.finished: List[Request] = []
+        self.rejected: List[Request] = []
 
     # ------------------------------------------------------------- lifecycle
     def submit(self, req: Request) -> None:
@@ -291,11 +338,83 @@ class ContinuousScheduler:
         req.pages = None
         req.prefix_role = None
         req.prefix_chain = None
+        req.reject_reason = None
+        req.preemptions = 0
+        req.spill = None
+        req.wait_rounds = 0
+        req.reserved_pages = 0
         self._waiting.append(req)
 
     def submit_many(self, reqs: Sequence[Request]) -> None:
         for r in reqs:
             self.submit(r)
+
+    # ------------------------------------------------ deadline-aware order
+    _NO_DEADLINE = 1e6                 # best-effort = very late deadline
+
+    def urgency_key(self, req: Request) -> float:
+        """Scalar wait-queue/victim key — smaller = more urgent.
+
+        Earliest-deadline-first, nudged by ``priority`` and by starvation
+        aging (every round spent waiting makes a request
+        ``starvation_aging`` virtual seconds more urgent, so best-effort
+        traffic cannot starve behind a stream of tight deadlines).
+        """
+        d = req.deadline_s if req.deadline_s is not None else self._NO_DEADLINE
+        return d - req.priority - self.starvation_aging * req.wait_rounds
+
+    def victim_key(self, req: Request) -> float:
+        """Preemption-comparison key — deadline and priority ONLY.
+
+        Starvation aging is deliberately excluded: aging exists to move a
+        waiting request up the *queue*, not to let it evict an
+        equally-urgent running one (with aging in the key, any deadline-
+        free request would eventually out-rank every running peer and the
+        pool would thrash on evictions that buy nothing).
+        """
+        d = req.deadline_s if req.deadline_s is not None else self._NO_DEADLINE
+        return d - req.priority
+
+    def _sort_waiting(self) -> None:
+        """EDF-with-aging order; preempted (spilled) requests win ties.
+
+        Skipped entirely when nothing in the queue carries a deadline, a
+        priority, aging credit, or a spill — the default stays strict
+        submission-order FIFO, byte-for-byte.
+        """
+        if len(self._waiting) < 2:
+            return
+        if not any(r.deadline_s is not None or r.priority or r.spill
+                   is not None or r.wait_rounds for r in self._waiting):
+            return
+        self._waiting = collections.deque(sorted(
+            self._waiting,
+            key=lambda r: (self.urgency_key(r),
+                           0 if r.spill is not None else 1)))
+
+    def _shed(self, now: float) -> List[Request]:
+        """Reject waiting requests whose deadline is provably unmeetable
+        (already in the past — no admission order can produce a first
+        token before a deadline that has elapsed).  Preempted requests are
+        exempt: they already consumed encode + decode work, and their
+        spilled KV is freed only through the engine's resume/abandon path.
+        """
+        shed: List[Request] = []
+        keep: Deque[Request] = collections.deque()
+        for req in self._waiting:
+            if (req.deadline_s is not None and now > req.deadline_s
+                    and req.spill is None):
+                req.status = "rejected"
+                req.reject_reason = (
+                    f"deadline {req.deadline_s:.3f}s already passed at "
+                    f"admission (now={now:.3f}s)")
+                req.finish_s = now
+                self.rejected.append(req)
+                shed.append(req)
+            else:
+                keep.append(req)
+        self._waiting = keep
+        return shed
 
     def admit(self, now: float = 0.0, *,
               step: Optional[int] = None) -> List[Request]:
@@ -304,7 +423,16 @@ class ContinuousScheduler:
         With burst decode, admission happens only at burst edges; ``step``
         records the global decode-step count at that edge so queueing can
         be attributed exactly even though ``now`` is burst-granular.
+
+        Order: shed provably-late requests, sort by urgency (no-op for
+        deadline-free traffic — strict FIFO is preserved exactly), then
+        admit while slots, the prefill budget, and the page pool allow.
+        Under overcommit (``initial_pages`` set) a request is gated by a
+        *virtual* worst-case reservation (``allocator.reserve``) but only
+        its next-burst pages are physically allocated.
         """
+        self._shed(now)
+        self._sort_waiting()
         admitted: List[Request] = []
         budget = self.prefill_token_budget
         used = 0
@@ -315,24 +443,102 @@ class ContinuousScheduler:
             # source length (group_size=1 reduces to plain source tokens)
             cost = req.n_src_tokens * self.group_size
             if admitted and budget is not None and used + cost > budget:
-                break                    # next round; FIFO order preserved
+                break                    # next round; queue order preserved
             pages = None
+            worst = 0
             if self.allocator is not None:
-                n_pages = self.pages_per_request(req)
+                worst = self.pages_per_request(req)
+                if not self.allocator.can_reserve(worst):
+                    break    # virtual budget exhausted: head waits
+                n_pages = worst
+                if self.initial_pages is not None:
+                    n_pages = min(self.initial_pages(req), worst)
                 pages = self.allocator.alloc(n_pages)
                 if pages is None:
-                    break    # pool short: the FIFO head waits for releases
+                    break    # pool short: the head waits (or the engine
+                             # preempts a victim and retries next round)
+                self.allocator.reserve(worst)
             self._waiting.popleft()
             slot = self._free.pop(0)
             req.status = "running"
             req.slot = slot
             req.pages = pages
+            req.reserved_pages = worst
             req.admitted_s = now
             req.admitted_step = step
             self.slot_map[slot] = req
             used += cost
             admitted.append(req)
+        for req in self._waiting:
+            req.wait_rounds += 1         # starvation aging
         return admitted
+
+    def admission_shortfall(self) -> Optional[Dict[str, int]]:
+        """Why the most urgent waiting request cannot be admitted *now*,
+        in pages — or None when nothing page-related blocks it.
+
+        ``pages_short``: physical pages missing for its initial
+        allocation; ``reserve_short``: virtual reservation room missing
+        under the overcommit cap.  Both are fixable by preempting running
+        victims (preemption spills physical pages AND returns the
+        victim's worst-case reservation), which is exactly what the
+        engine does with this signal.
+        """
+        if not self._waiting or not self._free or self.allocator is None:
+            return None
+        self._sort_waiting()
+        req = self._waiting[0]
+        worst = self.pages_per_request(req)
+        n_pages = worst
+        if self.initial_pages is not None:
+            n_pages = min(self.initial_pages(req), worst)
+        reserve_short = max(
+            0, self.allocator.reserved + worst - self.allocator.reserve_cap)
+        pages_short = max(0, n_pages - self.allocator.n_free)
+        if not reserve_short and not pages_short:
+            return None
+        return {"reserve_short": reserve_short, "pages_short": pages_short,
+                "head_key": self.victim_key(req)}
+
+    def preempt(self, req: Request, now: float = 0.0) -> int:
+        """Evict a running request back to the wait queue; returns its
+        freed group base row.
+
+        The caller (engine) has already copied the victim's KV pages to
+        host — ``req.spill`` holds the payload — so its pages go back to
+        the pool through the allocator's spill accounting (a staged victim
+        whose encode never finished has nothing to spill: plain release).
+        The victim keeps its emitted tokens and re-enters at the *front*
+        of its urgency class (spilled requests win ties), so resume beats
+        fresh admissions and a preempted request cannot starve.
+        """
+        if req.status != "running" or req.slot is None:
+            raise ValueError(f"request {req.req_id} is not running "
+                             f"(status={req.status})")
+        slot = req.slot
+        req.status = "waiting"
+        req.slot = None
+        req.preemptions += 1
+        if req.pages is not None:
+            if req.spill is not None:
+                self.allocator.spill(req.pages)
+            else:
+                self.allocator.release(req.pages)
+            req.pages = None
+        if req.reserved_pages:
+            self.allocator.unreserve(req.reserved_pages)
+            req.reserved_pages = 0
+        if req.prefix_chain is not None:
+            # drop the chain reference: resume re-splices cross K/V from
+            # the spill payload, not from the prefix pool
+            self.prefix_cache.finish(req.prefix_chain)
+            req.prefix_chain = None
+            req.prefix_role = None
+        del self.slot_map[slot]
+        self._free.append(slot)
+        self._free.sort()
+        self._waiting.appendleft(req)
+        return slot
 
     def assign_prefix(self, reqs: Sequence[Request]
                       ) -> "tuple[List[Request], List[Request]]":
@@ -418,11 +624,28 @@ class ContinuousScheduler:
         """
         live: List[Request] = []
         released: List[Request] = []
+        resumed: List[Request] = []
+        staged: List[Request] = []
         for req in self.admit(now, step=step):
             if req.max_new_tokens <= 0:
                 req.first_token_s = now          # observed: empty output
                 self.release(req, now, step=step)
                 released.append(req)
+            elif req.spill is not None:
+                # preempted earlier: KV restores from the host spill
+                # payload — no encode row, no prefix routing (the cross
+                # K/V in the spill already reflects any chain it read)
+                resumed.append(req)
+            elif (self.prefill_chunk is not None
+                    and req.n_src_tokens > self.prefill_chunk):
+                # chunked prefill: encode spreads across rounds (engine-
+                # driven, one encoder layer per round), so the source
+                # never occupies this round's encode rows.  Staged
+                # sources bypass the prefix cache both ways: an exact-hit
+                # would have no reason to stage (hits skip the encoder),
+                # and inserting a chain would force the monolithic
+                # encode layout this path exists to avoid.
+                staged.append(req)
             else:
                 live.append(req)
         misses, hits = self.assign_prefix(live)
@@ -438,7 +661,8 @@ class ContinuousScheduler:
         plan = AdmissionPlan(requests=misses, released=released,
                              src_tokens=np.ascontiguousarray(src),
                              src_lengths=np.ascontiguousarray(lens),
-                             base_rows=base, width=width)
+                             base_rows=base, width=width,
+                             resumed=resumed, staged=staged)
         if self.prefix_cache is not None:
             plan.ins_pages = self.chain_pages_matrix(misses, width, enc_len)
             if hits:
@@ -468,6 +692,9 @@ class ContinuousScheduler:
         if req.pages is not None:
             self.allocator.release(req.pages)
             req.pages = None
+        if req.reserved_pages:
+            self.allocator.unreserve(req.reserved_pages)
+            req.reserved_pages = 0
         if req.prefix_chain is not None:
             self.prefix_cache.finish(req.prefix_chain)
             req.prefix_chain = None

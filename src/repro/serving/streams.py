@@ -93,7 +93,13 @@ class ParallelStreams:
 def simulate_continuous(decode_lengths: Sequence[int], n_slots: int,
                         *, static_batch: Optional[int] = None,
                         beam: int = 1, burst_len: int = 1,
-                        fused_admission: bool = True) -> Dict:
+                        fused_admission: bool = True,
+                        preempt_rounds: Optional[Dict[int, int]] = None,
+                        src_lengths: Optional[Sequence[int]] = None,
+                        prefill_chunk: Optional[int] = None,
+                        n_enc_layers: int = 1,
+                        deadline_steps: Optional[
+                            Sequence[Optional[int]]] = None) -> Dict:
     """Deterministic slot-refill model of continuous vs static batching.
 
     Cost unit = one decode step of one slot row (the decode grid is computed
@@ -129,40 +135,117 @@ def simulate_continuous(decode_lengths: Sequence[int], n_slots: int,
     the precise sense in which a coarse beam *starves* the grid: fewer
     refill opportunities per burst edge and a utilization ceiling of
     ``(n_slots - idle_rows) / n_slots``.
+
+    Overload extensions (all inert at their ``None`` defaults, so legacy
+    outputs are unchanged):
+
+    * ``preempt_rounds`` — round → victim count, the queueing model of
+      preempt-by-page-spill (``serving/chaos.py`` uses the same keying):
+      at that burst edge the youngest-admitted running requests are
+      spilled (progress preserved) back to the *head* of the queue, each
+      costing one extra host event (the spill gather's sync).
+    * ``prefill_chunk`` + ``src_lengths`` — a request whose source
+      exceeds ``prefill_chunk`` tokens stages its encode depth-wise: it
+      occupies a server for ``n_enc_layers`` rounds emitting nothing
+      (the rows ride the grid idle) before decoding starts.  Requires
+      ``fused_admission``, like the engine.
+    * ``deadline_steps`` — per-request deadline on the step clock: a
+      request still queued past its deadline is shed (never admitted,
+      counted in ``shed``); ``deadline_misses`` adds requests that
+      finished late.  Resumed (preempted) requests are never shed,
+      matching the scheduler.
     """
     lens = [int(x) for x in decode_lengths]
     if beam < 1:
         raise ValueError(f"beam must be ≥ 1, got {beam}")
     if burst_len < 1:
         raise ValueError(f"burst_len must be ≥ 1, got {burst_len}")
+    if prefill_chunk is not None:
+        if prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if not fused_admission:
+            raise ValueError("chunked prefill requires fused_admission "
+                             "(staged encodes ride the fused plan)")
+        if src_lengths is None:
+            raise ValueError("prefill_chunk needs src_lengths")
     n_groups = n_slots // beam
     if n_groups < 1:
         raise ValueError(f"{n_slots} rows cannot hold a beam-{beam} group")
     idle_rows = n_slots - n_groups * beam      # stranded by non-dividing beam
     useful = sum(lens) * beam
+    preempt = dict(preempt_rounds or {})
+    slens = list(src_lengths) if src_lengths is not None else [0] * len(lens)
+    deadlines = (list(deadline_steps) if deadline_steps is not None
+                 else [None] * len(lens))
 
     # --- continuous: burst-granular event simulation over group servers
     waiting = collections.deque(enumerate(lens))
     free = list(range(n_groups))
     remaining: Dict[int, int] = {}             # server → in-burst steps left
     server_req: Dict[int, int] = {}
+    staging: Dict[int, List[int]] = {}         # server → [stage rounds left]
+    admit_seq: Dict[int, int] = {}             # server → admission order
+    resumed: set = set()
     first_token_step = [0] * len(lens)         # edge the first token drains
     finish_step = [0] * len(lens)
     steps = 0
+    rounds = 0
+    seq = 0
     host_events = 0
     admission_events = 0
     prefill_events = 0
-    while waiting or remaining:
+    preemptions = 0
+    shed_ids: set = set()
+    chunk_stage_rounds = 0
+
+    def advance_staging() -> None:
+        nonlocal chunk_stage_rounds
+        for g in list(staging):
+            staging[g][0] -= 1
+            chunk_stage_rounds += 1
+            if staging[g][0] <= 0:             # encode complete: decoding
+                del staging[g]                 # starts next round (BOS now)
+                remaining[g] = lens[server_req[g]]
+
+    while waiting or remaining or staging:
+        # forced preemption at this round edge: spill the youngest-admitted
+        # running servers, requeue at the head (progress preserved)
+        for g in sorted(remaining,
+                        key=lambda s: -admit_seq[s])[:preempt.pop(rounds, 0)]:
+            i = server_req.pop(g)
+            waiting.appendleft((i, remaining.pop(g)))
+            resumed.add(i)
+            free.append(g)
+            preemptions += 1
+            host_events += 1                   # the spill gather's sync
+        free.sort()
         admitted = False
         released_now: List[int] = []
         while waiting and free:
             i, ln = waiting.popleft()
+            if (deadlines[i] is not None and steps > deadlines[i]
+                    and i not in resumed):
+                shed_ids.add(i)                # expired in queue: rejected
+                first_token_step[i] = steps
+                finish_step[i] = steps
+                continue
             admitted = True
             if ln <= 0:                        # zero budget: finished at
                 first_token_step[i] = steps    # admission, occupies nothing
                 finish_step[i] = steps
                 continue
+            if (prefill_chunk is not None and i not in resumed
+                    and slens[i] > prefill_chunk):
+                g = free.pop(0)                # staged: encode over rounds,
+                staging[g] = [n_enc_layers]    # server held but silent
+                server_req[g] = i
+                admit_seq[g] = seq
+                seq += 1
+                continue
             g = free.pop(0)
+            admit_seq[g] = seq
+            seq += 1
             if fused_admission:
                 remaining[g] = ln              # token 1 comes from the burst
             else:
@@ -181,6 +264,8 @@ def simulate_continuous(decode_lengths: Sequence[int], n_slots: int,
         free.extend(released_now)              # groups freed at the prefill
         free.sort()                            # edge refill only next round
         if not remaining:
+            advance_staging()                  # pure-staging round: no
+            rounds += 1                        # burst, no grid cost
             continue
         k = min(burst_len, max(remaining.values()))    # burst early exit
         steps += k
@@ -197,6 +282,11 @@ def simulate_continuous(decode_lengths: Sequence[int], n_slots: int,
                 del server_req[g]
                 free.append(g)
         free.sort()
+        advance_staging()
+        rounds += 1
+    deadline_misses = len(shed_ids) + sum(
+        1 for i, d in enumerate(deadlines)
+        if d is not None and i not in shed_ids and finish_step[i] > d)
     cont_steps = steps
     cont_grid = cont_steps * n_slots
 
@@ -227,6 +317,10 @@ def simulate_continuous(decode_lengths: Sequence[int], n_slots: int,
         "host_events": host_events,
         "admission_events": admission_events,
         "prefill_events": prefill_events,
+        "preemptions": preemptions,
+        "shed": len(shed_ids),
+        "deadline_misses": deadline_misses,
+        "chunk_stage_rounds": chunk_stage_rounds,
         "first_token_steps_mean": float(first.mean()) if len(lens) else 0.0,
         "first_token_steps_p95":
             float(np.percentile(first, 95)) if len(lens) else 0.0,

@@ -1,0 +1,442 @@
+"""Overload survival (ISSUE 7): preempt-by-page-spill, deadline-aware
+admission, chunked prefill, and the serving chaos harness.
+
+Three layers of coverage:
+
+* **Host-side units**: ``SpillStore`` accounting, ``pick_victims``
+  urgency/anti-thrash semantics, ``ChaosSchedule`` determinism, the step
+  watchdog's straggler flag + misuse error, and the scheduler's
+  EDF/priority/shedding order.
+* **Chaos identity matrix** (the harness's reason to exist): a serve run
+  under forced preemptions — greedy and beam, FP and INT8, fused and
+  unfused admission, fixed and auto bursts, prefix-cache-hit victims,
+  mid-stage chunked-prefill victims, overcommitted pools — must emit
+  tokens *bit-identical* to an uninterrupted serve, never deadlock, and
+  end with every page reclaimed and the spill store empty.
+* **Properties** (hypothesis-compat): scheduler lifecycle under random
+  preempt/release churn ends with every request in exactly one terminal
+  state and the allocator fully reclaimed; the queueing simulation
+  terminates under any preemption schedule with conserved useful work.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config
+from repro.core import QuantPolicy, quantize_model
+from repro.data import make_corpus
+from repro.distributed.fault import StepWatchdog
+from repro.models import build_model
+from repro.models import kv_cache as kvc
+from repro.serving import (ChaosSchedule, ContinuousScheduler, Request,
+                           ServingEngine, SpilledRequest, SpillStore,
+                           make_chaos, pick_victims, simulate_continuous)
+
+MAX_LEN = 32
+PAGE_SIZE = 8
+BUDGETS = [13, 17, 0, 15, 16, 12]
+
+
+# ------------------------------------------------------------------ fixtures
+_CACHED = {}
+
+
+def _module_state():
+    if "engines" not in _CACHED:
+        cfg = get_config("transformer-base").reduced(
+            vocab=32, d_model=48, n_layers=1, n_enc_layers=2, d_ff=96,
+            n_heads=2, n_kv_heads=2, head_dim=24)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        qparams, qctx = quantize_model(params, {},
+                                       QuantPolicy(act_quant="dynamic"))
+        engines = {
+            "fp_paged": ServingEngine(model, params, max_len=MAX_LEN,
+                                      paged=True, page_size=PAGE_SIZE),
+            "int8_paged": ServingEngine(model, qparams, quant=qctx,
+                                        max_len=MAX_LEN, paged=True,
+                                        page_size=PAGE_SIZE),
+        }
+        _CACHED.update(
+            cfg=cfg, model=model, params=params, qparams=qparams, qctx=qctx,
+            engines=engines,
+            srcs=[r.src for r in make_corpus(len(BUDGETS), cfg.vocab,
+                                             seed=11, max_words=8)],
+            long_srcs=[r.src for r in make_corpus(4, cfg.vocab, seed=7,
+                                                  max_words=14)])
+    return _CACHED
+
+
+def _assert_identity(base, res):
+    for a, b in zip(base.requests, res.requests):
+        assert a.tokens == b.tokens, (a.req_id, a.tokens, b.tokens)
+        if a.score is not None:
+            assert abs(a.score - b.score) < 1e-5
+
+
+def _assert_reclaimed(res):
+    assert res.pages_in_use == 0
+    assert res.spill_events == res.restore_events   # spill store drained
+
+
+# ----------------------------------------------------------- chaos identity
+MATRIX = [
+    ("fp_paged", None, True), ("fp_paged", None, False),
+    ("int8_paged", None, True),
+    ("fp_paged", 2, True), ("fp_paged", 2, False),
+    ("int8_paged", 2, True),
+]
+
+
+@pytest.mark.parametrize("quant,beam,fused", MATRIX)
+def test_chaos_identity(quant, beam, fused):
+    s = _module_state()
+    eng = s["engines"][quant]
+    kw = dict(n_slots=4, max_new_tokens=BUDGETS, burst_len=4,
+              fused_admission=fused)
+    if beam:
+        kw["beam"] = beam
+    base = eng.serve(s["srcs"], **kw)
+    chaos = make_chaos(4, n_rounds=64, preempt_every=1)
+    res = eng.serve(s["srcs"], chaos=chaos, **kw)
+    assert res.preemptions > 0          # the schedule actually fired
+    _assert_identity(base, res)
+    _assert_reclaimed(res)
+
+
+def test_chaos_identity_mixed_beam_widths():
+    s = _module_state()
+    eng = s["engines"]["int8_paged"]
+    widths = [2, 1, 3, 2, 1, 2]
+    kw = dict(n_slots=6, max_new_tokens=BUDGETS, burst_len=4, beam=widths)
+    base = eng.serve(s["srcs"], **kw)
+    res = eng.serve(s["srcs"], chaos=make_chaos(2, n_rounds=64,
+                                                preempt_every=1), **kw)
+    assert res.preemptions > 0
+    _assert_identity(base, res)
+    _assert_reclaimed(res)
+
+
+def test_chaos_identity_auto_burst():
+    s = _module_state()
+    eng = s["engines"]["int8_paged"]
+    kw = dict(n_slots=4, max_new_tokens=BUDGETS, burst_len="auto")
+    base = eng.serve(s["srcs"], **kw)
+    res = eng.serve(s["srcs"], chaos=make_chaos(6, n_rounds=64,
+                                                preempt_every=1), **kw)
+    assert res.preemptions > 0
+    _assert_identity(base, res)
+    _assert_reclaimed(res)
+
+
+def test_chaos_preempts_prefix_cache_hit():
+    """A victim admitted through a prefix-cache hit spills chain-backed
+    cross-K/V and must restore bit-identically."""
+    s = _module_state()
+    eng = ServingEngine(s["model"], s["params"], max_len=MAX_LEN,
+                        paged=True, page_size=PAGE_SIZE)
+    kw = dict(n_slots=4, max_new_tokens=BUDGETS, burst_len=4,
+              prefix_cache=True)
+    eng.serve(s["srcs"], **kw)                     # cold: inserts chains
+    base = eng.serve(s["srcs"], **kw)              # warm: all hits
+    assert base.prefix_hits > 0
+    res = eng.serve(s["srcs"], chaos=make_chaos(4, n_rounds=64,
+                                                preempt_every=1), **kw)
+    assert res.prefix_hits > 0 and res.preemptions > 0
+    _assert_identity(base, res)
+    _assert_reclaimed(res)
+
+
+@pytest.mark.parametrize("beam", [None, 2])
+def test_chaos_preempts_staged_chunked_prefill(beam):
+    """Victims caught mid-stage (chunked encode in flight) drop the stage
+    and restage deterministically on re-admission."""
+    s = _module_state()
+    eng = s["engines"]["fp_paged"]
+    srcs = s["long_srcs"] + s["srcs"][:2]
+    kw = dict(n_slots=4, max_new_tokens=[8] * len(srcs), burst_len=4)
+    if beam:
+        kw["beam"] = beam
+    base = eng.serve(srcs, **kw)
+    res = eng.serve(srcs, prefill_chunk=6,
+                    chaos=make_chaos(9, n_rounds=64, preempt_every=1), **kw)
+    assert res.chunked_admissions > 0 and res.preemptions > 0
+    _assert_identity(base, res)
+    _assert_reclaimed(res)
+
+
+@pytest.mark.parametrize("beam", [None, 2])
+def test_overcommit_identity_and_concurrency(beam):
+    """Overcommit past worst-case reservation must (a) strictly raise
+    admitted concurrency on a starved pool, (b) stay token-identical via
+    growth + preempt-by-spill, (c) reclaim everything."""
+    s = _module_state()
+    eng = ServingEngine(s["model"], s["params"], max_len=MAX_LEN,
+                        paged=True, page_size=PAGE_SIZE,
+                        n_pages=6 * (beam or 1))
+    kw = dict(n_slots=4 * (beam or 1), max_new_tokens=BUDGETS, burst_len=4)
+    if beam:
+        kw["beam"] = beam
+    base = eng.serve(s["srcs"], **kw)
+    res = eng.serve(s["srcs"], overcommit=1.5, **kw)
+    assert res.peak_running > base.peak_running
+    _assert_identity(base, res)
+    _assert_reclaimed(res)
+
+
+def test_chaos_plus_overcommit_plus_chunked():
+    """All three overload mechanisms at once — the full storm."""
+    s = _module_state()
+    eng = ServingEngine(s["model"], s["params"], max_len=MAX_LEN,
+                        paged=True, page_size=PAGE_SIZE, n_pages=8)
+    srcs = s["long_srcs"] + s["srcs"][:2]
+    kw = dict(n_slots=4, max_new_tokens=[8] * len(srcs), burst_len=4)
+    base = eng.serve(srcs, **kw)
+    res = eng.serve(srcs, overcommit=1.5, prefill_chunk=6,
+                    chaos=make_chaos(9, n_rounds=64, preempt_every=2), **kw)
+    assert res.preemptions > 0 and res.chunked_admissions > 0
+    _assert_identity(base, res)
+    _assert_reclaimed(res)
+
+
+# -------------------------------------------------------- deadline admission
+def test_expired_deadline_is_shed():
+    s = _module_state()
+    eng = s["engines"]["fp_paged"]
+    rs = [Request(req_id=i, src=np.asarray(src, np.int32), max_new_tokens=6)
+          for i, src in enumerate(s["srcs"][:3])]
+    rs[1].deadline_s = -1.0            # provably unmeetable before start
+    res = eng.serve(rs, n_slots=2, burst_len=4)
+    assert [r.status for r in res.requests] == \
+        ["finished", "rejected", "finished"]
+    assert res.requests[1].reject_reason
+    assert res.rejected == 1 and res.deadline_misses >= 1
+    _assert_reclaimed(res)
+
+
+def test_edf_priority_order():
+    sched = ContinuousScheduler(1)
+    a = Request(req_id=0, src=np.arange(3, dtype=np.int32),
+                max_new_tokens=4)
+    b = Request(req_id=1, src=np.arange(3, dtype=np.int32),
+                max_new_tokens=4, deadline_s=5.0)
+    c = Request(req_id=2, src=np.arange(3, dtype=np.int32),
+                max_new_tokens=4, deadline_s=5.0, priority=1.0)
+    sched.submit_many([a, b, c])
+    got = sched.admit(0.0)
+    assert [r.req_id for r in got] == [2]   # same deadline, higher priority
+    sched.release(c, 1.0)
+    assert [r.req_id for r in sched.admit(1.0)] == [1]   # EDF beats FIFO
+
+
+def test_starvation_aging_promotes_best_effort():
+    sched = ContinuousScheduler(1, starvation_aging=2.0)
+    best_effort = Request(req_id=0, src=np.arange(2, dtype=np.int32),
+                          max_new_tokens=4)
+    sched.submit(best_effort)
+    # a stream of slightly-more-urgent arrivals; each waiting round buys
+    # the best-effort request 2 virtual seconds, so its wait is bounded
+    deadline = ContinuousScheduler._NO_DEADLINE - 4.0
+    for i in range(1, 8):
+        late = Request(req_id=i, src=np.arange(2, dtype=np.int32),
+                       max_new_tokens=4, deadline_s=deadline)
+        sched.submit(late)
+        got = sched.admit(float(i))
+        if got and got[0].req_id == 0:
+            return
+        for r in got:
+            sched.release(r, float(i))
+    assert False, "best-effort request starved behind deadline traffic"
+
+
+def test_victim_key_excludes_aging():
+    sched = ContinuousScheduler(2, starvation_aging=10.0)
+    r = Request(req_id=0, src=np.arange(2, dtype=np.int32),
+                max_new_tokens=4)
+    r.wait_rounds = 50
+    assert sched.victim_key(r) == sched._NO_DEADLINE
+    assert sched.urgency_key(r) < sched.victim_key(r)
+
+
+# ------------------------------------------------------------- host units
+def test_spill_store_accounting():
+    store = SpillStore()
+    sp = SpilledRequest(req_id=3, n_rows=1,
+                        k=np.zeros((1, 1, 8, 1, 2), np.int8),
+                        v=np.zeros((1, 1, 8, 1, 2), np.int8),
+                        k_scale=None, v_scale=None,
+                        lengths=np.asarray([5]),
+                        tokens_row=np.asarray([7]),
+                        cross_k=np.zeros((1, 1, 4, 1, 2), np.float32),
+                        cross_v=np.zeros((1, 1, 4, 1, 2), np.float32),
+                        src_lengths=np.asarray([4]), n_pages=1)
+    store.put(sp)
+    assert 3 in store and len(store) == 1
+    assert store.spilled_bytes == sp.n_bytes > 0
+    with pytest.raises(ValueError):
+        store.put(sp)                   # double spill
+    assert store.pop(3) is sp
+    assert len(store) == 0
+    with pytest.raises(ValueError):
+        store.pop(3)                    # nothing to restore
+    assert store.spill_events == 1 and store.restore_events == 1
+
+
+def _mk_running(req_id, key, pages, step=0):
+    r = Request(req_id=req_id, src=np.arange(2, dtype=np.int32),
+                max_new_tokens=4, deadline_s=key)
+    r.pages = list(range(pages))
+    r.admitted_step = step
+    return r
+
+
+def test_pick_victims_least_urgent_first():
+    key_fn = lambda r: r.deadline_s
+    held = lambda r: len(r.pages)
+    a = _mk_running(0, 1.0, 2, step=0)
+    b = _mk_running(1, 9.0, 2, step=1)
+    c = _mk_running(2, 5.0, 2, step=2)
+    got = pick_victims([a, b, c], pages_needed=3, key_fn=key_fn,
+                       pages_held_fn=held)
+    assert [r.req_id for r in got] == [1, 2]     # latest deadline evicted 1st
+    # min_key (anti-thrash): equal urgency never evicts
+    assert pick_victims([a, b], pages_needed=1, key_fn=key_fn,
+                        pages_held_fn=held, min_key=9.0) == []
+    assert [r.req_id for r in
+            pick_victims([a, b], pages_needed=1, key_fn=key_fn,
+                         pages_held_fn=held, min_key=5.0)] == [1]
+    # insufficient pool: partial without min_key, empty with it
+    assert len(pick_victims([a], pages_needed=99, key_fn=key_fn,
+                            pages_held_fn=held)) == 1
+    assert pick_victims([a], pages_needed=99, key_fn=key_fn,
+                        pages_held_fn=held, min_key=5.0) == []
+    # exclusion protects rows that must survive the round
+    assert pick_victims([a, b], pages_needed=1, key_fn=key_fn,
+                        pages_held_fn=held, exclude=[b])[0] is a
+
+
+def test_chaos_schedule_determinism():
+    ch = make_chaos(5, n_rounds=12, preempt_every=3, victims_per_round=2,
+                    slow_every=4, slow_s=1.5)
+    ids = [11, 3, 7, 5]
+    for rnd in range(12):
+        v1 = ch.victims_for(rnd, ids)
+        v2 = ch.victims_for(rnd, list(reversed(ids)))
+        assert v1 == v2                          # order-independent
+        assert set(v1) <= set(ids)
+        assert len(v1) == (2 if rnd in ch.preempt_rounds else 0)
+    assert ch.slow_for(4) == 1.5 and ch.slow_for(5) == 0.0
+    assert ch.n_preemptions_planned == 2 * len(ch.preempt_rounds)
+    assert make_chaos(5, n_rounds=12).preempt_rounds == \
+        make_chaos(5, n_rounds=12).preempt_rounds
+    with pytest.raises(ValueError):
+        make_chaos(0, preempt_every=0)
+
+
+def test_watchdog_straggler_and_misuse():
+    wd = StepWatchdog(threshold=2.0)
+    for _ in range(6):
+        assert not wd.observe(0.1)
+    assert wd.observe(1.0)                       # 10× the median
+    assert wd.straggler_steps == [7]
+    with pytest.raises(RuntimeError):
+        StepWatchdog().stop()                    # stop without start
+
+
+# ------------------------------------------------------------- properties
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=10), min_size=1,
+                max_size=10),
+       st.integers(min_value=0, max_value=10 ** 6))
+def test_prop_scheduler_terminal_states_and_reclaim(budgets, seed):
+    """Random admit/preempt/release churn against an overcommitted pool:
+    every request ends in exactly one terminal state, nothing deadlocks,
+    and pages/reservations/spill accounting all return to zero."""
+    rng = np.random.default_rng(seed)
+    alloc = kvc.PageAllocator(12, 4, overcommit_limit=1.5)
+    sched = ContinuousScheduler(
+        3, allocator=alloc,
+        pages_per_request=lambda r: kvc.pages_per_row(
+            min(r.max_new_tokens, 16), 4),
+        initial_pages=lambda r: kvc.pages_per_row(
+            min(4, max(r.max_new_tokens, 1)), 4))
+    reqs = [Request(req_id=i, src=np.arange(1 + i % 3, dtype=np.int32),
+                    max_new_tokens=m,
+                    deadline_s=(None if i % 3 else 100.0 + i),
+                    priority=float(i % 2))
+            for i, m in enumerate(budgets)]
+    sched.submit_many(reqs)
+    for t in range(200):
+        if sched.all_done:
+            break
+        sched.admit(float(t))
+        running = list(sched.slot_map.values())
+        if running and rng.random() < 0.4:
+            victim = running[int(rng.integers(len(running)))]
+            n_held = len(victim.pages or [])
+            if rng.random() < 0.5 and victim.pages:
+                victim.spill = object()          # engine copied KV to host
+            sched.preempt(victim, float(t))
+            if victim.spill is not None:
+                # model the engine's restore half: spilled pages return
+                # to the pool when the request is re-spliced
+                alloc.unspill(n_held)
+                victim.spill = None
+            running = list(sched.slot_map.values())
+        for r in running:
+            if rng.random() < 0.6:
+                sched.release(r, float(t))
+    assert sched.all_done, "scheduler wedged"
+    for r in reqs:
+        assert r.status in ("finished", "rejected")
+        assert r.slot is None and r.pages is None and r.reserved_pages == 0
+    assert alloc.in_use == 0 and alloc.reserved == 0 and alloc.spilled == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=12), min_size=1,
+                max_size=12),
+       st.integers(min_value=0, max_value=10 ** 6))
+def test_prop_simulation_survives_any_preempt_schedule(lens, seed):
+    rng = np.random.default_rng(seed)
+    schedule = {int(r): int(rng.integers(1, 3))
+                for r in rng.integers(0, 30, size=6)}
+    base = simulate_continuous(lens, 4, burst_len=2)
+    out = simulate_continuous(lens, 4, burst_len=2,
+                              preempt_rounds=schedule)
+    assert out["useful_slot_steps"] == base["useful_slot_steps"]
+    assert out["continuous_steps"] >= base["continuous_steps"]
+    assert out["host_events"] >= base["host_events"] + out["preemptions"]
+
+
+def test_simulation_chunked_and_deadlines():
+    out = simulate_continuous([5, 3, 8], 4, burst_len=2, prefill_chunk=4,
+                              src_lengths=[10, 2, 12], n_enc_layers=3)
+    assert out["chunk_stage_rounds"] == 6
+    d = simulate_continuous([5, 5, 5], 1, burst_len=1,
+                            deadline_steps=[None, None, 3])
+    assert d["shed"] == 1 and d["deadline_misses"] == 1
+    with pytest.raises(ValueError):
+        simulate_continuous([3], 2, prefill_chunk=2, src_lengths=[5],
+                            fused_admission=False)
+
+
+# ----------------------------------------------------------- arg validation
+def test_overload_arg_validation():
+    s = _module_state()
+    eng = s["engines"]["fp_paged"]
+    unpaged = ServingEngine(s["model"], s["params"], max_len=MAX_LEN)
+    with pytest.raises(ValueError):
+        eng.serve(s["srcs"][:1], max_new_tokens=2, overcommit=0.5)
+    with pytest.raises(ValueError):
+        unpaged.serve(s["srcs"][:1], max_new_tokens=2, overcommit=1.5)
+    with pytest.raises(ValueError):
+        unpaged.serve(s["srcs"][:1], max_new_tokens=2,
+                      chaos=ChaosSchedule(seed=1))
+    with pytest.raises(ValueError):
+        eng.serve(s["srcs"][:1], max_new_tokens=2, prefill_chunk=0)
+    with pytest.raises(ValueError):
+        eng.serve(s["srcs"][:1], max_new_tokens=2, prefill_chunk=4,
+                  fused_admission=False)
