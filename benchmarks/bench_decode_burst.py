@@ -118,6 +118,42 @@ def run(smoke: bool = False) -> list:
                  f"speedup={res.n_tokens / min(times) / base_tps:.2f}x "
                  f"identical_to_k1={mismatches == 0}"))
 
+    # ---- self-speculative decoding: INT8-path drafts + one batched
+    # verify per macro-step inside the same jitted loop.  CI-asserted:
+    # tokens identical to the non-speculative reference, acceptance at
+    # least the floor (self-drafting must agree with itself most of the
+    # time — a collapse here means the verify path diverged), and host
+    # syncs no worse than the plain burst at the same cap (speculation
+    # must not add device→host round trips) ----------------------------
+    spec_k = 2 if smoke else 4
+    base_k = ks[-1]
+    serve_spec = lambda: engine.serve(requests, n_slots=N_SLOTS,
+                                      max_new_tokens=budgets,
+                                      burst_len=base_k,
+                                      speculative_k=spec_k)
+    res, times, warm_s = measure(serve_spec, warmup=1, passes=passes)
+    warm_total += warm_s
+    mismatches = sum(not np.array_equal(res.tokens_for(i), reference[i])
+                     for i in range(n_requests))
+    assert mismatches == 0, (
+        f"speculative_k={spec_k} diverged on {mismatches}/{n_requests} "
+        "requests — lossless verification broken")
+    ACCEPTANCE_FLOOR = 0.5
+    assert res.acceptance_rate >= ACCEPTANCE_FLOOR, (
+        f"acceptance rate {res.acceptance_rate:.3f} below floor "
+        f"{ACCEPTANCE_FLOOR} (draft/verify paths disagree too often)")
+    assert res.host_syncs <= results[base_k][0].host_syncs, (
+        f"speculation added host syncs: {res.host_syncs} > "
+        f"{results[base_k][0].host_syncs}")
+    tps = res.n_tokens / min(times)
+    rows.append(("serve_speculative", min(times) * 1e6 / n_requests,
+                 f"tok_per_s={tps:.1f} spec_k={spec_k} "
+                 f"acceptance={res.acceptance_rate:.3f} "
+                 f"draft={res.draft_tokens} accepted={res.accepted_tokens} "
+                 f"host_syncs={res.host_syncs} "
+                 f"speedup={tps / base_tps:.2f}x "
+                 f"identical_to_k1={mismatches == 0}"))
+
     # ---- generate sweep (one static batch, uniform budget) ---------------
     src, lens = pad_batch([s.src for s in requests[:N_SLOTS]])
     batch = {"src_tokens": src, "src_lengths": lens}

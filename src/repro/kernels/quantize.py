@@ -43,7 +43,10 @@ def quantize_rowwise_pallas(
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused dynamic row-wise quantizer. Returns (int8 (M,K), f32 (M,1))."""
     M, K = x.shape
-    bm = min(block_rows, max(8, M))
+    # block row count must be sublane-aligned (multiple of 8): a bare
+    # min(block_rows, M) picks e.g. bm=12 for M=12, which interpret mode
+    # accepts but real TPU lowering rejects — round up, padding covers it
+    bm = min(block_rows, ((max(8, M) + 7) // 8) * 8)
     pad = (-M) % bm
     x_p = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
     Mp = x_p.shape[0]
@@ -82,7 +85,8 @@ def quantize_static_pallas(
 ) -> jax.Array:
     """Calibrated-scale quantizer: single elementwise pass to int8."""
     M, K = x.shape
-    bm = min(block_rows, max(8, M))
+    # sublane-align the block rows (see quantize_rowwise_pallas)
+    bm = min(block_rows, ((max(8, M) + 7) // 8) * 8)
     pad = (-M) % bm
     x_p = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
     Mp = x_p.shape[0]

@@ -146,12 +146,16 @@ def attention(
     memory: Optional[Tuple[jax.Array, jax.Array]] = None,   # cross-attn (k, v)
     memory_lengths: Optional[jax.Array] = None,
     unroll: bool = False,
+    per_query: bool = False,
 ) -> Tuple[jax.Array, Optional[Tuple]]:
     """Returns (output, new_cache_entries).
 
     Modes:
     * ``cache is None and memory is None`` — train/prefill self-attention.
-    * ``cache is not None`` — single-token decode against the cache (S == 1).
+    * ``cache is not None`` — decode against the cache: S == 1 is the
+      classic single-token step; S > 1 is the speculative *verify* step
+      (S consecutive positions appended at the cursor, each query causally
+      masked to its own prefix).
     * ``memory is not None`` — cross-attention onto precomputed (k, v).
     """
     B, S, D = x.shape
@@ -163,8 +167,18 @@ def attention(
 
     if memory is not None:
         k, v = memory
-        out = chunked_attention(q, k, v, causal=False,
-                                kv_lengths=memory_lengths, unroll=unroll)
+        if per_query and S > 1:
+            # decode-side cross-attention over S drafted positions: run the
+            # S == 1 shape per query so every position reduces in exactly
+            # the order the sequential decode path uses (XLA re-tiles the
+            # softmax·V contraction for wider Sq, which costs bit-identity)
+            out = jnp.concatenate(
+                [chunked_attention(q[:, j:j + 1], k, v, causal=False,
+                                   kv_lengths=memory_lengths, unroll=unroll)
+                 for j in range(S)], axis=1)
+        else:
+            out = chunked_attention(q, k, v, causal=False,
+                                    kv_lengths=memory_lengths, unroll=unroll)
         out = out.reshape(B, S, H * dh)
         y = dense(params["o_proj"], out, site=f"{site}/o_proj", quant=quant,
                   taps=taps)
@@ -177,7 +191,8 @@ def attention(
 
     if positions is None:
         if cache is not None:
-            positions = cache.lengths[:, None]          # (B, 1) decode cursor
+            positions = (cache.lengths[:, None]         # (B, S) from cursor
+                         + jnp.arange(S, dtype=jnp.int32)[None, :])
         else:
             positions = jnp.broadcast_to(
                 jnp.arange(S, dtype=jnp.int32), (B, S))
@@ -190,38 +205,57 @@ def attention(
     if cache is not None:
         # ---- decode: append at each sequence's cursor, then attend ----
         paged = cache.block_tables is not None
-        if paged:
-            k_c, v_c, ks_c, vs_c = kvc.append_token_paged(
-                cache.k, cache.v, cache.k_scale, cache.v_scale,
-                cache.block_tables, k, v, cache.lengths)
+        if S == 1:
+            if paged:
+                k_c, v_c, ks_c, vs_c = kvc.append_token_paged(
+                    cache.k, cache.v, cache.k_scale, cache.v_scale,
+                    cache.block_tables, k, v, cache.lengths)
+            else:
+                k_c, v_c, ks_c, vs_c = kvc.append_token(
+                    cache.k, cache.v, cache.k_scale, cache.v_scale, k, v,
+                    cache.lengths)
         else:
-            k_c, v_c, ks_c, vs_c = kvc.append_token(
-                cache.k, cache.v, cache.k_scale, cache.v_scale, k, v,
-                cache.lengths)
-        lengths = cache.lengths + 1
+            # speculative verify: append all S drafted positions at once
+            if paged:
+                k_c, v_c, ks_c, vs_c = kvc.append_tokens_paged(
+                    cache.k, cache.v, cache.k_scale, cache.v_scale,
+                    cache.block_tables, k, v, cache.lengths)
+            else:
+                k_c, v_c, ks_c, vs_c = kvc.append_tokens(
+                    cache.k, cache.v, cache.k_scale, cache.v_scale, k, v,
+                    cache.lengths)
         sm_scale = 1.0 / math.sqrt(dh)
-        q1 = q.reshape(B, H, dh)
-        if ks_c is not None and paged:
-            out = ops.decode_attention_paged(
-                q1, k_c, ks_c, v_c, vs_c, cache.block_tables, lengths,
-                sm_scale=sm_scale, impl=quant.impl)
-        elif ks_c is not None:
-            out = ops.decode_attention(q1, k_c, ks_c, v_c, vs_c, lengths,
-                                       sm_scale=sm_scale, impl=quant.impl)
-        elif paged:
+        if ks_c is None and paged:
             # FP paged FALLBACK: linearize the pool through the table and
             # reuse the contiguous math — it materializes a gathered copy
             # per step, so it trades the beam-reorder slab gather for an
             # attention-side one (a wash at worst; the cross-K/V gather
             # still disappears).  The deployment path is the INT8 cache,
             # whose Pallas kernel walks the table in place with no copy.
-            out = _fp_decode_attention(
-                q1, kvc.linearize_pages(k_c, cache.block_tables),
-                kvc.linearize_pages(v_c, cache.block_tables),
-                lengths, sm_scale)
-        else:
-            out = _fp_decode_attention(q1, k_c, v_c, lengths, sm_scale)
-        out = out.reshape(B, 1, H * dh)
+            k_lin = kvc.linearize_pages(k_c, cache.block_tables)
+            v_lin = kvc.linearize_pages(v_c, cache.block_tables)
+        # Each query position j attends its own causal prefix by running
+        # the SAME single-query kernel with cursor lengths + j + 1 — for
+        # S == 1 this is literally the pre-speculation decode step, and for
+        # S > 1 it makes the verify pass bit-identical to sequential decode
+        # by construction (identical kernel, shapes, and masked lengths).
+        outs = []
+        for j in range(S):
+            q1 = q[:, j].reshape(B, H, dh)
+            lengths = cache.lengths + (j + 1)
+            if ks_c is not None and paged:
+                o = ops.decode_attention_paged(
+                    q1, k_c, ks_c, v_c, vs_c, cache.block_tables, lengths,
+                    sm_scale=sm_scale, impl=quant.impl)
+            elif ks_c is not None:
+                o = ops.decode_attention(q1, k_c, ks_c, v_c, vs_c, lengths,
+                                         sm_scale=sm_scale, impl=quant.impl)
+            elif paged:
+                o = _fp_decode_attention(q1, k_lin, v_lin, lengths, sm_scale)
+            else:
+                o = _fp_decode_attention(q1, k_c, v_c, lengths, sm_scale)
+            outs.append(o)
+        out = jnp.stack(outs, axis=1).reshape(B, S, H * dh)
         y = dense(params["o_proj"], out, site=f"{site}/o_proj", quant=quant,
                   taps=taps)
         return y, (k_c, v_c, ks_c, vs_c)

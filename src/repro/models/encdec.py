@@ -140,7 +140,8 @@ class EncDecLM:
         c, _ = attention(
             bparams["cross_attn"], h, cfg=cfg, site=f"{site}/cross_attn",
             quant=quant, taps=taps, memory=memory,
-            memory_lengths=memory_lengths, unroll=unroll)
+            memory_lengths=memory_lengths, unroll=unroll,
+            per_query=cache_view is not None)
         x = x + c
         h = norm(bparams["ffn_norm"], x, cfg.norm)
         f = ffn(bparams["ffn"], h, cfg=cfg, site=f"{site}/ffn", quant=quant,
@@ -416,17 +417,36 @@ class EncDecLM:
 
     def decode_step(self, params, tokens, state, *,
                     quant: QuantContext = FP_CONTEXT) -> Tuple[jax.Array, Dict]:
+        """Single-token decode: ``tokens`` (B,) → (logits (B, V), state)."""
+        logits, state = self.decode_step_multi(params, tokens[:, None], state,
+                                               quant=quant)
+        return logits[:, 0], state
+
+    def decode_step_multi(self, params, tokens, state, *,
+                          quant: QuantContext = FP_CONTEXT
+                          ) -> Tuple[jax.Array, Dict]:
+        """Decode ``T`` consecutive positions per row in one pass.
+
+        ``tokens``: (B, T) — position t of row b is embedded at cursor
+        ``lengths[b] + t`` and causally masked to its own prefix, so the
+        returned logits (B, T, V) match T sequential :meth:`decode_step`
+        calls bit-for-bit (same kernels per query — see ``attention``).
+        The cache advances by T.  This is the speculative-decoding verify
+        primitive; ``decode_step`` is the T == 1 wrapper.
+        """
         cfg = self.cfg
         dt = cfg.activation_dtype
         cache = state["cache"]
-        B = tokens.shape[0]
-        x = embed(params["embed"], tokens[:, None], dt) * math.sqrt(cfg.d_model)
+        B, T = tokens.shape
+        x = embed(params["embed"], tokens, dt) * math.sqrt(cfg.d_model)
         pe = sinusoidal_positions(cache.capacity, cfg.d_model, dt)
         # clamp explicitly: inside a decode burst (lax.while_loop in the
         # serving engine) finished rows keep stepping past their cursor;
         # their reads must stay in bounds (outputs are EOS-masked anyway)
-        pos = jnp.minimum(cache.lengths, cache.capacity - 1)
-        x = x + pe[pos][:, None, :]
+        pos = jnp.minimum(cache.lengths[:, None]
+                          + jnp.arange(T, dtype=jnp.int32)[None, :],
+                          cache.capacity - 1)
+        x = x + pe[pos]
 
         paged = isinstance(cache, kvc.PagedKVCache)
         tables = cache.block_tables if paged else None
@@ -499,11 +519,11 @@ class EncDecLM:
             state["cache"] = kvc.PagedKVCache(
                 k=k_c, v=v_c, k_scale=ks_c, v_scale=vs_c,
                 block_tables=cache.block_tables, own_pages=cache.own_pages,
-                lengths=cache.lengths + 1)
+                lengths=cache.lengths + T)
         else:
             state["cache"] = kvc.KVCache(k=k_c, v=v_c, k_scale=ks_c,
                                          v_scale=vs_c,
-                                         lengths=cache.lengths + 1)
+                                         lengths=cache.lengths + T)
         x = norm(params["dec_final_norm"], x, cfg.norm)
-        logits = unembed(params["embed"], x)[:, 0]
+        logits = unembed(params["embed"], x)
         return logits, state

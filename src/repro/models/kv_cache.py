@@ -173,6 +173,41 @@ def append_token(
     return k_cache, v_cache, ks_cache, vs_cache
 
 
+def append_tokens(
+    k_cache: jax.Array,                  # (B, S_max, HKV, dh)
+    v_cache: jax.Array,
+    ks_cache: Optional[jax.Array],
+    vs_cache: Optional[jax.Array],
+    k_new: jax.Array,                    # (B, T, HKV, dh) fp
+    v_new: jax.Array,
+    lengths: jax.Array,                  # (B,) per-sequence cursors
+):
+    """Scatter ``T`` consecutive tokens per row starting at its cursor.
+
+    The speculative-decode verify pass appends a whole drafted window at
+    once: row b's token t lands at position ``lengths[b] + t``.  Positions
+    are distinct within a row so there are no scatter collisions, and the
+    same ``mode="drop"`` contract as :func:`append_token` applies — any
+    position at/past capacity writes nowhere.
+    """
+    B, T = k_new.shape[0], k_new.shape[1]
+    b_idx = jnp.arange(B)[:, None]
+    pos = lengths[:, None] + jnp.arange(T, dtype=lengths.dtype)[None, :]
+    if ks_cache is not None:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        k_cache = k_cache.at[b_idx, pos].set(kq, mode="drop")
+        v_cache = v_cache.at[b_idx, pos].set(vq, mode="drop")
+        ks_cache = ks_cache.at[b_idx, pos].set(ks, mode="drop")
+        vs_cache = vs_cache.at[b_idx, pos].set(vs, mode="drop")
+    else:
+        k_cache = k_cache.at[b_idx, pos].set(
+            k_new.astype(k_cache.dtype), mode="drop")
+        v_cache = v_cache.at[b_idx, pos].set(
+            v_new.astype(v_cache.dtype), mode="drop")
+    return k_cache, v_cache, ks_cache, vs_cache
+
+
 def insert_at_slots(cache: KVCache, sub: KVCache,
                     slots: jax.Array) -> KVCache:
     """Scatter ``sub``'s batch rows into ``slots`` of the running cache.
@@ -234,6 +269,16 @@ def free_inactive(cache: KVCache, live: jax.Array) -> KVCache:
         k=cache.k, v=cache.v, k_scale=cache.k_scale, v_scale=cache.v_scale,
         lengths=jnp.where(live, cache.lengths, 0),
     )
+
+
+def with_lengths(cache, lengths: jax.Array):
+    """Replace the write cursors of a :class:`KVCache`/:class:`PagedKVCache`.
+
+    Speculative decoding rolls rejected draft positions back by resetting
+    cursors — the payload past the cursor is junk by contract (reads are
+    length-masked, later writes overwrite), so rollback is cursor-only.
+    """
+    return dataclasses.replace(cache, lengths=lengths)
 
 
 def group_rows(base_slots: jax.Array, group: int) -> jax.Array:
@@ -464,6 +509,47 @@ def append_token_paged(
             k_new[:, 0].astype(k_pages.dtype), mode="drop")
         v_pages = v_pages.at[page, off].set(
             v_new[:, 0].astype(v_pages.dtype), mode="drop")
+    return k_pages, v_pages, ks_pages, vs_pages
+
+
+def append_tokens_paged(
+    k_pages: jax.Array,                  # (P, ps, HKV, dh) one layer's pool
+    v_pages: jax.Array,
+    ks_pages: Optional[jax.Array],       # (P, ps, HKV)
+    vs_pages: Optional[jax.Array],
+    block_tables: jax.Array,             # (B, maxP) int32
+    k_new: jax.Array,                    # (B, T, HKV, dh) fp
+    v_new: jax.Array,
+    lengths: jax.Array,                  # (B,) per-row cursors
+):
+    """Paged :func:`append_tokens`: T consecutive tokens per row.
+
+    Row b's token t targets position ``lengths[b] + t``; its page comes
+    from the block table, sentinel/past-capacity positions drop (same
+    contract as :func:`append_token_paged`).  Positions are distinct
+    within a row, so no two writes collide on a (page, offset) pair.
+    """
+    P, ps = k_pages.shape[0], k_pages.shape[1]
+    maxP = block_tables.shape[1]
+    B, T = k_new.shape[0], k_new.shape[1]
+    b_idx = jnp.arange(B)[:, None]
+    pos = lengths[:, None] + jnp.arange(T, dtype=lengths.dtype)[None, :]
+    slot = pos // ps
+    off = pos % ps
+    entry = block_tables[b_idx, jnp.minimum(slot, maxP - 1)]
+    page = jnp.where(slot < maxP, entry, P)          # past capacity → drop
+    if ks_pages is not None:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        k_pages = k_pages.at[page, off].set(kq, mode="drop")
+        v_pages = v_pages.at[page, off].set(vq, mode="drop")
+        ks_pages = ks_pages.at[page, off].set(ks, mode="drop")
+        vs_pages = vs_pages.at[page, off].set(vs, mode="drop")
+    else:
+        k_pages = k_pages.at[page, off].set(
+            k_new.astype(k_pages.dtype), mode="drop")
+        v_pages = v_pages.at[page, off].set(
+            v_new.astype(v_pages.dtype), mode="drop")
     return k_pages, v_pages, ks_pages, vs_pages
 
 

@@ -34,6 +34,13 @@ class AdaptiveBurst:
     cap, always a power of two in ``[1, max_burst]``.
     """
 
+    #: fraction of a burst's wall time used to seed ``_t_sync`` — the
+    #: first measured burst cannot separate step cost from sync overhead
+    #: (its own per-step time still *contains* the overhead), so the sync
+    #: estimate starts as a conservative wall-time fraction and the EMA
+    #: refines it once later bursts ground ``_t_step``.
+    SYNC_SEED_FRAC = 0.1
+
     def __init__(self, start: int = 8, max_burst: int = 64,
                  grow_margin: float = 4.0, ema: float = 0.3):
         if max_burst < 1:
@@ -74,6 +81,18 @@ class AdaptiveBurst:
         if self._observed == 1:
             return self.k            # burn-in: first burst includes compile
         per_step = wall_s / steps
+        if self._observed == 2:
+            # burn-in, part two: the first *measured* burst's per-step
+            # time still carries the full per-burst sync overhead, so
+            # deriving ``overhead = wall − steps·t_step`` from it would
+            # compute ≈0 and seed ``_t_sync`` near zero — every mid-burst
+            # EOS would then look more expensive than a sync and shrink
+            # ``k`` spuriously.  Seed both estimates conservatively and
+            # start adapting only once a second, distinct observation can
+            # ground them.
+            self._t_step = per_step
+            self._t_sync = self.SYNC_SEED_FRAC * wall_s
+            return self.k
         self._t_step = per_step if self._t_step is None \
             else min(self._t_step, per_step)
         overhead = max(wall_s - steps * self._t_step, 0.0)

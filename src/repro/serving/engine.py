@@ -103,6 +103,38 @@ BEAM_SEED_NEG = np.float32(-1e30)
 AUTO_MAX_BURST = 64
 
 
+def _spec_accept(d: jax.Array, v: jax.Array, remaining: jax.Array,
+                 eos: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Speculative-decoding acceptance: longest agreeing prefix + bonus.
+
+    ``d``: (B, s) drafted tokens; ``v``: (B, s+1) verifier greedy tokens
+    over the same positions (``v[:, j]`` is what sequential decode would
+    emit after accepting ``j`` drafts); ``remaining``: (B,) per-row token
+    budgets (0 ⇔ inactive row).
+
+    Returns ``(stop, hit_eos, accepted)``: ``stop`` (B,) is how many of
+    ``v[:, :stop]`` this macro-step emits — the longest prefix where the
+    draft agrees with the verifier, plus the verifier's first correction
+    token, clamped by the first verifier EOS (emitted, then the row stops,
+    exactly like the sequential loop) and by the budget; ``hit_eos``
+    marks rows whose emitted window ends in EOS; ``accepted`` counts the
+    emitted tokens that came from the draft (the acceptance-rate
+    numerator).  Rows with ``remaining == 0`` emit nothing.
+    """
+    s = d.shape[1]
+    active = remaining > 0
+    agree = jnp.cumprod((d == v[:, :s]).astype(jnp.int32), axis=1)
+    a = jnp.sum(agree, axis=1)                  # longest agreeing prefix
+    cand = a + 1                                # + verifier's correction
+    idx = jnp.arange(s + 1, dtype=jnp.int32)[None, :]
+    eos_first = jnp.min(jnp.where(v == eos, idx, s + 1), axis=1)
+    stop = jnp.minimum(jnp.minimum(cand, eos_first + 1), remaining)
+    stop = jnp.where(active, stop, 0)
+    hit_eos = active & (eos_first + 1 <= jnp.minimum(cand, remaining))
+    accepted = jnp.minimum(a, stop)
+    return stop, hit_eos, accepted
+
+
 @dataclasses.dataclass
 class GenerationResult:
     tokens: List[np.ndarray]          # per-sequence generated ids (no EOS)
@@ -110,6 +142,13 @@ class GenerationResult:
     prefill_s: float
     decode_s: float
     host_syncs: int = 0               # device→host round trips (prefill + bursts)
+    speculative_k: int = 0            # draft window (0 = plain decode)
+    draft_tokens: int = 0             # tokens proposed by the draft model
+    accepted_tokens: int = 0          # drafted tokens the verifier kept
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted_tokens / max(self.draft_tokens, 1)
 
     @property
     def total_s(self) -> float:
@@ -189,6 +228,18 @@ class ServeResult:
     deadline_misses: int = 0          # shed + finished past their deadline
     free_lwm: int = 0                 # page free-list low-water mark
     fragmentation: float = 0.0        # final free-list scatter in [0, 1]
+    # self-speculative decoding (draft with draft_quant, verify with the
+    # engine quant context — greedy output stays bit-identical to the
+    # non-speculative path by construction)
+    speculative_k: int = 0            # draft window (0 = speculation off)
+    draft_tokens: int = 0             # tokens proposed by the draft passes
+    accepted_tokens: int = 0          # drafted tokens the verifier kept
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the verifier accepted (0 when
+        speculation was off — no drafts were proposed)."""
+        return self.accepted_tokens / max(self.draft_tokens, 1)
 
     @property
     def n_groups(self) -> int:
@@ -276,6 +327,10 @@ class ServeResult:
             "deadline_misses": float(self.deadline_misses),
             "free_lwm": float(self.free_lwm),
             "fragmentation": float(self.fragmentation),
+            "speculative_k": float(self.speculative_k),
+            "draft_tokens": float(self.draft_tokens),
+            "accepted_tokens": float(self.accepted_tokens),
+            "acceptance_rate": self.acceptance_rate,
             "first_token_latency_mean_s": float(np.mean(first)) if first else 0.0,
             "first_token_latency_p95_s":
                 float(np.percentile(first, 95)) if first else 0.0,
@@ -295,10 +350,20 @@ class ServingEngine:
                  admission_enc_bucket: str = "max",
                  prefix_cache: bool = False,
                  prefix_pages: int = 256,
-                 prefix_page_size: Optional[int] = None):
+                 prefix_page_size: Optional[int] = None,
+                 draft_quant: Optional[QuantContext] = None):
         self.model = model
         self.params = params
         self.quant = quant
+        # speculative decoding draft context: the k cheap draft steps run
+        # with these weights/activations (e.g. INT8 while ``quant`` is FP —
+        # the paper's <0.5% quality gap is exactly the regime where such
+        # drafts are accepted almost always).  None → draft with ``quant``
+        # itself (degenerate self-speculation, acceptance 1.0).  The KV
+        # cache layout always follows ``quant`` — the verifier owns every
+        # cache entry past the accepted cursor, which is what makes greedy
+        # output bit-identical to the non-speculative ``quant`` path.
+        self.draft_quant = quant if draft_quant is None else draft_quant
         self.max_len = max_len
         self.eos_id = eos_id
         if burst_len != "auto":
@@ -353,6 +418,9 @@ class ServingEngine:
         self._beam_serve_jits: Dict[Tuple[int, int], Callable] = {}
         self._fused_burst_jits: Dict[int, Callable] = {}
         self._fused_beam_serve_jits: Dict[Tuple[int, int], Callable] = {}
+        # speculative burst programs, keyed (ring width, speculative_k)
+        self._spec_burst_jits: Dict[Tuple[int, int], Callable] = {}
+        self._spec_fused_burst_jits: Dict[Tuple[int, int], Callable] = {}
         # overload machinery: preempt-by-page-spill gathers/scatters,
         # overcommit page growth, and chunked-prefill staged encodes —
         # keyed by row count (1 greedy, group width beam) / encoder layer
@@ -1051,6 +1119,129 @@ class ServingEngine:
         donate = (1, 4) if self._donate_state else ()
         return jax.jit(burst, donate_argnums=donate)
 
+    # ------------------------------------------------- speculative decoding
+    def _spec_greedy_burst_fn(self, width: int, spec_k: int) -> Callable:
+        fn = self._spec_burst_jits.get((width, spec_k))
+        if fn is None:
+            donate = (1, 4) if self._donate_state else ()
+            fn = jax.jit(self._spec_greedy_while(width, spec_k),
+                         donate_argnums=donate)
+            self._spec_burst_jits[(width, spec_k)] = fn
+        return fn
+
+    def _spec_fused_greedy_burst_fn(self, width: int, spec_k: int) -> Callable:
+        fn = self._spec_fused_burst_jits.get((width, spec_k))
+        if fn is None:
+            prologue = self._admission_prologue
+            loop = self._spec_greedy_while(width, spec_k)
+
+            def burst(params, tokens, remaining, steps_cap, state,
+                      adm_src, adm_lens, adm_rows, extra):
+                state, tokens = prologue(params, state, tokens,
+                                         remaining > 0, adm_src, adm_lens,
+                                         adm_rows, extra)
+                return loop(params, tokens, remaining, steps_cap, state)
+
+            donate = (1, 4) if self._donate_state else ()
+            fn = jax.jit(burst, donate_argnums=donate)
+            self._spec_fused_burst_jits[(width, spec_k)] = fn
+        return fn
+
+    def _spec_greedy_while(self, width: int, spec_k: int) -> Callable:
+        """Self-speculative greedy burst: every ``while_loop`` iteration
+        (one *macro-step*) runs ``spec_k`` sequential draft steps with the
+        ``draft_quant`` context, then ONE batched multi-position verify
+        pass with the engine ``quant`` context, and emits the longest
+        draft prefix the verifier agrees with plus the verifier's own
+        correction token (:func:`_spec_accept`) — all on device, so host
+        syncs per serve round stay exactly one, same as the plain burst.
+
+        The drafts' KV writes are scratch: the verify pass re-appends
+        positions ``[n0, n0 + spec_k]`` from the *pre-draft* cache state
+        with verifier-quality values, and the accepted cursor
+        ``n0 + stop`` is installed with :func:`kv_cache.with_lengths` —
+        rejected positions become junk past the cursor, which the cache
+        contract already tolerates (reads are length-masked, later writes
+        overwrite).  Accepted positions therefore hold the verifier's KV
+        of exactly the tokens sequential decode would have fed, which is
+        why greedy output is bit-identical to the non-speculative path.
+
+        Ring-buffer layout: ``width`` macro-steps × up to ``spec_k + 1``
+        tokens each, written at per-row ``emitted`` cursors (rows emit
+        different counts per macro-step, so the host drain reads
+        ``emitted[row]`` entries, not a column count).  The per-row
+        ``emitted``/``drafted``/``accepted`` counters and ``act_steps``
+        (macro-steps the row was live — the busy/wasted accounting unit
+        under speculation) ride back as 4 extra ring columns.
+        """
+        model, eos = self.model, self.eos_id
+        quant, draft_quant = self.quant, self.draft_quant
+        s = spec_k
+        width_cols = width * (s + 1)
+
+        def burst(params, tokens, remaining, steps_cap, state):
+            B = tokens.shape[0]
+            buf0 = jnp.full((B, width_cols), eos, jnp.int32)
+            zeros = jnp.zeros((B,), jnp.int32)
+            b_idx = jnp.arange(B)
+
+            def cond(carry):
+                step, _, remaining = carry[0], carry[1], carry[2]
+                return (step < steps_cap) & jnp.any(remaining > 0)
+
+            def body(carry):
+                (step, tokens, remaining, state, buf,
+                 emitted, drafted, accepted, act_steps) = carry
+                n0 = state["cache"].lengths
+                active = remaining > 0
+                # ---- draft: s sequential cheap steps (static unroll)
+                dst, cur, drafts = state, tokens, []
+                for _ in range(s):
+                    lg, dst = model.decode_step(params, cur, dst,
+                                                quant=draft_quant)
+                    cur = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                    drafts.append(cur)
+                d = jnp.stack(drafts, axis=1)              # (B, s)
+                # ---- verify: one batched pass over (t0, d_1 … d_s)
+                # against the PRE-draft cache (cursors n0) — its appends
+                # overwrite every draft-scratch position
+                seq = jnp.concatenate([tokens[:, None], d], axis=1)
+                vlogits, vstate = model.decode_step_multi(params, seq,
+                                                          state, quant=quant)
+                v = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)  # (B,s+1)
+                stop, hit_eos, acc = _spec_accept(d, v, remaining, eos)
+                # ---- roll back rejected positions: cursor-only
+                vstate = dict(vstate)
+                vstate["cache"] = kvc.with_lengths(vstate["cache"],
+                                                   n0 + stop)
+                # ---- emit v[:, :stop] at per-row ring cursors
+                for j in range(s + 1):
+                    col = jnp.where(active & (j < stop), emitted + j,
+                                    width_cols)          # OOB → drop
+                    buf = buf.at[b_idx, col].set(v[:, j], mode="drop")
+                remaining = jnp.where(hit_eos, 0, remaining - stop)
+                nxt = jnp.where(active,
+                                v[b_idx, jnp.maximum(stop - 1, 0)], eos)
+                return (step + 1, nxt, remaining, vstate, buf,
+                        emitted + stop, drafted + jnp.where(active, s, 0),
+                        accepted + acc,
+                        act_steps + active.astype(jnp.int32))
+
+            carry = (jnp.int32(0), tokens, jnp.asarray(remaining, jnp.int32),
+                     state, buf0, zeros, zeros, zeros, zeros)
+            (step, tokens, remaining, state, buf,
+             emitted, drafted, accepted, act_steps) = jax.lax.while_loop(
+                cond, body, carry)
+            # pack the per-row counters as 4 extra ring columns so the
+            # burst returns the same 5-tuple as the plain greedy burst and
+            # the host drain still costs exactly ONE device→host transfer
+            packed = jnp.concatenate(
+                [buf, emitted[:, None], drafted[:, None],
+                 accepted[:, None], act_steps[:, None]], axis=1)
+            return tokens, remaining, state, packed, step
+
+        return burst
+
     def _beam_burst_fn(self, width: int, beam: int) -> Callable:
         fn = self._beam_burst_jits.get((width, beam))
         if fn is None:
@@ -1276,11 +1467,22 @@ class ServingEngine:
     # ---------------------------------------------------------------- greedy
     def generate(self, batch: Dict[str, np.ndarray], *,
                  max_new_tokens: int = 64,
-                 burst_len: Optional[int] = None) -> GenerationResult:
+                 burst_len: Optional[int] = None,
+                 speculative_k: Optional[int] = None) -> GenerationResult:
         K = self._resolve_burst(burst_len)
         if K == "auto":
             K = 8      # adaptation targets serve(); static batches use a mid cap
-        burst = self._greedy_burst_fn(next_pow2(K))
+        spec = int(speculative_k or 0)
+        if spec < 0:
+            raise ValueError(f"speculative_k must be >= 0, got {spec}")
+        if spec and not hasattr(self.model, "decode_step_multi"):
+            raise ValueError(
+                "speculative decoding needs a model with decode_step_multi "
+                f"(multi-position verify); {type(self.model).__name__} "
+                "does not provide one")
+        width = next_pow2(K)
+        burst = (self._spec_greedy_burst_fn(width, spec) if spec
+                 else self._greedy_burst_fn(width))
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         B = next(iter(batch.values())).shape[0]
 
@@ -1294,6 +1496,12 @@ class ServingEngine:
         first = np.asarray(tokens)
         host_syncs = 1
         cols = [first]
+        # speculative bursts emit ragged per-row counts, so the output is
+        # accumulated as per-row segments instead of grid columns
+        rows = [[int(first[b])] for b in range(B)]
+        emit_col = width * (spec + 1)
+        draft_total = 0
+        accept_total = 0
         remaining_np = np.where(first == self.eos_id, 0,
                                 max(max_new_tokens - 1, 0)).astype(np.int32)
         remaining = jnp.asarray(remaining_np)
@@ -1306,20 +1514,33 @@ class ServingEngine:
             s = int(s)
             remaining_np = np.asarray(remaining)
             host_syncs += 1
-            cols.extend(buf_host[:, i] for i in range(s))
+            if spec:
+                for b in range(B):
+                    n = int(buf_host[b, emit_col])
+                    rows[b].extend(int(x) for x in buf_host[b, :n])
+                    draft_total += int(buf_host[b, emit_col + 1])
+                    accept_total += int(buf_host[b, emit_col + 2])
+            else:
+                cols.extend(buf_host[:, i] for i in range(s))
             steps += s
         t2 = time.perf_counter()
 
-        grid = np.stack(cols, axis=1)                           # (B, T)
+        if spec:
+            grid_rows = [np.asarray(r, np.int32) for r in rows]
+        else:
+            grid = np.stack(cols, axis=1)                       # (B, T)
+            grid_rows = [grid[b] for b in range(B)]
         seqs = []
-        for b in range(B):
-            row = grid[b]
+        for row in grid_rows:
             stop = np.argmax(row == self.eos_id) if (row == self.eos_id).any() \
                 else len(row)
             seqs.append(row[:stop])
         return GenerationResult(tokens=seqs, steps=steps,
                                 prefill_s=t1 - t0, decode_s=t2 - t1,
-                                host_syncs=host_syncs)
+                                host_syncs=host_syncs,
+                                speculative_k=spec,
+                                draft_tokens=draft_total,
+                                accepted_tokens=accept_total)
 
     # ------------------------------------------------------------ continuous
     def _as_requests(
@@ -1359,7 +1580,8 @@ class ServingEngine:
               prefix_cache: Optional[bool] = None,
               overcommit: float = 1.0,
               prefill_chunk: Optional[int] = None,
-              chaos: Optional[ChaosSchedule] = None) -> ServeResult:
+              chaos: Optional[ChaosSchedule] = None,
+              speculative_k: Optional[int] = None) -> ServeResult:
         """Continuous-batching decode over a request stream.
 
         ``requests`` may be ``Sentence``s, raw token arrays, or ``Request``
@@ -1447,8 +1669,22 @@ class ServingEngine:
           (``serving/chaos.py``): forced preemptions and synthetic slow
           rounds for the ``StepWatchdog``.  The test harness uses it to
           prove the preempt/resume identity.
+
+        ``speculative_k`` (greedy only) turns on **self-speculative
+        decoding**: every burst loop iteration drafts ``speculative_k``
+        tokens through the cheap ``draft_quant`` path, verifies them with
+        ONE batched multi-position pass through the engine's own ``quant``
+        path, and emits the longest agreeing prefix plus the verifier's
+        correction.  Output is bit-identical to ``speculative_k=None``
+        (lossless verification — emitted tokens always come from the
+        verifier); the win is wall-clock when the draft path is cheaper
+        and acceptance is high.  ``ServeResult`` reports
+        ``draft_tokens``/``accepted_tokens``/``acceptance_rate``.
         """
         if beam is not None:
+            if speculative_k:
+                raise ValueError("speculative decoding is greedy-only; "
+                                 "beam and speculative_k cannot combine")
             return self._serve_beam(
                 requests, n_slots=n_slots, beam=beam, alpha=alpha,
                 max_new_tokens=max_new_tokens,
@@ -1460,6 +1696,15 @@ class ServingEngine:
                 chaos=chaos)
         self._check_overload_args(overcommit, prefill_chunk, chaos,
                                   fused_admission)
+        spec = int(speculative_k or 0)
+        if spec < 0:
+            raise ValueError(f"speculative_k must be >= 0, got {spec}")
+        if spec and not hasattr(self.model, "decode_step_multi"):
+            raise ValueError(
+                "speculative decoding needs a model with decode_step_multi "
+                f"(multi-position verify); {type(self.model).__name__} "
+                "does not provide one")
+        spec_mult = spec + 1
         K = self._resolve_burst(burst_len)
         ctrl = self._burst_controller(K)
         reqs = self._as_requests(requests, max_new_tokens)
@@ -1470,14 +1715,20 @@ class ServingEngine:
                                burst_len=ctrl.k if ctrl else K,
                                fused_admission=fused_admission,
                                auto_burst=ctrl is not None,
-                               paged=self.paged, page_size=self.page_size)
+                               paged=self.paged, page_size=self.page_size,
+                               speculative_k=spec)
         if max(r.max_new_tokens for r in reqs) > self.max_len:
             raise ValueError("a request's max_new_tokens exceeds the "
                              f"engine KV capacity {self.max_len}")
         width = next_pow2(ctrl.max_burst if ctrl else K)
-        burst = self._greedy_burst_fn(width)
-        fused_burst = (self._fused_greedy_burst_fn(width)
-                       if fused_admission else None)
+        if spec:
+            burst = self._spec_greedy_burst_fn(width, spec)
+            fused_burst = (self._spec_fused_greedy_burst_fn(width, spec)
+                           if fused_admission else None)
+        else:
+            burst = self._greedy_burst_fn(width)
+            fused_burst = (self._fused_greedy_burst_fn(width)
+                           if fused_admission else None)
         enc_len = self._enc_bucket(reqs, pad_to_multiple)
         pc = self._resolve_prefix_cache(prefix_cache)
         stats0 = pc.stats.snapshot() if pc else None
@@ -1493,9 +1744,10 @@ class ServingEngine:
                         f"pool holds {allocator.n_pages}")
         # overcommit: admission allocates only next-burst pages; the loop
         # grows rows and preempts-by-spill under pressure.  The hint is
-        # the largest step cap a burst can take, so a freshly (re)admitted
-        # row never needs growth before its first burst.
-        burst_hint = ctrl.max_burst if ctrl else K
+        # the largest step cap a burst can take — under speculation every
+        # macro-step may append up to spec+1 KV positions, so the page
+        # reach scales by spec_mult or accepted writes would be dropped.
+        burst_hint = (ctrl.max_burst if ctrl else K) * spec_mult
         initial_fn = None
         if allocator is not None and overcommit > 1.0:
             initial_fn = lambda r: self._initial_pages(r, 1, burst_hint)
@@ -1526,6 +1778,8 @@ class ServingEngine:
         host_syncs = 0
         prefill_dispatches = 0
         encoder_tokens = 0
+        draft_tokens = 0
+        accepted_tokens = 0
         # fixed caps upload the device scalar once; auto rebuilds per round
         cap_fixed = None if ctrl else jnp.asarray(K, jnp.int32)
         # ---- overload machinery (all inert on an unloaded serve)
@@ -1594,15 +1848,19 @@ class ServingEngine:
                     continue
                 newp = allocator.alloc(extra)
                 while newp is None:
-                    victims = pick_victims(
+                    victims, covered = pick_victims(
                         [r for r in sched.slot_map.values() if r is not req],
                         pages_needed=extra - allocator.n_free,
                         key_fn=sched.victim_key,
                         pages_held_fn=lambda r: len(r.pages or []))
-                    if not victims:
+                    if not victims or not covered:
+                        # fail BEFORE spilling: preempting victims that
+                        # cannot cover the need pays spill + re-encode for
+                        # nothing and wedges anyway
                         raise RuntimeError(
                             "page growth wedged: no preemptable victim "
-                            f"for request {req.req_id} (need {extra} pages)")
+                            f"set covers request {req.req_id}'s need "
+                            f"({extra} pages)")
                     for v in victims:
                         preempt_req(v)
                     newp = allocator.alloc(extra)
@@ -1626,12 +1884,14 @@ class ServingEngine:
                 if short is None:
                     return
                 need = max(short["pages_short"], 1)
-                victims = pick_victims(
+                victims, covered = pick_victims(
                     list(sched.slot_map.values()), pages_needed=need,
                     key_fn=sched.victim_key,
                     pages_held_fn=lambda r: len(r.pages or []),
                     min_key=short["head_key"])
-                if not victims:
+                if not victims or not covered:
+                    # insufficient coverage: spilling these victims would
+                    # not let the head request in — keep them running
                     return
                 for v in victims:
                     preempt_req(v)
@@ -1733,8 +1993,9 @@ class ServingEngine:
                 by_id = {r.req_id: r for r in sched.slot_map.values()}
                 for rid in chaos.victims_for(rnd, list(by_id)):
                     preempt_req(by_id[rid])
-            # (b) overcommit growth for mid-flight rows (may itself evict)
-            grow_rows(ctrl.k if ctrl else K)
+            # (b) overcommit growth for mid-flight rows (may itself evict);
+            # speculative macro-steps write up to spec+1 positions each
+            grow_rows((ctrl.k if ctrl else K) * spec_mult)
             # (c) admission pressure: evict strictly-less-urgent victims
             preempt_for_admission()
             plan = None
@@ -1849,6 +2110,7 @@ class ServingEngine:
             t = now()
             freed = []
             wasted_row_steps = 0
+            emit_col = width * spec_mult    # first packed-counter column
             for slot, req in list(sched.slot_map.items()):
                 if slot in staging:
                     # mid-stage rows are inert grid: their ring columns
@@ -1858,6 +2120,30 @@ class ServingEngine:
                     continue
                 if req.first_token_s is None:
                     req.first_token_s = t   # fused: emitted by this burst
+                if spec:
+                    # speculative ring: rows emit different counts per
+                    # macro-step, so the drain is driven by the per-row
+                    # emitted counter, and busy/wasted are counted in
+                    # macro-steps the row was live (act column).  Release
+                    # steps are attributed at burst granularity.
+                    n_emit = int(buf_host[slot, emit_col])
+                    act = int(buf_host[slot, emit_col + 3])
+                    for i in range(n_emit):
+                        tok = int(buf_host[slot, i])
+                        if tok == self.eos_id:
+                            freed.append(sched.release(
+                                req, t, step=step_base + steps))
+                            break
+                        req.tokens.append(tok)
+                        if len(req.tokens) >= req.max_new_tokens:
+                            freed.append(sched.release(
+                                req, t, step=step_base + steps))
+                            break
+                    busy_slot_steps += act
+                    wasted_row_steps += steps - act
+                    draft_tokens += int(buf_host[slot, emit_col + 1])
+                    accepted_tokens += int(buf_host[slot, emit_col + 2])
+                    continue
                 used = steps
                 for s in range(steps):
                     tok = int(buf_host[slot, s])
@@ -1909,6 +2195,9 @@ class ServingEngine:
                            paged=self.paged, page_size=self.page_size,
                            pages_in_use=allocator.in_use if allocator else 0,
                            page_hwm=allocator.hwm if allocator else 0,
+                           speculative_k=spec,
+                           draft_tokens=draft_tokens,
+                           accepted_tokens=accepted_tokens,
                            **self._overload_result_fields(
                                overcommit, preempt_count, store, watchdog,
                                sched, reqs, allocator, peak_running,
@@ -2155,15 +2444,17 @@ class ServingEngine:
                 extra = extra_pr * b
                 newp = allocator.alloc(extra)
                 while newp is None:
-                    victims = pick_victims(
+                    victims, covered = pick_victims(
                         [r for r in sched.slot_map.values() if r is not req],
                         pages_needed=extra - allocator.n_free,
                         key_fn=sched.victim_key,
                         pages_held_fn=lambda r: len(r.pages or []))
-                    if not victims:
+                    if not victims or not covered:
+                        # fail BEFORE spilling (see greedy grow_rows)
                         raise RuntimeError(
                             "page growth wedged: no preemptable victim "
-                            f"for request {req.req_id} (need {extra} pages)")
+                            f"set covers request {req.req_id}'s need "
+                            f"({extra} pages)")
                     for v in victims:
                         preempt_req(v)
                     newp = allocator.alloc(extra)
@@ -2189,12 +2480,14 @@ class ServingEngine:
                 if short is None:
                     return
                 need = max(short["pages_short"], 1)
-                victims = pick_victims(
+                victims, covered = pick_victims(
                     list(sched.slot_map.values()), pages_needed=need,
                     key_fn=sched.victim_key,
                     pages_held_fn=lambda r: len(r.pages or []),
                     min_key=short["head_key"])
-                if not victims:
+                if not victims or not covered:
+                    # insufficient coverage: spilling these victims would
+                    # not let the head request in — keep them running
                     return
                 for v in victims:
                     preempt_req(v)

@@ -18,7 +18,7 @@ gathers/scatters live in the engine's jitted ``_spill_fn``/``_resume_fn``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -102,7 +102,7 @@ class SpillStore:
 def pick_victims(candidates: Sequence, *, pages_needed: int,
                  key_fn, pages_held_fn,
                  exclude: Iterable = (),
-                 min_key: Optional[float] = None) -> List:
+                 min_key: Optional[float] = None) -> Tuple[List, bool]:
     """Choose running requests to preempt until ``pages_needed`` pages
     would come free.
 
@@ -115,11 +115,18 @@ def pick_victims(candidates: Sequence, *, pages_needed: int,
     admission-driven preemption (a request never evicts an equally or
     more urgent one, so two equal-urgency requests cannot ping-pong).
 
-    Returns the (possibly insufficient) victim list; the caller checks
-    whether the freed pages actually cover the need.
+    Returns ``(victims, covered)``: ``covered`` says whether evicting the
+    listed victims frees at least ``pages_needed`` pages.  The contract
+    is uniform across ``min_key`` modes — earlier revisions returned an
+    *insufficient* victim list in the ``min_key=None`` case, so a caller
+    that preempted without re-checking paid the spill + re-encode cost of
+    every victim and still came up short.  Callers decide: mandatory
+    growth may evict partial coverage (or fail loudly), admission-driven
+    preemption must not evict at all unless the head request actually
+    fits afterwards.
     """
     if pages_needed <= 0:
-        return []
+        return [], True
     excluded = {id(r) for r in exclude}
     pool = [r for r in candidates if id(r) not in excluded]
     if min_key is not None:
@@ -134,5 +141,4 @@ def pick_victims(candidates: Sequence, *, pages_needed: int,
             break
         victims.append(r)
         freed += pages_held_fn(r)
-    return victims if freed >= pages_needed else (
-        victims if min_key is None else [])
+    return victims, freed >= pages_needed

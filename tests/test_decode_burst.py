@@ -242,6 +242,61 @@ def test_adaptive_burst_controller_unit():
         AdaptiveBurst(max_burst=0)
 
 
+def test_adaptive_burst_no_spurious_shrink_on_first_eos():
+    """Regression: the first *measured* burst's per-step time carries the
+    full sync overhead, so seeding ``t_sync = wall − steps·t_step ≈ 0``
+    from it made ANY mid-burst EOS in the next bursts look more expensive
+    than a sync and shrink ``k`` spuriously.  The controller must not
+    adapt until both estimates are grounded."""
+    from repro.serving.burst_control import AdaptiveBurst
+    ctrl = AdaptiveBurst(start=8, max_burst=32)
+    ctrl.observe(5.0, 8, 0, 4)               # burn-in 1: compile pass
+    assert ctrl.k == 8 and ctrl.shrinks == 0 and ctrl.grows == 0
+    # burn-in 2 (first measured burst): seeds estimates, must NOT adapt —
+    # even though it reports mid-burst waste
+    ctrl.observe(1.0, 8, 8, 4)
+    assert ctrl.k == 8 and ctrl.shrinks == 0 and ctrl.grows == 0
+    assert ctrl.t_step_s > 0.0 and ctrl.t_sync_s > 0.0
+    # the old controller shrank HERE: waste_s = (8/4)·t_step > t_sync ≈ 0.
+    # With t_sync seeded from a wall fraction, modest one-off waste
+    # (2 whole-grid steps ≈ 0.25 s vs seeded sync 0.1 s) may still shrink
+    # once on overwhelming evidence, but a *sync-dominated* trace with a
+    # stray EOS must not collapse: waste far below the sync estimate.
+    before = ctrl.k
+    ctrl.observe(1.0, 8, 1, 4)               # one row finished 1 step early
+    assert ctrl.k >= before // 2             # at worst one halving…
+    for _ in range(6):                       # …and a clean trace re-grows
+        ctrl.observe(1.0, 8, 0, 4)
+    assert ctrl.k >= before
+    # invariants: k stays pow2 in [1, max_burst] through arbitrary traces
+    seen = set()
+    for wall, steps, waste in [(0.01, 1, 0), (9.0, 32, 128), (0.5, 8, 3),
+                               (2.0, 16, 64), (0.001, 1, 0), (3.0, 32, 0)]:
+        k = ctrl.observe(wall, steps, waste, 4)
+        seen.add(k)
+    assert all(1 <= k <= 32 and (k & (k - 1)) == 0 for k in seen)
+
+
+def test_adaptive_burst_sync_dominated_trace_never_collapses():
+    """With bursts whose wall time is dominated by the fixed sync cost
+    (true step cost 1 ms, sync ~0.1 s) and a little EOS waste every
+    burst, the controller must not collapse to k=1: the spurious-shrink
+    bug (t_sync seeded ≈0 from the first measured burst) drove exactly
+    this trace to the floor, paying a full sync per decoded token."""
+    from repro.serving.burst_control import AdaptiveBurst
+    ctrl = AdaptiveBurst(start=4, max_burst=64)
+    ctrl.observe(5.0, 4, 0, 8)               # compile
+    ctrl.observe(0.2, 4, 2, 8)               # first measured: seeds only
+    assert ctrl.k == 4 and ctrl.shrinks == 0 and ctrl.grows == 0
+    for _ in range(24):
+        k = ctrl.k
+        ctrl.observe(0.1 + 0.001 * k, k, 2, 8)
+        assert 1 < ctrl.k <= 64 and (ctrl.k & (ctrl.k - 1)) == 0
+    # shrink/grow may oscillate while the estimates settle, but the cap
+    # must end no lower than it started in a sync-dominated regime
+    assert ctrl.k >= 4
+
+
 def test_serve_auto_burst_identity(setup, reference_outputs):
     """burst_len='auto' (controller-paced caps under one compiled ring
     bucket) stays token-identical to the fixed-K/per-request output."""

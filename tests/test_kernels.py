@@ -113,6 +113,35 @@ def test_quantize_static(rng):
     assert int(jnp.max(jnp.abs(got.data))) <= 127
 
 
+# Awkward row counts: 8 < M < block_rows with M % 8 != 0 used to pick a
+# sublane-misaligned Pallas block (bm = M) — interpret mode accepted it
+# but real TPU lowering rejects non-multiple-of-8 block rows.  The sweep
+# pins the rounded-up block shape to reference-quantizer parity.
+AWKWARD_M = [9, 12, 17, 100, 127, 129, 250, 255, 257]
+
+
+@pytest.mark.parametrize("M", AWKWARD_M)
+def test_quantize_rowwise_awkward_rows(rng, M):
+    from repro.kernels.quantize import quantize_rowwise_pallas
+    x = jnp.asarray(rng.normal(size=(M, 64)) * 7, jnp.float32)
+    q, scale = quantize_rowwise_pallas(x, interpret=True)
+    want = ops.quantize_rowwise(x, impl="xla")
+    assert q.shape == (M, 64) and scale.shape == (M, 1)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(want.data))
+    np.testing.assert_allclose(np.asarray(scale), np.asarray(want.scale),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("M", AWKWARD_M)
+def test_quantize_static_awkward_rows(rng, M):
+    from repro.kernels.quantize import quantize_static_pallas
+    x = jnp.asarray(rng.normal(size=(M, 48)) * 5, jnp.float32)
+    q = quantize_static_pallas(x, jnp.float32(3.0), interpret=True)
+    want = ops.quantize_static(x, 3.0, impl="xla")
+    assert q.shape == (M, 48)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(want.data))
+
+
 # ---------------------------------------------------------------------------
 # decode attention (int8 KV cache)
 # ---------------------------------------------------------------------------

@@ -298,23 +298,41 @@ def test_pick_victims_least_urgent_first():
     a = _mk_running(0, 1.0, 2, step=0)
     b = _mk_running(1, 9.0, 2, step=1)
     c = _mk_running(2, 5.0, 2, step=2)
-    got = pick_victims([a, b, c], pages_needed=3, key_fn=key_fn,
-                       pages_held_fn=held)
+    got, covered = pick_victims([a, b, c], pages_needed=3, key_fn=key_fn,
+                                pages_held_fn=held)
     assert [r.req_id for r in got] == [1, 2]     # latest deadline evicted 1st
+    assert covered
     # min_key (anti-thrash): equal urgency never evicts
     assert pick_victims([a, b], pages_needed=1, key_fn=key_fn,
-                        pages_held_fn=held, min_key=9.0) == []
-    assert [r.req_id for r in
-            pick_victims([a, b], pages_needed=1, key_fn=key_fn,
-                         pages_held_fn=held, min_key=5.0)] == [1]
-    # insufficient pool: partial without min_key, empty with it
-    assert len(pick_victims([a], pages_needed=99, key_fn=key_fn,
-                            pages_held_fn=held)) == 1
-    assert pick_victims([a], pages_needed=99, key_fn=key_fn,
-                        pages_held_fn=held, min_key=5.0) == []
+                        pages_held_fn=held, min_key=9.0) == ([], False)
+    got, covered = pick_victims([a, b], pages_needed=1, key_fn=key_fn,
+                                pages_held_fn=held, min_key=5.0)
+    assert [r.req_id for r in got] == [1] and covered
     # exclusion protects rows that must survive the round
-    assert pick_victims([a, b], pages_needed=1, key_fn=key_fn,
-                        pages_held_fn=held, exclude=[b])[0] is a
+    got, covered = pick_victims([a, b], pages_needed=1, key_fn=key_fn,
+                                pages_held_fn=held, exclude=[b])
+    assert got[0] is a and covered
+    # nothing needed → no victims, trivially covered
+    assert pick_victims([a, b], pages_needed=0, key_fn=key_fn,
+                        pages_held_fn=held) == ([], True)
+
+
+def test_pick_victims_insufficient_coverage_flagged():
+    """Regression (wasted preemption): when no victim set can free enough
+    pages, the caller must see ``covered=False`` — the old ``min_key=None``
+    contract returned the insufficient list bare, so a caller that didn't
+    re-check spilled every victim and still came up short."""
+    key_fn = lambda r: r.deadline_s
+    held = lambda r: len(r.pages)
+    a = _mk_running(0, 1.0, 2, step=0)
+    b = _mk_running(1, 9.0, 2, step=1)
+    got, covered = pick_victims([a, b], pages_needed=99, key_fn=key_fn,
+                                pages_held_fn=held)
+    assert [r.req_id for r in got] == [1, 0] and not covered
+    # min_key mode reports the same uniform contract
+    got, covered = pick_victims([a, b], pages_needed=99, key_fn=key_fn,
+                                pages_held_fn=held, min_key=5.0)
+    assert [r.req_id for r in got] == [1] and not covered
 
 
 def test_chaos_schedule_determinism():

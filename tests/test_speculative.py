@@ -1,0 +1,254 @@
+"""Self-speculative decoding (ISSUE 8): INT8-path drafts verified by one
+batched multi-position pass inside the jitted burst loop.
+
+The contract under test is **lossless verification**: greedy output must
+be bit-identical to the engine's own non-speculative path for every
+``speculative_k`` × ``burst_len`` (incl. auto) × fused/unfused ×
+FP/INT8-verify combination — speculation may only change wall-clock and
+the draft/accept counters, never a token.  On top of the identity matrix:
+mid-burst EOS inside an accepted draft window, cursor rollback leaving
+allocator/page state fully reclaimed, composition with chaos preemption +
+overcommit growth, and a hypothesis property pinning the accept rule to
+"longest agreeing prefix plus the verifier's correction".
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config
+from repro.core import QuantPolicy, quantize_model
+from repro.data import make_corpus
+from repro.data.synthetic import pad_batch
+from repro.models import build_model
+from repro.serving import ServingEngine, make_chaos
+from repro.serving.engine import _spec_accept
+
+MAX_LEN = 32
+PAGE_SIZE = 8
+BUDGETS = [3, 7, 0, 5, 7, 2, 6, 4, 7, 3]
+SPEC_KS = [1, 2, 4]
+# 64 and "auto" share one compiled ring bucket (AUTO_MAX_BURST == 64), so
+# the matrix covers three cap regimes for two bursts' worth of compiles
+BURST_LENS = [2, 64, "auto"]
+
+_CACHED = {}
+
+
+def _module_state():
+    if "engines" not in _CACHED:
+        cfg = get_config("transformer-base").reduced(
+            vocab=32, d_model=48, n_layers=1, n_enc_layers=1, d_ff=96,
+            n_heads=2, n_kv_heads=2, head_dim=24)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        qparams, qctx = quantize_model(params, {},
+                                       QuantPolicy(act_quant="dynamic"))
+        _CACHED.update(
+            cfg=cfg, model=model, params=params, qparams=qparams, qctx=qctx,
+            engines={
+                "fp": ServingEngine(model, params, max_len=MAX_LEN),
+                "int8_paged": ServingEngine(model, qparams, quant=qctx,
+                                            max_len=MAX_LEN, paged=True,
+                                            page_size=PAGE_SIZE),
+            },
+            srcs=[r.src for r in make_corpus(len(BUDGETS), cfg.vocab,
+                                             seed=11, max_words=8)])
+    return _CACHED
+
+
+def _ref_tokens(engine, srcs, **kw):
+    key = ("ref", id(engine)) + tuple(sorted(kw.items()))
+    if key not in _CACHED:
+        res = engine.serve(srcs, n_slots=4, max_new_tokens=BUDGETS, **kw)
+        _CACHED[key] = [list(np.asarray(res.tokens_for(i)))
+                        for i in range(len(srcs))]
+    return _CACHED[key]
+
+
+# ------------------------------------------------------------ identity matrix
+@pytest.mark.parametrize("quant", ["fp", "int8_paged"])
+@pytest.mark.parametrize("fused", [True, False])
+def test_serve_speculative_identity_matrix(quant, fused):
+    s = _module_state()
+    eng = s["engines"][quant]
+    ref = _ref_tokens(eng, s["srcs"])
+    for k in SPEC_KS:
+        for bl in BURST_LENS:
+            res = eng.serve(s["srcs"], n_slots=4, max_new_tokens=BUDGETS,
+                            burst_len=bl, fused_admission=fused,
+                            speculative_k=k)
+            for i in range(len(s["srcs"])):
+                assert list(np.asarray(res.tokens_for(i))) == ref[i], \
+                    (quant, fused, k, bl)
+            assert res.speculative_k == k
+            assert res.draft_tokens > 0
+            assert 0 <= res.accepted_tokens <= res.draft_tokens
+            assert 0.0 <= res.acceptance_rate <= 1.0
+            assert res.metrics()["acceptance_rate"] == res.acceptance_rate
+
+
+def test_generate_speculative_identity():
+    s = _module_state()
+    eng = s["engines"]["fp"]
+    src, lens = pad_batch([x for x in s["srcs"][:4]])
+    batch = {"src_tokens": src, "src_lengths": lens}
+    base = eng.generate(batch, max_new_tokens=9)
+    for k in SPEC_KS:
+        res = eng.generate(batch, max_new_tokens=9, speculative_k=k)
+        for a, b in zip(base.tokens, res.tokens):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert res.speculative_k == k and res.draft_tokens > 0
+        assert 0.0 <= res.acceptance_rate <= 1.0
+
+
+def test_speculative_distinct_draft_context_still_lossless():
+    """A deliberately crude draft context (coarse static activation
+    thresholds — cheap, numerically different from the dynamic verifier)
+    must lower acceptance at most, never change a token: emitted tokens
+    always come from the verifier."""
+    from repro.core.ptq import QuantContext
+    s = _module_state()
+    draft_ctx = QuantContext(policy=QuantPolicy(act_quant="static",
+                                                default_amax=4.0))
+    eng = ServingEngine(s["model"], s["qparams"], quant=s["qctx"],
+                        draft_quant=draft_ctx, max_len=MAX_LEN,
+                        paged=True, page_size=PAGE_SIZE)
+    base = eng.serve(s["srcs"], n_slots=4, max_new_tokens=BUDGETS)
+    res = eng.serve(s["srcs"], n_slots=4, max_new_tokens=BUDGETS,
+                    speculative_k=3)
+    for a, b in zip(base.requests, res.requests):
+        assert a.tokens == b.tokens
+    assert res.draft_tokens > 0
+
+
+def test_speculative_rejects_beam_and_bad_k():
+    s = _module_state()
+    eng = s["engines"]["fp"]
+    with pytest.raises(ValueError):
+        eng.serve(s["srcs"][:2], n_slots=4, max_new_tokens=4, beam=2,
+                  speculative_k=2)
+    with pytest.raises(ValueError):
+        eng.serve(s["srcs"][:2], n_slots=4, max_new_tokens=4,
+                  speculative_k=-1)
+    with pytest.raises(ValueError):
+        eng.generate({"src_tokens": np.zeros((1, 4), np.int32),
+                      "src_lengths": np.asarray([4], np.int32)},
+                     speculative_k=-3)
+
+
+# ------------------------------------------------- mid-burst EOS in a window
+def test_speculative_eos_inside_accepted_window():
+    """EOS emitted by the verifier *inside* an accepted draft window must
+    terminate the row exactly where sequential decode would: find a
+    frequently emitted token via a probe serve, rebuild the engine with it
+    as eos_id, and pin the speculative output to the non-speculative one."""
+    s = _module_state()
+    probe = s["engines"]["fp"].serve(s["srcs"], n_slots=4,
+                                     max_new_tokens=BUDGETS)
+    emitted = [t for r in probe.requests for t in r.tokens]
+    assert emitted
+    fake_eos = int(np.bincount(emitted).argmax())
+    eng = ServingEngine(s["model"], s["params"], max_len=MAX_LEN,
+                        eos_id=fake_eos)
+    base = eng.serve(s["srcs"], n_slots=4, max_new_tokens=BUDGETS)
+    assert any(len(r.tokens) < r.max_new_tokens for r in base.requests), \
+        "probe failed to produce a mid-budget EOS"
+    for k in (2, 4):
+        res = eng.serve(s["srcs"], n_slots=4, max_new_tokens=BUDGETS,
+                        speculative_k=k, burst_len=64)
+        for a, b in zip(base.requests, res.requests):
+            assert a.tokens == b.tokens, (k, a.req_id)
+
+
+# ------------------------------------------------------------- page rollback
+def test_speculative_rollback_full_reclaim():
+    """Rejected draft positions only ever touch KV past the accepted
+    cursor: after a speculative serve the allocator must be exactly as
+    reclaimed as after the step-by-step serve (no leaked or double-freed
+    pages, same reservation high-water mark)."""
+    s = _module_state()
+    eng = s["engines"]["int8_paged"]
+    base = eng.serve(s["srcs"], n_slots=4, max_new_tokens=BUDGETS)
+    res = eng.serve(s["srcs"], n_slots=4, max_new_tokens=BUDGETS,
+                    speculative_k=4)
+    assert res.pages_in_use == 0
+    assert res.page_hwm == base.page_hwm
+    for a, b in zip(base.requests, res.requests):
+        assert a.tokens == b.tokens
+
+
+# ------------------------------------------------------- chaos × speculation
+@pytest.mark.parametrize("k", [2, 4])
+def test_speculative_chaos_identity(k):
+    """Speculation composed with forced preemption + overcommit growth:
+    tokens identical to an unloaded non-speculative serve, every page
+    reclaimed, spill store drained.  Overcommit exercises the spec-scaled
+    page growth (each macro-step may append spec+1 KV positions)."""
+    s = _module_state()
+    eng = s["engines"]["int8_paged"]
+    budgets = [13, 17, 0, 15, 16, 12, 14, 13, 17, 15]
+    base = eng.serve(s["srcs"], n_slots=4, max_new_tokens=budgets)
+    # burst_len=1: a speculative burst emits up to k+1 tokens per round,
+    # so requests span several rounds and the round-edge chaos schedule
+    # actually catches mid-flight victims (longer bursts finish a whole
+    # admission wave inside one round — nothing left to preempt)
+    res = eng.serve(s["srcs"], n_slots=4, max_new_tokens=budgets,
+                    speculative_k=k, overcommit=1.5, burst_len=1,
+                    chaos=make_chaos(4, n_rounds=64, preempt_every=1))
+    assert res.preemptions > 0          # the schedule actually fired
+    for a, b in zip(base.requests, res.requests):
+        assert a.tokens == b.tokens
+    assert res.pages_in_use == 0
+    assert res.spill_events == res.restore_events
+
+
+# ------------------------------------------------------- accept-rule property
+def _ref_accept(d_row, v_row, remaining, eos):
+    """Pure-python oracle for one row of _spec_accept."""
+    s = len(d_row)
+    a = 0
+    while a < s and d_row[a] == v_row[a]:
+        a += 1
+    cand = a + 1
+    eos_first = next((i for i, t in enumerate(v_row) if t == eos), s + 1)
+    stop = min(cand, eos_first + 1, remaining) if remaining > 0 else 0
+    hit_eos = remaining > 0 and (eos_first + 1) <= min(cand, remaining)
+    return stop, hit_eos, min(a, stop)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=5),
+                min_size=2, max_size=10),
+       st.integers(min_value=0, max_value=12),
+       st.integers(min_value=0, max_value=5))
+def test_accept_rule_longest_agreeing_prefix(seq, remaining, eos):
+    """The accepted prefix is always the longest agreeing one, clamped by
+    budget and EOS; the emitted window always ends with a verifier token."""
+    s = len(seq) - 1
+    d_row = seq[:s]
+    # verifier row (length s+1): either shifted (agreement only where the
+    # sequence happens to repeat) or a full copy of the draft + one more
+    v_row = (list(seq[1:]) + [seq[0]]) if remaining % 2 \
+        else list(d_row) + [seq[0]]
+    d = jnp.asarray([d_row], jnp.int32)
+    v = jnp.asarray([v_row], jnp.int32)
+    rem = jnp.asarray([remaining], jnp.int32)
+    stop, hit_eos, acc = _spec_accept(d, v, rem, eos)
+    want = _ref_accept(d_row, v_row, remaining, eos)
+    got = (int(stop[0]), bool(hit_eos[0]), int(acc[0]))
+    assert got == want, (d_row, v_row, remaining, eos, got, want)
+    # invariants: at least one token per active row, never over budget,
+    # accepted prefix is exactly the agreeing run inside the window
+    if remaining > 0:
+        assert 1 <= got[0] <= min(s + 1, remaining)
+    else:
+        assert got == (0, False, 0)
+    assert got[2] <= got[0]
+    for i in range(got[2]):
+        assert d_row[i] == v_row[i]
+    if got[0] == got[2] and got[0] < min(s, remaining) and not got[1]:
+        # window ended below every clamp → the next pair must disagree
+        assert got[0] == s or d_row[got[0]] != v_row[got[0]]
