@@ -1,0 +1,176 @@
+"""Multi-chip serving validation: sharded bursts vs the roofline model.
+
+Runs the SAME skewed request mix through the continuous engine unsharded
+and tensor-parallel (``model ∈ {2,4,8}`` forced host devices — the
+``launch/dryrun.py`` trick), asserting **bit-identical tokens** and
+**unchanged host syncs** (GSPMD's all-reduces stay inside the burst's
+``while_loop``; a serve round remains one dispatch + one sync).  Each
+mesh row reports the measured per-decode-step time next to
+``launch/roofline.sharded_decode_cell``'s prediction.
+
+What is *asserted* vs *reported*: host devices share one CPU, so
+measured step time does not follow the TPU constants — the bench only
+reports that comparison.  The dimension the host backend models
+faithfully is the **collective wire bytes**: the compiled SPMD decode
+step is parsed with ``hlo_analysis.analyze_collectives`` and the
+per-device ring bytes must match the roofline's analytic
+``decode_collective_bytes`` within 2× (asserted, per tp > 1).
+
+A final leg routes the mix across 2 single-mesh engine replicas
+(``serving/router.py``), asserting token identity and per-replica
+``peak_running`` within 1 of an even split.
+
+Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+          PYTHONPATH=src:. python benchmarks/bench_sharded_serve.py --smoke
+(the script sets the flag itself when unset)
+"""
+
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.common import measure
+from repro.configs import get_config
+from repro.core.ptq import FP_CONTEXT
+from repro.data import make_corpus
+from repro.launch.hlo_analysis import analyze_collectives
+from repro.launch.mesh import make_host_mesh
+from repro.launch.roofline import sharded_decode_cell
+from repro.models import build_model
+from repro.serving import ReplicaRouter, ServingEngine
+
+N_REQUESTS = 24
+N_SLOTS = 8
+MAX_LEN = 64
+PAGE_SIZE = 8
+SHORT_BUDGET, LONG_BUDGET = 4, 32
+MEASURE_PASSES = 3
+COLLECTIVE_TOL = 2.0      # asserted: |measured/predicted| within this factor
+
+
+def _setup(n_requests: int):
+    cfg = get_config("transformer-base").reduced(
+        vocab=64, d_model=128, n_layers=2, n_enc_layers=2, d_ff=256,
+        n_heads=4, n_kv_heads=4, head_dim=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    requests = make_corpus(n_requests, cfg.vocab, seed=9, max_words=8)
+    rng = np.random.default_rng(0)
+    budgets = [int(b) for b in np.where(rng.random(n_requests) < 0.75,
+                                        SHORT_BUDGET, LONG_BUDGET)]
+    return cfg, model, params, requests, budgets
+
+
+def _tokens(res):
+    return [np.asarray(r.tokens, np.int32) for r in res.requests]
+
+
+def _engine(model, params, mesh=None):
+    return ServingEngine(model, params, quant=FP_CONTEXT, max_len=MAX_LEN,
+                         burst_len=8, paged=True, page_size=PAGE_SIZE,
+                         mesh=mesh)
+
+
+def _measured_collective_bytes(model, engine, n_slots: int) -> int:
+    """Per-device wire bytes of ONE compiled sharded decode step, parsed
+    out of its HLO — the measurement the roofline prediction is checked
+    against (ring formulas + while-trip multipliers; a single step has
+    none, so this is the per-step figure)."""
+    state = engine._shard_state(model.init_decode_state(
+        n_slots, engine.max_len, quantized=engine.quant.quantize_kv,
+        enc_len=16, paged=True, page_size=engine.page_size,
+        n_pages=n_slots * engine._max_pages))
+    tokens = np.zeros((n_slots,), np.int32)
+    step = jax.jit(lambda p, t, s:
+                   model.decode_step(p, t, s, quant=engine.quant))
+    txt = step.lower(engine.params, tokens, state).compile().as_text()
+    return int(analyze_collectives(txt)["total_bytes"])
+
+
+def run(smoke: bool) -> None:
+    n_requests = 12 if smoke else N_REQUESTS
+    tps = (2, 4) if smoke else (2, 4, 8)
+    cfg, model, params, requests, budgets = _setup(n_requests)
+    n_dev = len(jax.devices())
+    print(f"devices: {n_dev}  requests: {n_requests}  "
+          f"slots: {N_SLOTS}  model: {cfg.name} (reduced)")
+
+    base = _engine(model, params)
+    serve0 = lambda: base.serve(requests, n_slots=N_SLOTS,
+                                max_new_tokens=budgets)
+    ref, times0, warm0 = measure(serve0, warmup=1, passes=MEASURE_PASSES)
+    step0 = min(times0) / max(ref.decode_steps, 1)
+    print(f"\n| mesh | step time s | roofline bound s | dominant | "
+          f"coll bytes meas | coll bytes pred | identical |")
+    print("|---|---|---|---|---|---|---|")
+    print(f"| 1 (unsharded) | {step0:.3e} | — | — | 0 | 0 | ref |")
+
+    for tp in tps:
+        if tp > n_dev:
+            print(f"| {tp} | skipped: only {n_dev} devices |")
+            continue
+        mesh = make_host_mesh(data=1, model=tp)
+        eng = _engine(model, params, mesh=mesh)
+        serve = lambda: eng.serve(requests, n_slots=N_SLOTS,
+                                  max_new_tokens=budgets)
+        res, times, _ = measure(serve, warmup=1, passes=MEASURE_PASSES)
+
+        same = all(np.array_equal(a, b)
+                   for a, b in zip(_tokens(ref), _tokens(res)))
+        assert same, f"tp={tp}: sharded serve tokens diverged"
+        assert res.host_syncs == ref.host_syncs, \
+            f"tp={tp}: host syncs {res.host_syncs} != {ref.host_syncs}"
+
+        cell = sharded_decode_cell(cfg, rows=N_SLOTS, tp=tp,
+                                   quantized=False)
+        meas_coll = _measured_collective_bytes(model, eng, N_SLOTS)
+        pred_coll = res.collective_bytes_per_step
+        step_s = min(times) / max(res.decode_steps, 1)
+        print(f"| {tp} | {step_s:.3e} | {cell['step_time_bound_s']:.3e} "
+              f"| {cell['dominant'].split('_')[0]} | {meas_coll} "
+              f"| {pred_coll} | {same} |")
+        # the host backend compiles real ring collectives — their wire
+        # bytes are the dimension the roofline models faithfully
+        assert pred_coll > 0, f"tp={tp}: no predicted collective bytes"
+        assert meas_coll > 0, f"tp={tp}: compiled step has no collectives"
+        ratio = meas_coll / pred_coll
+        assert 1 / COLLECTIVE_TOL <= ratio <= COLLECTIVE_TOL, \
+            (f"tp={tp}: measured collective bytes {meas_coll} vs predicted "
+             f"{pred_coll} (ratio {ratio:.2f}) outside {COLLECTIVE_TOL}x")
+
+    # ------------------------------------------------ data-parallel router
+    replicas = 2
+    router = ReplicaRouter([_engine(model, params)
+                            for _ in range(replicas)])
+    rres = router.serve(requests, n_slots=N_SLOTS, max_new_tokens=budgets)
+    same = all(np.array_equal(ref.tokens_for(r.req_id),
+                              rres.tokens_for(r.req_id))
+               for r in rres.requests)
+    assert same, "router: tokens diverged from single-engine serve"
+    even = n_requests / replicas
+    peaks = rres.peak_running_per_replica
+    # every replica ran its whole share concurrently (slots >= share), so
+    # peak_running == share size: within 1 of an even split
+    assert all(abs(p - even) <= 1 for p in peaks), \
+        f"router balance: peak_running {peaks} vs even split {even}"
+    print(f"\nrouter x{replicas}: peak_running {peaks} (even split {even}), "
+          f"tokens/s {rres.tokens_per_s:.1f}, identical: {same}")
+    print("\nall sharded-serve assertions passed")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    run(args.smoke)
+
+
+if __name__ == "__main__":
+    main()

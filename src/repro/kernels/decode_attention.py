@@ -26,6 +26,11 @@ from repro.kernels.compat import tpu_compiler_params
 
 NEG_INF = -1e30
 DEFAULT_BLOCK_S = 256
+# f32/int8-dequant compute tiles want ≥ 8 rows in the sublane dim: a paged
+# grid step covering a single page_size < 8 page would run its dots on
+# mostly-empty tiles, so small-page pools fetch SUBLANE // page_size pages
+# per step instead (see decode_attention_paged_pallas)
+SUBLANE = 8
 
 
 def _kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, len_ref, out_ref,
@@ -181,7 +186,67 @@ def _paged_kernel(tab_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, len_ref,
         out_ref[0, 0] = out.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def _paged_kernel_multi(tab_ref, q_ref, *refs, s_steps: int, page_size: int,
+                        block_pages: int, sm_scale: float):
+    """Multi-page variant of ``_paged_kernel``: one grid step DMAs
+    ``block_pages`` *consecutive logical slots* (each its own BlockSpec
+    operand, each landing wherever its table entry points) and runs one
+    online-softmax update over their concatenation — so a
+    ``page_size < 8`` pool still feeds the dots full sublane tiles."""
+    F = block_pages
+    k_refs, ks_refs = refs[0:F], refs[F:2 * F]
+    v_refs, vs_refs = refs[2 * F:3 * F], refs[3 * F:4 * F]
+    len_ref, out_ref = refs[4 * F], refs[4 * F + 1]
+    m_ref, l_ref, acc_ref = refs[4 * F + 2:4 * F + 5]
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # (G, dh)
+    # consecutive slots hold consecutive token positions, so stacking the
+    # pages along the sublane dim keeps the position iota contiguous
+    k = jnp.concatenate(
+        [r[0, :, 0, :] for r in k_refs], axis=0).astype(jnp.float32)
+    ks = jnp.concatenate([r[0, :, 0] for r in ks_refs], axis=0)
+    k = k * ks[:, None]                                      # (F·ps, dh)
+    scores = jax.lax.dot_general(                            # (G, F·ps)
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale
+
+    pos = (s * F * page_size
+           + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1))
+    valid = pos < len_ref[0, 0]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)
+    p = jnp.where(valid, p, 0.0)
+
+    v = jnp.concatenate(
+        [r[0, :, 0, :] for r in v_refs], axis=0).astype(jnp.float32)
+    vs = jnp.concatenate([r[0, :, 0] for r in vs_refs], axis=0)
+    v = v * vs[:, None]                                      # (F·ps, dh)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s == s_steps - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret",
+                                             "pages_per_block"))
 def decode_attention_paged_pallas(
     q: jax.Array,            # (B, H, dh)
     k_pages: jax.Array,      # (P, ps, HKV, dh) int8 page pool
@@ -193,6 +258,7 @@ def decode_attention_paged_pallas(
     *,
     sm_scale: float,
     interpret: bool = False,
+    pages_per_block: int = 0,  # 0 = auto: SUBLANE // ps for small pages
 ) -> jax.Array:
     """Flash-decode over a paged INT8 KV cache (paper §5.3, paged).
 
@@ -201,6 +267,12 @@ def decode_attention_paged_pallas(
     before the body runs and the K/V DMAs fetch pages directly — the
     paper's "big tensor stops moving" taken to its endpoint: decode reads
     exactly the pages a row owns, wherever they sit in the pool.
+
+    When ``page_size < SUBLANE`` each grid step covers
+    ``pages_per_block = SUBLANE // page_size`` consecutive slots (auto
+    unless overridden) so the per-step dot still fills the 8-row sublane
+    tile; block tables fill slots densely from the front, so a block's
+    pages hold contiguous positions and the tail mask is unchanged.
     """
     B, H, dh = q.shape
     P, ps, HKV, _ = k_pages.shape
@@ -208,9 +280,65 @@ def decode_attention_paged_pallas(
     G = H // HKV
     maxP = block_tables.shape[1]
 
+    if pages_per_block < 0:
+        raise ValueError(f"pages_per_block must be >= 0, got {pages_per_block}")
+    F = pages_per_block or max(1, SUBLANE // ps)
+
     q4 = q.reshape(B, HKV, G, dh)
     len2 = lengths.astype(jnp.int32).reshape(B, 1)
-    tab = jnp.clip(block_tables.astype(jnp.int32), 0, P - 1)
+    tab = block_tables.astype(jnp.int32)
+    if F > 1 and maxP % F:
+        # pad logical slots to a block multiple with sentinels: their
+        # positions land past every cursor, so the `pos < len` mask drops
+        # them exactly like any other unreserved slot
+        tab = jnp.pad(tab, ((0, 0), (0, (-maxP) % F)), constant_values=P)
+        maxP = tab.shape[1]
+    tab = jnp.clip(tab, 0, P - 1)
+
+    if F > 1:
+        def page_map_j(j):
+            return lambda b, h, s, t: (t[b, s * F + j], 0, h, 0)
+
+        def scale_map_j(j):
+            return lambda b, h, s, t: (t[b, s * F + j], 0, h)
+
+        s_steps = maxP // F
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, HKV, s_steps),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, dh), lambda b, h, s, t: (b, h, 0, 0)),
+                *[pl.BlockSpec((1, ps, 1, dh), page_map_j(j))
+                  for j in range(F)],                        # k pages
+                *[pl.BlockSpec((1, ps, 1), scale_map_j(j))
+                  for j in range(F)],                        # k scales
+                *[pl.BlockSpec((1, ps, 1, dh), page_map_j(j))
+                  for j in range(F)],                        # v pages
+                *[pl.BlockSpec((1, ps, 1), scale_map_j(j))
+                  for j in range(F)],                        # v scales
+                pl.BlockSpec((1, 1), lambda b, h, s, t: (b, 0)),  # lengths
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, dh),
+                                   lambda b, h, s, t: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),    # running max
+                pltpu.VMEM((G, 1), jnp.float32),    # running denom
+                pltpu.VMEM((G, dh), jnp.float32),   # output accumulator
+            ],
+        )
+        out = pl.pallas_call(
+            functools.partial(_paged_kernel_multi, s_steps=s_steps,
+                              page_size=ps, block_pages=F,
+                              sm_scale=sm_scale),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B, HKV, G, dh), q.dtype),
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(tab, q4, *([k_pages] * F), *([k_scale] * F),
+          *([v_pages] * F), *([v_scale] * F), len2)
+        return out.reshape(B, H, dh)
 
     def page_map(b, h, s, tab_ref):
         return (tab_ref[b, s], 0, h, 0)

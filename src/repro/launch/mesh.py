@@ -13,23 +13,40 @@ import jax
 from repro.distributed.compat import make_mesh
 
 
+def _require_devices(shape, axes) -> list:
+    """The first ``prod(shape)`` devices, or a clear error.
+
+    ``jax.devices()[:n]`` silently under-fills when fewer devices exist and
+    ``make_mesh`` then fails with an opaque reshape error — raise here with
+    the fix spelled out instead.
+    """
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        req = "×".join(f"{a}={s}" for a, s in zip(axes, shape))
+        raise ValueError(
+            f"mesh ({req}) needs {n} devices but jax.devices() provides "
+            f"{len(devices)}; shrink the mesh or launch with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"(set before jax imports)")
+    return devices[:n]
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """v5e pod mesh: 16×16 = 256 chips; multi-pod adds a leading pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    n = 1
-    for s in shape:
-        n *= s
-    devices = jax.devices()[:n]     # dry-run exposes 512 host devices
+    devices = _require_devices(shape, axes)  # dry-run exposes 512 host devs
     return make_mesh(shape, axes, devices=devices)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over however many (host) devices exist — tests/examples."""
-    n = len(jax.devices())
-    data = min(data, n)
-    model = min(model, max(n // data, 1))
-    return make_mesh((data, model), ("data", "model"))
+    """Small mesh over host devices — tests/examples/sharded serving."""
+    axes = ("data", "model")
+    devices = _require_devices((data, model), axes)
+    return make_mesh((data, model), axes, devices=devices)
 
 
 def batch_axes(mesh) -> tuple:

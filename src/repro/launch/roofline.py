@@ -62,6 +62,67 @@ def model_flops(arch: str, shape_name: str) -> float:
     return 2.0 * n * shape.global_batch          # decode: per emitted token
 
 
+def decode_collective_bytes(*, n_layers: int, d_model: int, rows: int,
+                            tp: int, act_bytes: int = 4,
+                            vocab: int = 0) -> int:
+    """Per-device wire bytes of ONE tensor-parallel decode step (analytic).
+
+    With weights split on the "model" axis each decoder layer partial-sums
+    three row-parallel projections — self-attention out, cross-attention
+    out, FFN down — each an all-reduce of the ``(rows, d_model)``
+    activation; a ring all-reduce of ``b`` bytes moves ``2·b·(g-1)/g``
+    per device.  The vocab-parallel unembedding adds one logits
+    all-gather (``b·(g-1)/g`` of ``(rows, vocab)`` float32).  ``tp <= 1``
+    → 0 (no collectives compile).
+
+    This is the roofline's *prediction*; ``hlo_analysis.analyze_collectives``
+    over the compiled SPMD module is the measurement it is checked
+    against (``benchmarks/bench_sharded_serve.py``).
+    """
+    if tp <= 1:
+        return 0
+    act = rows * d_model * act_bytes
+    all_reduce = 2 * act * (tp - 1) // tp
+    total = n_layers * 3 * all_reduce
+    if vocab:
+        total += rows * vocab * 4 * (tp - 1) // tp
+    return int(total)
+
+
+def sharded_decode_cell(cfg, *, rows: int, tp: int, quantized: bool = True,
+                        kv_bytes_per_step: int = 0) -> Dict:
+    """Analytic roofline for one serving decode step on a ``tp``-wide mesh.
+
+    Unlike :func:`build_cell` (which reads dry-run records) this assembles
+    the three terms from the config alone, so the serving benches can
+    compare a *measured* per-step time against it on any mesh:
+
+        compute_s    = 2·n_active_params·rows / (tp × peak)
+        memory_s     = (weight_bytes/tp + kv_bytes_per_step) / HBM_bw
+        collective_s = decode_collective_bytes(...) / ICI_bw
+    """
+    n = cfg.n_active_params
+    act_bytes = int(cfg.activation_dtype.itemsize)
+    weight_bytes = n * (1 if quantized else act_bytes)
+    peak = PEAK_INT8 if quantized else PEAK_BF16
+    coll = decode_collective_bytes(
+        n_layers=cfg.n_layers, d_model=cfg.d_model, rows=rows, tp=tp,
+        act_bytes=act_bytes, vocab=cfg.vocab)
+    terms = {
+        "compute_s": 2.0 * n * rows / (max(tp, 1) * peak),
+        "memory_s": (weight_bytes / max(tp, 1) + kv_bytes_per_step) / HBM_BW,
+        "collective_s": coll / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    return {
+        "rows": rows, "tp": tp, "quantized": quantized,
+        "collective_bytes_per_device": coll,
+        "terms_s": terms,
+        "dominant": dominant,
+        "step_time_bound_s": max(terms.values()),
+    }
+
+
 def build_cell(arch: str, shape_name: str, *, quantized: bool = True,
                multi_pod: bool = False, probe_cache: Dict = None) -> Dict:
     from repro.launch.costs import probe

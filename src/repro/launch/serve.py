@@ -34,8 +34,9 @@ from repro.core import Calibrator, QuantMode, QuantPolicy, Taps, quantize_model
 from repro.core.ptq import FP_CONTEXT
 from repro.data import corpus_bleu, make_corpus, pack_batches_token_budget
 from repro.models import build_model
-from repro.serving import ParallelStreams, Request, ServingEngine, \
-    TokenSortedScheduler, make_chaos
+from repro.launch.mesh import make_host_mesh
+from repro.serving import ParallelStreams, ReplicaRouter, Request, \
+    ServingEngine, TokenSortedScheduler, make_chaos
 
 
 def main() -> None:
@@ -113,6 +114,17 @@ def main() -> None:
                          "preemption schedule at burst edges (--paged); "
                          "output tokens are identical to an uninterrupted "
                          "serve — use to drill spill/restore in situ")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="run the engine tensor-parallel on a (data,model) "
+                         "mesh, e.g. '1,4': weights and K/V-pool heads "
+                         "split on the model axis, token-identical output "
+                         "(--mode continuous; needs that many devices — "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=N exposes host devices)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas behind the "
+                         "free-page/queue-depth router (--mode continuous; "
+                         "each replica serves its share concurrently)")
     args = ap.parse_args()
     burst_len = args.burst_len if args.burst_len == "auto" \
         else int(args.burst_len)
@@ -143,13 +155,31 @@ def main() -> None:
               f"{sum(r.quantize for r in recs.values())}/{len(recs)} "
               "calibrated sites quantizable")
 
+    if args.mesh and args.mode != "continuous":
+        raise SystemExit("--mesh needs --mode continuous")
+    if args.replicas > 1 and args.mode != "continuous":
+        raise SystemExit("--replicas needs --mode continuous")
+
     if args.mode == "continuous":
-        engine = ServingEngine(model, params, quant=qctx, max_len=96,
-                               burst_len=burst_len, paged=args.paged,
-                               page_size=args.page_size,
-                               n_pages=args.n_pages,
-                               prefix_cache=args.prefix_cache,
-                               prefix_pages=args.prefix_pages)
+        mesh = None
+        if args.mesh:
+            try:
+                data_ax, model_ax = (int(x) for x in args.mesh.split(","))
+            except ValueError:
+                raise SystemExit(f"--mesh wants 'DATA,MODEL', "
+                                 f"got {args.mesh!r}")
+            mesh = make_host_mesh(data=data_ax, model=model_ax)
+
+        def mk_engine():
+            return ServingEngine(model, params, quant=qctx, max_len=96,
+                                 burst_len=burst_len, paged=args.paged,
+                                 page_size=args.page_size,
+                                 n_pages=args.n_pages,
+                                 prefix_cache=args.prefix_cache,
+                                 prefix_pages=args.prefix_pages,
+                                 mesh=mesh)
+
+        engine = mk_engine()
         bins = pack_batches_token_budget(requests, args.token_budget)
         order = [i for b in bins for i in b]     # FFD admission order
         beam = args.beam if args.beam > 1 else None
@@ -161,21 +191,43 @@ def main() -> None:
                     for k, s in enumerate(reqs)]
         chaos = (make_chaos(args.chaos_seed, n_rounds=256, preempt_every=2)
                  if args.chaos_seed is not None else None)
+        serve_kw = dict(n_slots=args.slots,
+                        max_new_tokens=args.max_new_tokens,
+                        beam=beam,
+                        fused_admission=not args.unfused_admission,
+                        overcommit=args.overcommit,
+                        prefill_chunk=args.prefill_chunk,
+                        chaos=chaos)
+        if args.replicas > 1:
+            router = ReplicaRouter(
+                [engine] + [mk_engine() for _ in range(args.replicas - 1)])
+            rres = router.serve(reqs, **serve_kw)
+            print(f"router x{args.replicas}: {len(rres.requests)} requests "
+                  f"in {rres.wall_s:.2f}s ({rres.tokens_per_s:.1f} tok/s), "
+                  f"per-replica peak_running "
+                  f"{rres.peak_running_per_replica}, "
+                  f"assignment counts "
+                  f"{[rres.assignment.count(i) for i in range(args.replicas)]}")
+            for i, r in enumerate(rres.results):
+                print(f"  replica {i}: {sum(len(q.tokens) for q in r.requests)}"
+                      f" tokens, {r.host_syncs} syncs, "
+                      f"utilization {r.utilization:.2f}"
+                      + (f", tp={r.tp_degree} mesh={r.mesh_shape}"
+                         if r.tp_degree > 1 else ""))
+            return
         t0 = time.perf_counter()
-        res = engine.serve(reqs,
-                           n_slots=args.slots,
-                           max_new_tokens=args.max_new_tokens,
-                           beam=beam,
-                           fused_admission=not args.unfused_admission,
-                           overcommit=args.overcommit,
-                           prefill_chunk=args.prefill_chunk,
-                           chaos=chaos)
+        res = engine.serve(reqs, **serve_kw)
         dt = time.perf_counter() - t0
         met = res.metrics()
         print(f"served {args.requests} requests in {dt:.2f}s "
               f"({res.tokens_per_s:.1f} tok/s, "
               f"slot utilization {res.utilization:.2f}, "
               f"{res.prefill_rounds} admission rounds)")
+        if res.tp_degree > 1:
+            print(f"tensor-parallel: mesh {res.mesh_shape} "
+                  f"(tp={res.tp_degree}), predicted "
+                  f"{res.collective_bytes_per_step} collective "
+                  f"bytes/step/device inside the burst")
         if beam:
             print(f"beam={res.beam}: {res.n_groups} groups of {res.beam} "
                   f"rows in a {res.n_slots}-row grid"

@@ -10,6 +10,15 @@ from repro.serving.preemption import (  # noqa: F401
     SpillStore,
     pick_victims,
 )
+from repro.serving.router import (  # noqa: F401
+    ReplicaRouter,
+    RouterResult,
+)
+from repro.serving.sharding import (  # noqa: F401
+    decode_state_shardings,
+    kv_pools_shardable,
+    tp_degree,
+)
 from repro.serving.prefix_cache import (  # noqa: F401
     CachedChain,
     PrefixCache,

@@ -84,7 +84,10 @@ from repro.core.ptq import FP_CONTEXT, QuantContext
 from repro.data.sorting import next_pow2
 from repro.data.synthetic import EOS, pad_batch
 from repro.distributed.fault import StepWatchdog
+from repro.distributed.sharding import named_shardings
 from repro.models import kv_cache as kvc
+from repro.serving.sharding import decode_state_shardings, mesh_axis_sizes, \
+    tp_degree
 from repro.serving.burst_control import AdaptiveBurst
 from repro.serving.chaos import ChaosSchedule
 from repro.serving.preemption import SpilledRequest, SpillStore, pick_victims
@@ -234,6 +237,13 @@ class ServeResult:
     speculative_k: int = 0            # draft window (0 = speculation off)
     draft_tokens: int = 0             # tokens proposed by the draft passes
     accepted_tokens: int = 0          # drafted tokens the verifier kept
+    # multi-chip serving: tensor-parallel burst (mesh on the engine) and/or
+    # data-parallel replicas (ReplicaRouter sets ``replicas`` post-merge)
+    mesh_shape: Tuple[int, ...] = ()  # mesh axis sizes, () = unsharded
+    tp_degree: int = 1                # "model"-axis width the burst ran at
+    replicas: int = 1                 # engine replicas behind the router
+    collective_bytes_per_step: int = 0  # predicted per-device wire bytes
+    #                                     per decode step (ring all-reduce)
 
     @property
     def acceptance_rate(self) -> float:
@@ -331,6 +341,10 @@ class ServeResult:
             "draft_tokens": float(self.draft_tokens),
             "accepted_tokens": float(self.accepted_tokens),
             "acceptance_rate": self.acceptance_rate,
+            "tp_degree": float(self.tp_degree),
+            "replicas": float(self.replicas),
+            "collective_bytes_per_step":
+                float(self.collective_bytes_per_step),
             "first_token_latency_mean_s": float(np.mean(first)) if first else 0.0,
             "first_token_latency_p95_s":
                 float(np.percentile(first, 95)) if first else 0.0,
@@ -351,8 +365,23 @@ class ServingEngine:
                  prefix_cache: bool = False,
                  prefix_pages: int = 256,
                  prefix_page_size: Optional[int] = None,
-                 draft_quant: Optional[QuantContext] = None):
+                 draft_quant: Optional[QuantContext] = None,
+                 mesh=None):
         self.model = model
+        # tensor-parallel serving: with a ("data","model") mesh the burst
+        # programs compile as ONE SPMD program — GSPMD places the per-layer
+        # all-reduces inside the lax.while_loop, so a serve round stays one
+        # dispatch + one host sync.  We only *place* the inputs: weights by
+        # the training sharding rules (fsdp off — serving replicates
+        # non-tensor dims), the decode state by serving.sharding (K/V pools
+        # split on heads, host-facing buffers replicated).
+        self.mesh = mesh
+        self.tp = tp_degree(mesh)
+        if mesh is not None:
+            params = jax.device_put(
+                params, named_shardings(params, mesh, tensor="model",
+                                        fsdp=None,
+                                        kv_heads=model.cfg.n_kv_heads))
         self.params = params
         self.quant = quant
         # speculative decoding draft context: the k cheap draft steps run
@@ -434,8 +463,32 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ util
     def _init_state(self, batch_size: int):
-        return self.model.init_decode_state(
-            batch_size, self.max_len, quantized=self.quant.quantize_kv)
+        return self._shard_state(self.model.init_decode_state(
+            batch_size, self.max_len, quantized=self.quant.quantize_kv))
+
+    def _shard_state(self, state):
+        """Place a fresh decode state on the engine mesh: K/V pools (self,
+        cross, prefix) split on the heads axis, block tables / cursors /
+        token buffers replicated.  No-op without a mesh."""
+        if self.mesh is None:
+            return state
+        cfg = self.model.cfg
+        return jax.device_put(state, decode_state_shardings(
+            state, self.mesh, kv_heads=cfg.n_kv_heads, head_dim=cfg.hd))
+
+    def _mesh_result_fields(self, rows: int) -> Dict[str, Any]:
+        """ServeResult kwargs describing the mesh the serve ran on."""
+        if self.mesh is None:
+            return {}
+        from repro.launch.roofline import decode_collective_bytes
+        cfg = self.model.cfg
+        return dict(
+            mesh_shape=mesh_axis_sizes(self.mesh),
+            tp_degree=self.tp,
+            collective_bytes_per_step=decode_collective_bytes(
+                n_layers=cfg.n_layers, d_model=cfg.d_model, rows=rows,
+                tp=self.tp, act_bytes=cfg.activation_dtype.itemsize,
+                vocab=cfg.vocab))
 
     def _resolve_burst(self, burst_len: Optional[Union[int, str]]
                        ) -> Union[int, str]:
@@ -1716,7 +1769,8 @@ class ServingEngine:
                                fused_admission=fused_admission,
                                auto_burst=ctrl is not None,
                                paged=self.paged, page_size=self.page_size,
-                               speculative_k=spec)
+                               speculative_k=spec,
+                               **self._mesh_result_fields(n_slots))
         if max(r.max_new_tokens for r in reqs) > self.max_len:
             raise ValueError("a request's max_new_tokens exceeds the "
                              f"engine KV capacity {self.max_len}")
@@ -1768,6 +1822,7 @@ class ServingEngine:
             n_pages=allocator.n_pages if allocator else None)
         if pc is not None:
             state["prefix_k"], state["prefix_v"] = self._prefix_pool
+        state = self._shard_state(state)
         tokens = jnp.zeros((n_slots,), jnp.int32)
 
         t0 = time.perf_counter()
@@ -2198,6 +2253,7 @@ class ServingEngine:
                            speculative_k=spec,
                            draft_tokens=draft_tokens,
                            accepted_tokens=accepted_tokens,
+                           **self._mesh_result_fields(n_slots),
                            **self._overload_result_fields(
                                overcommit, preempt_count, store, watchdog,
                                sched, reqs, allocator, peak_running,
@@ -2305,7 +2361,8 @@ class ServingEngine:
                                burst_len=ctrl.k if ctrl else K,
                                beam=beam, fused_admission=fused_admission,
                                auto_burst=ctrl is not None,
-                               paged=self.paged, page_size=self.page_size)
+                               paged=self.paged, page_size=self.page_size,
+                               **self._mesh_result_fields(R))
         if max(r.max_new_tokens for r in reqs) > self.max_len:
             raise ValueError("a request's max_new_tokens exceeds the "
                              f"engine KV capacity {self.max_len}")
@@ -2348,6 +2405,7 @@ class ServingEngine:
             n_pages=allocator.n_pages if allocator else None)
         if pc is not None:
             state["prefix_k"], state["prefix_v"] = self._prefix_pool
+        state = self._shard_state(state)
         tokens = jnp.zeros((R,), jnp.int32)
         # bytes one beam step's cache reorder moves: paged = the table
         # permutation + one partial-page copy per row; unpaged = the whole
@@ -2875,6 +2933,7 @@ class ServingEngine:
                            pages_in_use=allocator.in_use if allocator else 0,
                            page_hwm=allocator.hwm if allocator else 0,
                            reorder_bytes=reorder_step_bytes * decode_steps,
+                           **self._mesh_result_fields(R),
                            **self._overload_result_fields(
                                overcommit, preempt_count, store, watchdog,
                                sched, reqs, allocator, peak_running,

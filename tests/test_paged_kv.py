@@ -530,6 +530,45 @@ def test_paged_kernel_interpret_matches_oracle(rng):
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("ps,maxP", [(2, 5), (2, 8), (4, 3)])
+def test_paged_kernel_multi_page_blocks_interpret(rng, ps, maxP):
+    """``page_size < 8`` pools fetch SUBLANE//ps consecutive slots per
+    grid step (multi-page sublane blocks) — parity vs the oracle must
+    hold including odd slot counts (sentinel-padded to a block multiple)
+    and an explicit ``pages_per_block`` override."""
+    from repro.kernels.decode_attention import decode_attention_paged_pallas
+
+    B, H, HKV, dh, P = 3, 4, 2, 8, 32
+    q = jnp.asarray(rng.normal(size=(B, H, dh)), jnp.float32)
+    kp = jnp.asarray(rng.integers(-127, 128, (P, ps, HKV, dh)), jnp.int8)
+    vp = jnp.asarray(rng.integers(-127, 128, (P, ps, HKV, dh)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.001, 0.02, (P, ps, HKV)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.001, 0.02, (P, ps, HKV)), jnp.float32)
+    tab = np.full((B, maxP), P, np.int32)
+    perm = rng.permutation(P)
+    c = 0
+    lengths = np.zeros((B,), np.int32)
+    for b in range(B):                    # dense-prefix tables, ragged tails
+        n = int(rng.integers(1, maxP + 1))
+        tab[b, :n] = perm[c:c + n]
+        c += n
+        lengths[b] = int(rng.integers(1, n * ps + 1))
+    tab, lengths = jnp.asarray(tab), jnp.asarray(lengths)
+    want = ref.ref_decode_attention_paged(q, kp, ks, vp, vs, tab, lengths,
+                                          0.35)
+    got = decode_attention_paged_pallas(q, kp, ks, vp, vs, tab, lengths,
+                                        sm_scale=0.35, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # explicit override and the single-page path agree with auto
+    for f in (1, 2):
+        forced = decode_attention_paged_pallas(
+            q, kp, ks, vp, vs, tab, lengths, sm_scale=0.35, interpret=True,
+            pages_per_block=f)
+        np.testing.assert_allclose(np.asarray(forced), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
 def test_init_paged_cache_validates_page_multiple():
     with pytest.raises(ValueError):
         kvc.init_paged_cache(1, 2, 30, 2, 4, page_size=8, quantized=False)

@@ -1,0 +1,353 @@
+"""Multi-chip serving (ISSUE 9): tensor-parallel bursts + replica router.
+
+Token identity is the contract: a serve on a ``("data","model")`` mesh —
+weights split by the training sharding rules, paged K/V pools split on
+the heads axis, everything host-facing replicated — must emit the exact
+tokens of the unsharded engine with UNCHANGED ``host_syncs`` (GSPMD's
+all-reduces live inside the burst ``while_loop``; they never add a
+round trip).
+
+The tier-1 run sees ONE CPU device (conftest mandate), so every tp > 1
+case skips itself; CI's multi-device leg re-runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` where the full
+matrix executes.  Everything mesh-free — the GQA fallback rule, the
+PartitionSpec assignment, mesh validation, and the router (replicas are
+plain engines) — runs everywhere.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import QuantPolicy, quantize_model
+from repro.data import make_corpus
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import build_model
+from repro.serving import ReplicaRouter, ServingEngine, make_chaos
+from repro.serving.sharding import (decode_state_specs, kv_pools_shardable,
+                                    mesh_axis_sizes, tp_degree)
+
+MAX_LEN = 32
+PAGE_SIZE = 8
+N_SLOTS = 8
+BUDGETS = [3, 7, 24, 5, 16, 2, 4, 9]
+MIXED_WIDTHS = [4, 2, 1, 3, 4, 2, 1, 4]
+
+_CACHED = {}
+
+
+def _state():
+    if "model" not in _CACHED:
+        cfg = get_config("transformer-base").reduced(
+            vocab=32, d_model=48, n_layers=1, n_enc_layers=1, d_ff=96,
+            n_heads=4, n_kv_heads=4, head_dim=16)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        qparams, qctx = quantize_model(params, {},
+                                       QuantPolicy(act_quant="dynamic"))
+        _CACHED.update(
+            cfg=cfg, model=model, params=params, qparams=qparams, qctx=qctx,
+            srcs=make_corpus(len(BUDGETS), cfg.vocab, seed=3, max_words=6),
+            ref={}, mesh={})
+    return _CACHED
+
+
+def _mesh(tp: int):
+    s = _state()
+    if tp not in s["mesh"]:
+        s["mesh"][tp] = make_host_mesh(data=1, model=tp)
+    return s["mesh"][tp]
+
+
+def _engine(quant: str, mesh=None, **kw):
+    s = _state()
+    params = s["qparams"] if quant == "int8" else s["params"]
+    qctx = {"int8": s["qctx"]}.get(quant)
+    kw.setdefault("paged", True)
+    kw.setdefault("page_size", PAGE_SIZE)
+    return ServingEngine(s["model"], params, max_len=MAX_LEN, mesh=mesh,
+                         **({"quant": qctx} if qctx else {}), **kw)
+
+
+def _toks(res):
+    return [np.asarray(r.tokens, np.int32) for r in res.requests]
+
+
+def _assert_identical(ref, res):
+    assert len(ref.requests) == len(res.requests)
+    for a, b in zip(_toks(ref), _toks(res)):
+        np.testing.assert_array_equal(a, b)
+    assert res.host_syncs == ref.host_syncs, "sharding added host syncs"
+
+
+def _need_devices(tp: int):
+    if len(jax.devices()) < tp:
+        pytest.skip(f"needs {tp} devices, have {len(jax.devices())} "
+                    "(CI multi-device leg runs this)")
+
+
+# -------------------------------------------------------- mesh validation
+def test_make_host_mesh_raises_past_device_count():
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="devices"):
+        make_host_mesh(data=1, model=n + 1)
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        make_host_mesh(data=2, model=n)
+
+
+def test_make_production_mesh_raises_on_host():
+    # 256 chips never exist in a test process
+    with pytest.raises(ValueError, match="256 devices"):
+        make_production_mesh()
+    with pytest.raises(ValueError, match="512 devices"):
+        make_production_mesh(multi_pod=True)
+
+
+def test_make_host_mesh_within_devices_ok():
+    mesh = make_host_mesh(data=1, model=1)
+    assert mesh_axis_sizes(mesh) == (1, 1)
+    assert tp_degree(mesh) == 1
+    assert tp_degree(None) == 1
+
+
+# ----------------------------------------------------- GQA guard (no mesh)
+class _FakeMesh:
+    axis_names = ("data", "model")
+
+    def __init__(self, tp):
+        self.shape = {"data": 1, "model": tp}
+
+
+def test_kv_pools_shardable_divisibility_rule():
+    assert kv_pools_shardable(_FakeMesh(2), kv_heads=4)
+    assert kv_pools_shardable(_FakeMesh(4), kv_heads=4)
+    assert not kv_pools_shardable(_FakeMesh(4), kv_heads=2)   # GQA fallback
+    assert not kv_pools_shardable(_FakeMesh(3), kv_heads=4)
+    assert not kv_pools_shardable(_FakeMesh(1), kv_heads=4)   # no tp
+    assert not kv_pools_shardable(None, kv_heads=4)
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_decode_state_specs_target_pools_only(paged):
+    s = _state()
+    cfg = s["cfg"]
+    state = s["model"].init_decode_state(
+        4, MAX_LEN, quantized=True, enc_len=16, paged=paged,
+        page_size=PAGE_SIZE, n_pages=16 if paged else None)
+    specs = decode_state_specs(state, kv_heads=cfg.n_kv_heads,
+                               head_dim=cfg.hd, shard_kv=True)
+    kv = P(None, None, None, "model", None)
+    assert specs["cache"].k == kv and specs["cache"].v == kv
+    assert specs["cache"].k_scale == P(None, None, None, "model")
+    assert specs["cross_k"] == kv and specs["cross_v"] == kv
+    assert specs["src_lengths"] == P()
+    if paged:
+        assert specs["cache"].block_tables == P()
+        assert specs["cache"].own_pages == P()
+    # GQA fallback: everything replicated
+    rep = decode_state_specs(state, kv_heads=cfg.n_kv_heads,
+                             head_dim=cfg.hd, shard_kv=False)
+    assert all(spec == P() for spec in jax.tree_util.tree_leaves(
+        rep, is_leaf=lambda x: isinstance(x, P)))
+
+
+# --------------------------------------------- identity matrix (tp ∈ 1,2,4)
+GREEDY_CASES = [
+    ("fp", True, 8, 0),
+    ("fp", False, "auto", 0),
+    ("int8", True, "auto", 0),
+    ("int8", False, 1, 0),
+    ("fp", True, 4, 2),
+    ("int8", True, 8, 2),
+]
+
+
+@pytest.mark.parametrize("tp", [1, 2, 4])
+@pytest.mark.parametrize("quant,fused,burst,spec", GREEDY_CASES)
+def test_sharded_greedy_identity(tp, quant, fused, burst, spec):
+    _need_devices(tp)
+    s = _state()
+    key = ("greedy", quant, fused, burst, spec)
+    if key not in s["ref"]:
+        s["ref"][key] = _engine(quant).serve(
+            s["srcs"], n_slots=N_SLOTS, max_new_tokens=BUDGETS,
+            fused_admission=fused, burst_len=burst, speculative_k=spec)
+    eng = _engine(quant, mesh=_mesh(tp))
+    res = eng.serve(s["srcs"], n_slots=N_SLOTS, max_new_tokens=BUDGETS,
+                    fused_admission=fused, burst_len=burst,
+                    speculative_k=spec)
+    _assert_identical(s["ref"][key], res)
+    assert res.tp_degree == tp
+    assert res.mesh_shape == (1, tp)
+    assert (res.collective_bytes_per_step > 0) == (tp > 1)
+
+
+BEAM_CASES = [
+    (1, "fp", True, 2),
+    (4, "fp", True, 2),
+    (4, "int8", False, 2),
+    ("mixed", "int8", True, 2),
+    (4, "fp", True, 4),
+    ("mixed", "fp", False, 4),
+]
+
+
+@pytest.mark.parametrize("beam,quant,fused,tp", BEAM_CASES)
+def test_sharded_beam_identity(beam, quant, fused, tp):
+    _need_devices(tp)
+    s = _state()
+    kw = dict(n_slots=N_SLOTS, max_new_tokens=BUDGETS,
+              fused_admission=fused, burst_len=4)
+    kw.update(beam=MIXED_WIDTHS if beam == "mixed" else beam)
+    key = ("beam", beam, quant, fused)
+    if key not in s["ref"]:
+        s["ref"][key] = _engine(quant).serve(s["srcs"], **kw)
+    res = _engine(quant, mesh=_mesh(tp)).serve(s["srcs"], **kw)
+    _assert_identical(s["ref"][key], res)
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_sharded_unpaged_identity(tp):
+    # the contiguous (L,B,S,HKV,dh) cache shards on heads just the same
+    _need_devices(tp)
+    s = _state()
+    key = ("greedy-unpaged",)
+    if key not in s["ref"]:
+        s["ref"][key] = _engine("fp", paged=False).serve(
+            s["srcs"], n_slots=N_SLOTS, max_new_tokens=BUDGETS)
+    res = _engine("fp", mesh=_mesh(tp), paged=False).serve(
+        s["srcs"], n_slots=N_SLOTS, max_new_tokens=BUDGETS)
+    _assert_identical(s["ref"][key], res)
+
+
+def test_gqa_non_dividing_heads_fall_back_replicated():
+    # HKV=2 on a model=4 axis: pools replicate (weights' k/v_proj already
+    # do via _base_spec) — serve must still be token-identical, not crash
+    _need_devices(4)
+    cfg = get_config("transformer-base").reduced(
+        vocab=32, d_model=48, n_layers=1, n_enc_layers=1, d_ff=96,
+        n_heads=4, n_kv_heads=2, head_dim=16)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    srcs = make_corpus(4, cfg.vocab, seed=5, max_words=6)
+    kw = dict(n_slots=4, max_new_tokens=8)
+    ref = ServingEngine(model, params, max_len=MAX_LEN, paged=True,
+                        page_size=PAGE_SIZE).serve(srcs, **kw)
+    mesh = make_host_mesh(data=1, model=4)
+    assert not kv_pools_shardable(mesh, cfg.n_kv_heads)
+    res = ServingEngine(model, params, max_len=MAX_LEN, paged=True,
+                        page_size=PAGE_SIZE, mesh=mesh).serve(srcs, **kw)
+    _assert_identical(ref, res)
+
+
+@pytest.mark.parametrize("tp", [2])
+def test_sharded_serve_with_prefix_cache_and_overcommit(tp):
+    _need_devices(tp)
+    s = _state()
+    # repeated sources: the second serve must all-hit on the sharded pool
+    srcs = [s["srcs"][i % 3] for i in range(6)]
+    kw = dict(n_slots=4, max_new_tokens=6)
+    ref_eng = _engine("fp", prefix_cache=True)
+    ref = ref_eng.serve(srcs, **kw)
+    eng = _engine("fp", mesh=_mesh(tp), prefix_cache=True)
+    cold = eng.serve(srcs, **kw)
+    _assert_identical(ref, cold)
+    warm = eng.serve(srcs, **kw)
+    assert warm.prefix_hits == len(srcs)
+    for a, b in zip(_toks(cold), _toks(warm)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------------ router
+def test_router_balances_and_matches_single_engine():
+    s = _state()
+    ref = _engine("fp").serve(s["srcs"], n_slots=N_SLOTS,
+                              max_new_tokens=BUDGETS)
+    router = ReplicaRouter([_engine("fp"), _engine("fp")])
+    res = router.serve(s["srcs"], n_slots=N_SLOTS, max_new_tokens=BUDGETS)
+    for r in res.requests:
+        np.testing.assert_array_equal(ref.tokens_for(r.req_id),
+                                      res.tokens_for(r.req_id))
+    counts = [res.assignment.count(i) for i in range(2)]
+    even = len(s["srcs"]) / 2
+    assert abs(counts[0] - counts[1]) <= 1
+    assert all(abs(p - even) <= 1 for p in res.peak_running_per_replica)
+    assert all(r.replicas == 2 for r in res.results)
+    assert res.metrics()["replicas"] == 2.0
+
+
+def test_router_chaos_per_replica_token_identity():
+    # preemption chaos inside each replica must not change merged tokens
+    s = _state()
+    ref = _engine("int8").serve(s["srcs"], n_slots=N_SLOTS,
+                                max_new_tokens=BUDGETS)
+    router = ReplicaRouter([_engine("int8"), _engine("int8")])
+    res = router.serve(
+        s["srcs"], n_slots=N_SLOTS, max_new_tokens=BUDGETS,
+        overcommit=1.5,
+        chaos=[make_chaos(2, n_rounds=64, preempt_every=2),
+               make_chaos(7, n_rounds=64, preempt_every=3)])
+    for r in res.requests:
+        np.testing.assert_array_equal(ref.tokens_for(r.req_id),
+                                      res.tokens_for(r.req_id))
+    assert sum(r.preemptions for r in res.results) > 0
+    # chaos'd pools still reclaim fully per replica
+    assert all(r.pages_in_use == 0 for r in res.results)
+
+
+def test_router_prefix_cache_per_replica():
+    s = _state()
+    srcs = [s["srcs"][i % 2] for i in range(6)]
+    router = ReplicaRouter([_engine("fp", prefix_cache=True)
+                            for _ in range(2)])
+    cold = router.serve(srcs, n_slots=4, max_new_tokens=6)
+    warm = router.serve(srcs, n_slots=4, max_new_tokens=6)
+    for r in warm.requests:
+        np.testing.assert_array_equal(cold.tokens_for(r.req_id),
+                                      warm.tokens_for(r.req_id))
+    assert sum(r.prefix_hits for r in warm.results) == len(srcs)
+
+
+def test_router_rejects_empty_and_mismatched_chaos():
+    with pytest.raises(ValueError, match="at least one"):
+        ReplicaRouter([])
+    router = ReplicaRouter([_engine("fp"), _engine("fp")])
+    with pytest.raises(ValueError, match="chaos"):
+        router.serve(_state()["srcs"], chaos=[None])
+
+
+def test_router_serial_matches_parallel():
+    s = _state()
+    par = ReplicaRouter([_engine("fp"), _engine("fp")]).serve(
+        s["srcs"], n_slots=N_SLOTS, max_new_tokens=BUDGETS)
+    ser = ReplicaRouter([_engine("fp"), _engine("fp")]).serve(
+        s["srcs"], n_slots=N_SLOTS, max_new_tokens=BUDGETS, parallel=False)
+    assert par.assignment == ser.assignment
+    for r in par.requests:
+        np.testing.assert_array_equal(par.tokens_for(r.req_id),
+                                      ser.tokens_for(r.req_id))
+
+
+# ------------------------------------------------- ServeResult mesh fields
+def test_serve_result_mesh_fields_default_off():
+    s = _state()
+    res = _engine("fp").serve(s["srcs"][:2], n_slots=2, max_new_tokens=4)
+    assert res.mesh_shape == () and res.tp_degree == 1
+    assert res.replicas == 1 and res.collective_bytes_per_step == 0
+    m = res.metrics()
+    assert m["tp_degree"] == 1.0 and m["collective_bytes_per_step"] == 0.0
+
+
+def test_serve_result_mesh_fields_on_mesh_tp1():
+    # a (1,1) mesh exercises the whole placement path on one device
+    s = _state()
+    res = _engine("fp", mesh=_mesh(1)).serve(
+        s["srcs"][:2], n_slots=2, max_new_tokens=4)
+    assert res.mesh_shape == (1, 1)
+    assert res.tp_degree == 1
+    assert res.collective_bytes_per_step == 0
