@@ -162,6 +162,8 @@ def run(smoke: bool = False, only: str = None) -> list:
         rows.extend(_prefix_rows(engine, requests, smoke)
                     if want("prefix") else [])
         rows.extend(_preempt_rows(engine, smoke) if want("preempt") else [])
+        rows.extend(_weightbits_rows(smoke, passes)
+                    if want("weightbits") else [])
         return rows
 
     # 2 — warmup both paths (jit compile, timed and reported separately),
@@ -231,6 +233,10 @@ def run(smoke: bool = False, only: str = None) -> list:
     # 7 — overload: overcommit / chunked prefill / chaos (asserted)
     if want("preempt"):
         rows.extend(_preempt_rows(engine, smoke))
+
+    # 8 — weight-bits A/B: INT8 vs block-wise INT4 weights (asserted)
+    if want("weightbits"):
+        rows.extend(_weightbits_rows(smoke, passes))
     return rows
 
 
@@ -521,6 +527,66 @@ def _preempt_rows(engine, smoke: bool) -> list:
     return rows
 
 
+def _weightbits_rows(smoke: bool, passes: int) -> list:
+    """INT8 vs block-wise INT4 weights through ``serve`` (ISSUE 10).
+
+    Same continuous-batching workload on the same trained-shape model with
+    per-channel INT8 weights vs the INT4 layout (decoder FFN + o_proj at
+    G=128, f16 scale/min).  Hard invariants for the CI smoke step:
+
+    * ≥1.9× fewer weight bytes on the INT4-eligible sites, and
+    * **unchanged** ``host_syncs`` — the byte cut must ride the existing
+      fused decode bursts, not buy throughput by changing dispatch shape.
+    """
+    from repro.core import (QuantPolicy, count_quantized, int4_eligible_site,
+                            quantize_model, weight_bytes_by_site)
+
+    # the INT4 layout needs K ≥ group_size on the eligible GEMMs to clear
+    # the byte-cut bar (G=128 edge-pads smaller layers), so this section
+    # sizes its own model instead of reusing the d_model=96 bench engine
+    cfg = get_config("transformer-base").reduced(
+        vocab=64, d_model=128, n_layers=2, n_enc_layers=2, d_ff=256,
+        n_heads=4, n_kv_heads=4, head_dim=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    q8, ctx8 = quantize_model(params, {}, QuantPolicy(act_quant="dynamic"))
+    q4, ctx4 = quantize_model(params, {}, QuantPolicy(act_quant="dynamic"),
+                              weight_bits=4, weight_group_size=128)
+    assert count_quantized(q4)["int4_linears"] == 4 * cfg.n_layers
+
+    b8 = weight_bytes_by_site(q8)
+    b4 = weight_bytes_by_site(q4)
+    elig = [s for s in b8 if int4_eligible_site(s)]
+    cut = sum(b8[s] for s in elig) / max(sum(b4[s] for s in elig), 1)
+    assert cut >= 1.9, (
+        f"INT4 weight-byte cut {cut:.2f}x < 1.9x on the eligible sites")
+
+    n = 12 if smoke else 32
+    reqs = make_corpus(n, cfg.vocab, seed=11)
+    caps = [8] * n
+    rows = []
+    results = {}
+    for name, pp, qq in [("int8", q8, ctx8), ("int4", q4, ctx4)]:
+        eng = ServingEngine(model, pp, quant=qq, max_len=64)
+        res, times, warm = measure(
+            lambda: eng.serve(reqs, n_slots=4, max_new_tokens=caps,
+                              burst_len=8),
+            warmup=1, passes=passes)
+        results[name] = res
+        wb = sum((b4 if name == "int4" else b8)[s] for s in elig)
+        rows.append((f"serve_weight_bits_{name}", min(times) * 1e6 / n,
+                     f"tok_per_s={res.n_tokens / min(times):.1f} "
+                     f"host_syncs={res.host_syncs} "
+                     f"eligible_weight_bytes={wb} compile_s={warm:.2f}"))
+    assert results["int4"].host_syncs == results["int8"].host_syncs, (
+        "INT4 weights changed the dispatch shape: host_syncs "
+        f"int4={results['int4'].host_syncs} int8={results['int8'].host_syncs}")
+    assert results["int4"].n_tokens > 0
+    rows.append(("serve_weight_bits_cut", 0.0,
+                 f"eligible_byte_cut={cut:.2f}x host_syncs_unchanged=1"))
+    return rows
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -528,7 +594,7 @@ if __name__ == "__main__":
     ap.add_argument("--only", default=None, metavar="SUBSTR",
                     help="run only sections whose name contains SUBSTR "
                          "(pack, continuous, fused, bucket, prefix, "
-                         "preempt)")
+                         "preempt, weightbits)")
     args = ap.parse_args()
     for r in run(smoke=args.smoke, only=args.only):
         print(",".join(str(x) for x in r))

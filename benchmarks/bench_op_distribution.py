@@ -50,16 +50,61 @@ def _classify(hlo: str) -> dict:
     return {k: v / total for k, v in sorted(buckets.items())}
 
 
+def _weight_op_class(site: str) -> str:
+    """Bucket a linear site into the op classes of the figure."""
+    parts = site.split("/")
+    if "ffn" in parts:
+        return "dec_ffn" if any(p.startswith("dec_blocks") for p in parts) \
+            else "enc_ffn"
+    if parts[-1].endswith("_proj"):
+        return "dec_attn" if any(p.startswith("dec_blocks") for p in parts) \
+            else "enc_attn"
+    return "other"
+
+
+def _weight_bytes_rows(params, qp8, qp4) -> list:
+    """Per-op-class weight bytes per precision + the INT8→INT4 cut, so the
+    INT4 win is attributable.  The decoder FFN must dominate the savings
+    (it is 2·d_ff/d_model of each eligible layer's bytes) — asserted."""
+    from repro.core import weight_bytes_by_site
+
+    per = {name: weight_bytes_by_site(pp)
+           for name, pp in [("fp32", params), ("int8", qp8), ("int4", qp4)]}
+    classes = defaultdict(lambda: defaultdict(int))
+    for name, sites in per.items():
+        for site, b in sites.items():
+            classes[_weight_op_class(site)][name] += b
+
+    rows = []
+    savings = {}
+    for klass in sorted(classes):
+        b = classes[klass]
+        savings[klass] = b["int8"] - b["int4"]
+        rows.append((f"fig7_weight_bytes_{klass}", 0.0,
+                     f"fp32={b['fp32']} int8={b['int8']} int4={b['int4']} "
+                     f"int4_cut={b['int8'] / max(b['int4'], 1):.2f}x"))
+    total_saved = sum(savings.values())
+    assert savings["dec_ffn"] == max(savings.values()), (
+        "decoder FFN should dominate the INT4 byte cut", savings)
+    rows.append(("fig7_weight_bytes_summary", 0.0,
+                 f"dec_ffn_share_of_cut={savings['dec_ffn'] / total_saved:.1%} "
+                 f"dec_attn_share={savings['dec_attn'] / total_saved:.1%}"))
+    return rows
+
+
 def run() -> list:
     cfg, model, params, corpus, _ = trained_tiny_nmt()
     qp, qctx = quantize_model(params, {}, QuantPolicy(act_quant="dynamic"))
+    qp4, qctx4 = quantize_model(params, {}, QuantPolicy(act_quant="dynamic"),
+                                weight_bits=4, weight_group_size=128)
     B = 16
     rng = np.random.default_rng(0)
     tokens = jnp.asarray(rng.integers(3, cfg.vocab, (B,)), jnp.int32)
 
     rows = []
     for name, pp, qq, quantized in [("fp32", params, FP_CONTEXT, False),
-                                    ("int8", qp, qctx, True)]:
+                                    ("int8", qp, qctx, True),
+                                    ("int4", qp4, qctx4, True)]:
         state = model.init_decode_state(B, 64, quantized=quantized,
                                         enc_len=32)
         fn = jax.jit(lambda p, t, s: model.decode_step(p, t, s, quant=qq))
@@ -69,6 +114,7 @@ def run() -> list:
         t = time_fn(fn, pp, tokens, state)
         detail = " ".join(f"{k}={v:.1%}" for k, v in split.items())
         rows.append((f"fig7_decode_{name}", t * 1e6, detail))
+    rows.extend(_weight_bytes_rows(params, qp, qp4))
     rows.append(("fig7_paper_reference", 0.0,
                  "paper: FP32 MatMul 43% -> INT8 adds Quantize/Dequantize, "
                  "shrinks MatMul+GatherNd share"))

@@ -1,6 +1,12 @@
 """Core INT8 post-training quantization library (the paper's contribution)."""
 
-from repro.core.qtensor import QTensor, quantize_symmetric, quantize_affine  # noqa: F401
+from repro.core.qtensor import (  # noqa: F401
+    BlockQTensor,
+    QTensor,
+    quantize_affine,
+    quantize_block,
+    quantize_symmetric,
+)
 from repro.core.quantize import (  # noqa: F401
     QuantMode,
     Thresholds,
@@ -25,6 +31,9 @@ from repro.core.ptq import (  # noqa: F401
     QuantContext,
     count_quantized,
     generic_site,
+    int4_eligible_site,
     quantize_model,
     quantize_weight,
+    quantize_weight_block,
+    weight_bytes_by_site,
 )

@@ -33,7 +33,12 @@ import jax.numpy as jnp
 from repro.core.calibration import SiteCalibration
 from repro.core.histogram import HistogramClass
 from repro.core.policy import QuantPolicy
-from repro.core.qtensor import QTensor, quantize_symmetric
+from repro.core.qtensor import (
+    BlockQTensor,
+    QTensor,
+    quantize_block,
+    quantize_symmetric,
+)
 from repro.core.quantize import QuantMode, Thresholds
 
 _LAYER_SEG = re.compile(r"blocks\.(\d+)")
@@ -126,7 +131,7 @@ def _is_linear_node(node: Any) -> bool:
     return (
         isinstance(node, dict)
         and "w" in node
-        and not isinstance(node["w"], (dict, QTensor))
+        and not isinstance(node["w"], (dict, QTensor, BlockQTensor))
         and getattr(node["w"], "ndim", 0) >= 2
     )
 
@@ -149,13 +154,52 @@ def quantize_weight(w: jax.Array) -> QTensor:
     )
 
 
+def quantize_weight_block(
+    w: jax.Array,
+    group_size: int = 128,
+    scale_dtype=jnp.float16,
+) -> BlockQTensor:
+    """Block-wise INT4 weight quantization (group scale/min along d_in)."""
+    return quantize_block(w, group_size=group_size, scale_dtype=scale_dtype)
+
+
+# Which sites may drop to INT4 (the paper's sensitivity result): decoder FFN
+# and attention *output* projections only.  q/k/v projections feed the
+# attention score path and the KV cache — those, all encoder weights, the
+# logits head and every activation stay INT8/FP.
+_INT4_FFN_LEAVES = ("in", "out", "gate", "up", "down")
+
+
+def int4_eligible_site(site: str) -> bool:
+    parts = site.split("/")
+    if not any(p == "dec_blocks" or p.startswith("dec_blocks.")
+               for p in parts):
+        return False
+    if parts[-1] == "o_proj":
+        return True
+    return (len(parts) >= 2 and parts[-2] == "ffn"
+            and parts[-1] in _INT4_FFN_LEAVES)
+
+
 def quantize_model(
     params: Dict[str, Any],
     calibrations: Optional[Dict[str, SiteCalibration]] = None,
     policy: Optional[QuantPolicy] = None,
     impl: str = "xla",
+    *,
+    weight_bits: int = 8,
+    weight_group_size: int = 128,
+    weight_scale_dtype=jnp.float16,
 ) -> Tuple[Dict[str, Any], QuantContext]:
-    """PTQ transform: returns (quantized params, runtime QuantContext)."""
+    """PTQ transform: returns (quantized params, runtime QuantContext).
+
+    ``weight_bits=4`` additionally drops the INT4-eligible weights (decoder
+    FFN + attention output projections, :func:`int4_eligible_site`) to
+    block-wise INT4 with ``weight_group_size`` rows per scale/min block;
+    every other approved site keeps the paper's per-channel INT8.
+    """
+    if weight_bits not in (8, 4):
+        raise ValueError(f"weight_bits must be 8 or 4, got {weight_bits}")
     policy = policy or QuantPolicy()
     calibrations = calibrations or {}
     ctx = QuantContext(policy=policy, calibrations=dict(calibrations), impl=impl)
@@ -167,7 +211,12 @@ def quantize_model(
             if policy.mode != QuantMode.NONE and policy.should_quantize(
                 site, ctx.lookup(site)
             ):
-                out["w"] = quantize_weight(node["w"])
+                if weight_bits == 4 and int4_eligible_site(site):
+                    out["w"] = quantize_weight_block(
+                        node["w"], group_size=weight_group_size,
+                        scale_dtype=weight_scale_dtype)
+                else:
+                    out["w"] = quantize_weight(node["w"])
             return out
         if isinstance(node, dict):
             return {k: walk(v, path + (str(k),)) for k, v in node.items()}
@@ -177,12 +226,18 @@ def quantize_model(
 
 
 def count_quantized(params: Dict[str, Any]) -> Dict[str, int]:
-    stats = {"quantized_linears": 0, "fp_linears": 0, "int8_bytes": 0, "fp_bytes": 0}
+    stats = {"quantized_linears": 0, "fp_linears": 0, "int8_bytes": 0,
+             "fp_bytes": 0, "int4_linears": 0, "int4_bytes": 0}
 
     def walk(node):
         if isinstance(node, QTensor):
             stats["quantized_linears"] += 1
             stats["int8_bytes"] += node.nbytes()
+            return
+        if isinstance(node, BlockQTensor):
+            stats["quantized_linears"] += 1
+            stats["int4_linears"] += 1
+            stats["int4_bytes"] += node.nbytes()
             return
         if isinstance(node, dict):
             if _is_linear_node(node):
@@ -195,3 +250,28 @@ def count_quantized(params: Dict[str, Any]) -> Dict[str, int]:
 
     walk(params)
     return stats
+
+
+def weight_bytes_by_site(params: Dict[str, Any]) -> Dict[str, int]:
+    """Per-site weight footprint (bytes actually streamed per decode step):
+    quantized payload + scale metadata for Q/BlockQ tensors, raw array bytes
+    for FP linears.  Keyed by the linear's site name."""
+    out: Dict[str, int] = {}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if _is_linear_node(node) or (
+                "w" in node and isinstance(node["w"], (QTensor, BlockQTensor))
+            ):
+                w = node["w"]
+                site = "/".join(path)
+                if isinstance(w, (QTensor, BlockQTensor)):
+                    out[site] = w.nbytes()
+                else:
+                    out[site] = int(w.size) * jnp.dtype(w.dtype).itemsize
+                return
+            for k, v in node.items():
+                walk(v, path + (str(k),))
+
+    walk(params, ())
+    return out

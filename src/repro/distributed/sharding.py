@@ -21,7 +21,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.qtensor import QTensor
+from repro.core.qtensor import BlockQTensor, QTensor
 
 IN_PROJ = {"q_proj", "k_proj", "v_proj", "gate", "up", "in", "in_proj",
            "up_proj", "gate_ssm_if"}
@@ -111,6 +111,22 @@ def param_specs(params: Any, mesh: Mesh, *, tensor="model",
     """Tree of PartitionSpec matching ``params`` (works on abstract trees)."""
 
     def walk(node, path: Tuple[str, ...]):
+        if isinstance(node, BlockQTensor):
+            # INT4 block layout: packed nibble rows and scale/min group rows
+            # both live on the reduction axis — splitting them would cut
+            # nibble pairs / scale blocks across shards, so the row dim
+            # replicates (the GQA-fallback precedent) and only the output
+            # column dim shards, following the weight spec's last entry.
+            node_name = path[-2] if len(path) >= 2 and path[-1] == "w" \
+                else (path[-1] if path else "")
+            w_spec = _base_spec(node_name, path, "w", node.data.shape, mesh,
+                                tensor, fsdp, kv_heads)
+            col = list(w_spec)[-1] if len(w_spec) else None
+            col = _fit(node.data.shape[-1], col, mesh)
+            rank = node.data.ndim
+            col_spec = P(*([None] * (rank - 1)), col)
+            return BlockQTensor(data=col_spec, scale=col_spec, vmin=col_spec,
+                                group_size=node.group_size, k_dim=node.k_dim)
         if isinstance(node, QTensor):
             # path ends with the leaf key ("w"); the linear's name is above it
             node_name = path[-2] if len(path) >= 2 and path[-1] == "w" \
@@ -127,7 +143,7 @@ def param_specs(params: Any, mesh: Mesh, *, tensor="model",
             out = {}
             for k, v in node.items():
                 if k in ("w", "b", "table", "scale", "bias") and not \
-                        isinstance(v, (dict, QTensor)):
+                        isinstance(v, (dict, QTensor, BlockQTensor)):
                     node_name = path[-1] if path else ""
                     if k in ("scale", "bias") and node_name not in IN_PROJ \
                             and node_name not in OUT_PROJ:
@@ -135,7 +151,7 @@ def param_specs(params: Any, mesh: Mesh, *, tensor="model",
                     else:
                         out[k] = _base_spec(node_name, path, k, v.shape,
                                             mesh, tensor, fsdp, kv_heads)
-                elif isinstance(v, (dict, QTensor)):
+                elif isinstance(v, (dict, QTensor, BlockQTensor)):
                     out[k] = walk(v, path + (k,))
                 else:
                     # bare array leaf (conv weights, A_log, r_weight, …)
@@ -167,6 +183,10 @@ def named_shardings(params: Any, mesh: Mesh, **kw) -> Any:
         if isinstance(node, QTensor):
             return QTensor(data=to_ns(node.data), scale=to_ns(node.scale),
                            zero_point=to_ns(node.zero_point), axis=node.axis)
+        if isinstance(node, BlockQTensor):
+            return BlockQTensor(data=to_ns(node.data), scale=to_ns(node.scale),
+                                vmin=to_ns(node.vmin),
+                                group_size=node.group_size, k_dim=node.k_dim)
         if isinstance(node, dict):
             return {k: walk(v) for k, v in node.items()}
         return to_ns(node)

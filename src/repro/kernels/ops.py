@@ -19,12 +19,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.qtensor import QTensor
+from repro.core.qtensor import BlockQTensor, QTensor
 from repro.kernels import ref
 from repro.kernels.decode_attention import (
     decode_attention_paged_pallas,
     decode_attention_pallas,
 )
+from repro.kernels.int4_matmul import int4_matmul_pallas
 from repro.kernels.int8_matmul import (
     int8_matmul_batched_pallas,
     int8_matmul_pallas,
@@ -43,6 +44,27 @@ def _resolve(impl: str) -> str:
 # ---------------------------------------------------------------------------
 # int8 matmul
 # ---------------------------------------------------------------------------
+
+def _row_scale(scale, M: int) -> jax.Array:
+    """Normalize an activation scale to (1, 1) or (M, 1) f32."""
+    return (jnp.reshape(jnp.asarray(scale, jnp.float32), (1, 1))
+            if jnp.size(scale) == 1
+            else jnp.reshape(jnp.asarray(scale, jnp.float32), (M, 1)))
+
+
+def _fold_zero_point(zero_point) -> Optional[jax.Array]:
+    """Symmetric activations have zp == 0 everywhere; fold to the no-zp fast
+    path when that is decidable at trace time (calibrated constants)."""
+    if jnp.size(zero_point) != 1:
+        return None
+    if isinstance(zero_point, (float, int)):
+        return None if float(zero_point) == 0.0 else jnp.float32(zero_point)
+    azp = jnp.asarray(zero_point)
+    try:  # concrete (calibrated constant) → fold the decision now
+        return None if float(azp) == 0.0 else azp.astype(jnp.float32)
+    except Exception:  # traced → keep correction term
+        return azp.astype(jnp.float32)
+
 
 def int8_matmul(
     a: QTensor,
@@ -63,26 +85,11 @@ def int8_matmul(
     N = b.data.shape[-1]
     a2 = a.data.reshape(-1, K)
     M = a2.shape[0]
-    a_scale = (jnp.reshape(jnp.asarray(a.scale, jnp.float32), (1, 1))
-               if jnp.size(a.scale) == 1
-               else jnp.reshape(jnp.asarray(a.scale, jnp.float32), (M, 1)))
+    a_scale = _row_scale(a.scale, M)
     b_scale = jnp.asarray(b.scale, jnp.float32)
     b_scale = (jnp.broadcast_to(b_scale.reshape(1, 1), (1, N))
                if b_scale.size == 1 else b_scale.reshape(1, N))
-    # symmetric activations have zp == 0 everywhere; treat as no-zp fast path
-    zp = None
-    if jnp.size(a.zero_point) == 1:
-        # static zero-point: only thread it through if it can be non-zero.
-        # (Symmetric mode constructs zero_point as a literal 0.0 — the
-        # comparison below is a trace-time constant in that case.)
-        if isinstance(a.zero_point, (float, int)):
-            zp = None if float(a.zero_point) == 0.0 else jnp.float32(a.zero_point)
-        else:
-            azp = jnp.asarray(a.zero_point)
-            try:  # concrete (calibrated constant) → fold the decision now
-                zp = None if float(azp) == 0.0 else azp.astype(jnp.float32)
-            except Exception:  # traced → keep correction term
-                zp = azp.astype(jnp.float32)
+    zp = _fold_zero_point(a.zero_point)
     if impl in ("pallas", "interpret"):
         out = int8_matmul_pallas(
             a2, a_scale, b.data, b_scale, zp, bias,
@@ -90,6 +97,44 @@ def int8_matmul(
         )
     else:
         out = ref.ref_int8_matmul(a2, a_scale, b.data, b_scale, zp, bias,
+                                  out_dtype=out_dtype)
+    return out.reshape(*batch_shape, N)
+
+
+def int4_matmul(
+    a: QTensor,
+    b: BlockQTensor,
+    bias: Optional[jax.Array] = None,
+    *,
+    out_dtype=jnp.float32,
+    impl: str = "auto",
+) -> jax.Array:
+    """``dequant(a) @ block_dequant(b) + bias`` with dequant fused in-kernel.
+
+    ``a``: int8 activations, shape (..., K); scale per-row (…, 1) or scalar;
+    ``b``: block-quantized INT4 weights (packed nibbles + group scale/min).
+    """
+    impl = _resolve(impl)
+    batch_shape = a.data.shape[:-1]
+    K = a.data.shape[-1]
+    if b.data.ndim != 2:
+        raise ValueError(f"int4_matmul wants 2-D weights, got {b.shape}")
+    if K != b.k_dim:
+        raise ValueError(f"K mismatch: activations {K}, weights {b.k_dim}")
+    N = b.data.shape[-1]
+    a2 = a.data.reshape(-1, K)
+    M = a2.shape[0]
+    a_scale = _row_scale(a.scale, M)
+    zp = _fold_zero_point(a.zero_point)
+    if impl in ("pallas", "interpret"):
+        out = int4_matmul_pallas(
+            a2, a_scale, b.data, b.scale, b.vmin, zp, bias,
+            group_size=b.group_size, out_dtype=out_dtype,
+            interpret=(impl == "interpret"),
+        )
+    else:
+        out = ref.ref_int4_matmul(a2, a_scale, b.data, b.scale, b.vmin,
+                                  zp, bias, group_size=b.group_size,
                                   out_dtype=out_dtype)
     return out.reshape(*batch_shape, N)
 

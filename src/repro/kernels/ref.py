@@ -63,6 +63,65 @@ def ref_int8_matmul_batched(
 
 
 # ---------------------------------------------------------------------------
+# int4 (block-quantized weight) matmul
+# ---------------------------------------------------------------------------
+
+def ref_int4_matmul(
+    a_q: jax.Array,            # (M, K) int8 activations
+    a_scale: jax.Array,        # (M, 1) or scalar f32 (dequant scale)
+    b_packed: jax.Array,       # (K_store//2, N) int8 packed nibbles
+    b_scale: jax.Array,        # (n_groups, N) f32/f16 block scales
+    b_min: jax.Array,          # (n_groups, N) f32/f16 block minimums
+    a_zero_point: Optional[jax.Array] = None,   # scalar f32 (q-space offset)
+    bias: Optional[jax.Array] = None,           # (N,) f32
+    *,
+    group_size: int,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Group-wise oracle for the dequant-in-kernel INT4 matmul.
+
+    real(b)[k, n] = nib[k, n] * scale[k // G, n] + vmin[k // G, n]
+    =>  a @ b = a_scale * [ Σ_g (scale_g · (a_q @ nib)_g + vmin_g · rowsum_g)
+                            - zp · colsum(real(b)) ] + bias
+
+    The per-group integer dots are exact (int32); the f32 combination runs
+    in ascending-group order with the same op sequence as the Pallas kernel,
+    so interpret-mode results are bit-identical (both paths execute each
+    primitive separately — no cross-op FMA contraction).
+    """
+    from repro.core.qtensor import unpack_nibbles
+
+    M, K = a_q.shape
+    n_g = b_scale.shape[0]
+    G = group_size
+    k_store = n_g * G
+    N = b_packed.shape[1]
+    nib = unpack_nibbles(b_packed).astype(jnp.int8)          # (k_store, N)
+    a_p = (jnp.pad(a_q, ((0, 0), (0, k_store - K)))
+           if k_store > K else a_q)
+    acc = jnp.zeros((M, N), jnp.float32)
+    for g in range(n_g):
+        a_g = a_p[:, g * G:(g + 1) * G]
+        d = jnp.dot(a_g, nib[g * G:(g + 1) * G, :],
+                    preferred_element_type=jnp.int32)
+        rsum = jnp.sum(a_g.astype(jnp.int32), axis=1, keepdims=True)
+        acc = acc + (d.astype(jnp.float32)
+                     * b_scale[g].astype(jnp.float32)[None, :]
+                     + rsum.astype(jnp.float32)
+                     * b_min[g].astype(jnp.float32)[None, :])
+    if a_zero_point is not None:
+        s = jnp.repeat(b_scale.astype(jnp.float32), G, axis=0)
+        m = jnp.repeat(b_min.astype(jnp.float32), G, axis=0)
+        deq = nib.astype(jnp.float32) * s + m
+        colsum = jnp.sum(deq[:K, :], axis=0, keepdims=True)
+        acc = acc - jnp.asarray(a_zero_point, jnp.float32) * colsum
+    out = acc * jnp.asarray(a_scale, jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
 # quantize
 # ---------------------------------------------------------------------------
 

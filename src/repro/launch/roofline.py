@@ -89,8 +89,36 @@ def decode_collective_bytes(*, n_layers: int, d_model: int, rows: int,
     return int(total)
 
 
+def weight_stream_bytes(n_params: int, *, quantized: bool = True,
+                        act_bytes: int = 4, weight_bits: int = 8,
+                        group_size: int = 128, scale_bytes: int = 2,
+                        int4_fraction: float = 1.0) -> int:
+    """Weight bytes one decode step streams from HBM.
+
+    * FP: ``n · act_bytes``.
+    * INT8: ``n`` (1 byte/weight; the per-channel scale is O(1/d_in),
+      ignored, matching the pre-INT4 term).
+    * INT4 (``weight_bits=4``): the eligible ``int4_fraction`` of weights
+      streams a nibble plus the block metadata — two ``scale_bytes``-wide
+      values (scale, min) per ``group_size`` weights per column — i.e.
+      ``bits/8 + 2·scale_bytes/group_size`` bytes/weight; the rest stays
+      INT8.  Serving benches compute the true fraction from
+      ``core.ptq.count_quantized``.
+    """
+    if not quantized:
+        return int(n_params * act_bytes)
+    if weight_bits == 8:
+        return int(n_params)
+    if weight_bits != 4:
+        raise ValueError(f"weight_bits must be 8 or 4, got {weight_bits}")
+    per_w = weight_bits / 8.0 + 2.0 * scale_bytes / group_size
+    return int(n_params * ((1.0 - int4_fraction) + int4_fraction * per_w))
+
+
 def sharded_decode_cell(cfg, *, rows: int, tp: int, quantized: bool = True,
-                        kv_bytes_per_step: int = 0) -> Dict:
+                        kv_bytes_per_step: int = 0, weight_bits: int = 8,
+                        weight_group_size: int = 128,
+                        int4_fraction: float = 1.0) -> Dict:
     """Analytic roofline for one serving decode step on a ``tp``-wide mesh.
 
     Unlike :func:`build_cell` (which reads dry-run records) this assembles
@@ -100,10 +128,17 @@ def sharded_decode_cell(cfg, *, rows: int, tp: int, quantized: bool = True,
         compute_s    = 2·n_active_params·rows / (tp × peak)
         memory_s     = (weight_bytes/tp + kv_bytes_per_step) / HBM_bw
         collective_s = decode_collective_bytes(...) / ICI_bw
+
+    ``weight_bits=4`` shrinks the memory term via
+    :func:`weight_stream_bytes` — on the memory-bound decode roofline that
+    is the predicted INT4 speedup; compute stays on the INT8 MXU peak
+    because the kernel dequantizes nibbles into s8×s8 MXU dots.
     """
     n = cfg.n_active_params
     act_bytes = int(cfg.activation_dtype.itemsize)
-    weight_bytes = n * (1 if quantized else act_bytes)
+    weight_bytes = weight_stream_bytes(
+        n, quantized=quantized, act_bytes=act_bytes, weight_bits=weight_bits,
+        group_size=weight_group_size, int4_fraction=int4_fraction)
     peak = PEAK_INT8 if quantized else PEAK_BF16
     coll = decode_collective_bytes(
         n_layers=cfg.n_layers, d_model=cfg.d_model, rows=rows, tp=tp,
@@ -116,6 +151,8 @@ def sharded_decode_cell(cfg, *, rows: int, tp: int, quantized: bool = True,
     dominant = max(terms, key=terms.get)
     return {
         "rows": rows, "tp": tp, "quantized": quantized,
+        "weight_bits": weight_bits if quantized else 8 * act_bytes,
+        "weight_bytes_per_step": weight_bytes,
         "collective_bytes_per_device": coll,
         "terms_s": terms,
         "dominant": dominant,

@@ -30,7 +30,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import Calibrator, QuantMode, QuantPolicy, Taps, quantize_model
+from repro.core import (
+    Calibrator,
+    QuantMode,
+    QuantPolicy,
+    Taps,
+    count_quantized,
+    quantize_model,
+)
 from repro.core.ptq import FP_CONTEXT
 from repro.data import corpus_bleu, make_corpus, pack_batches_token_budget
 from repro.models import build_model
@@ -125,6 +132,17 @@ def main() -> None:
                     help="data-parallel engine replicas behind the "
                          "free-page/queue-depth router (--mode continuous; "
                          "each replica serves its share concurrently)")
+    ap.add_argument("--weight-bits", type=int, default=8, choices=(8, 4),
+                    help="weight payload precision: 8 = the paper's "
+                         "per-channel INT8 everywhere; 4 = decoder FFN and "
+                         "attention output projections drop to block-wise "
+                         "INT4 (packed nibbles + group scale/min, dequant "
+                         "fused into the matmul kernel) while activations, "
+                         "attention score paths and the KV cache stay INT8")
+    ap.add_argument("--weight-group-size", type=int, default=128,
+                    help="rows per INT4 scale/min block along d_in "
+                         "(--weight-bits 4; smaller = more accurate, "
+                         "larger = fewer metadata bytes)")
     args = ap.parse_args()
     burst_len = args.burst_len if args.burst_len == "auto" \
         else int(args.burst_len)
@@ -150,10 +168,18 @@ def main() -> None:
         recs = cal.compute(args.quant)
         params, qctx = quantize_model(
             params, recs, QuantPolicy(mode=QuantMode(args.quant),
-                                      act_quant="static"))
+                                      act_quant="static"),
+            weight_bits=args.weight_bits,
+            weight_group_size=args.weight_group_size)
         print(f"quantized with mode={args.quant}: "
               f"{sum(r.quantize for r in recs.values())}/{len(recs)} "
               "calibrated sites quantizable")
+        if args.weight_bits == 4:
+            stats = count_quantized(params)
+            print(f"INT4 weights: {stats['int4_linears']} decoder linears, "
+                  f"{stats['int4_bytes']} bytes "
+                  f"(group_size={args.weight_group_size}); "
+                  f"INT8 elsewhere: {stats['int8_bytes']} bytes")
 
     if args.mesh and args.mode != "continuous":
         raise SystemExit("--mesh needs --mode continuous")

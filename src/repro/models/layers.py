@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.core.calibration import Taps, record
 from repro.core.ptq import FP_CONTEXT, QuantContext
-from repro.core.qtensor import QTensor
+from repro.core.qtensor import BlockQTensor, QTensor
 from repro.core.quantize import quantize_with_thresholds
 from repro.kernels import ops
 
@@ -72,7 +72,9 @@ def dense(
     b = node.get("b")
     record(taps, site, x)
 
-    if isinstance(w, QTensor):
+    if isinstance(w, (QTensor, BlockQTensor)):
+        # Activations always quantize to INT8 (the paper's sensitivity
+        # result): only the *weight* payload drops to 4 bits.
         thr = quant.activation_thresholds(site)
         if thr is None:
             xq = ops.quantize_rowwise(x, impl=quant.impl)
@@ -82,9 +84,13 @@ def dense(
             # independent mode: affine activation quantization; the
             # zero-point correction folds into the matmul epilogue.
             xq = quantize_with_thresholds(x, thr)
+        bias = None if b is None else b.astype(jnp.float32)
+        if isinstance(w, BlockQTensor):
+            # block-wise INT4 weights: dequant fused into the Pallas kernel
+            return ops.int4_matmul(xq, w, bias, out_dtype=x.dtype,
+                                   impl=quant.impl)
         w_scale = w.scale.reshape(1, w.data.shape[-1])
         w2 = QTensor(w.data, w_scale, jnp.zeros((), jnp.float32), None)
-        bias = None if b is None else b.astype(jnp.float32)
         y = ops.int8_matmul(xq, w2, bias, out_dtype=x.dtype, impl=quant.impl)
         return y
 

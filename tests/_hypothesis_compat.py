@@ -60,10 +60,21 @@ except ImportError:
             n = int(rng.integers(self.min_size, self.max_size + 1))
             return [self.elements.sample(rng) for _ in range(n)]
 
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def sample(self, rng):
+            return self.elements[int(rng.integers(0, len(self.elements)))]
+
     class _StrategiesNamespace:
         @staticmethod
         def integers(min_value=None, max_value=None):
             return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements):
+            return _SampledFrom(elements)
 
         @staticmethod
         def floats(min_value=None, max_value=None, **kw):

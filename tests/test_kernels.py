@@ -184,3 +184,181 @@ def test_decode_attention_respects_lengths(rng):
                                 sm_scale=0.1, impl="interpret")
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
                                rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# int4 block-quantized matmul (dequant fused in-kernel)
+# ---------------------------------------------------------------------------
+
+import functools
+
+from repro.core.qtensor import (
+    BlockQTensor, pack_nibbles, quantize_block, unpack_nibbles,
+)
+from repro.kernels.int4_matmul import _pick_bk, int4_matmul_pallas
+
+
+def _mk_bqt(rng, K, N, G, scale_dtype=jnp.float16):
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    return quantize_block(w, group_size=G, scale_dtype=scale_dtype)
+
+
+def _mk_act(rng, M, K, zp=None):
+    data = jnp.asarray(rng.integers(-127, 128, (M, K)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(1e-3, 0.05, (M, 1)), jnp.float32)
+    zp_arr = jnp.float32(zp) if zp is not None else jnp.zeros((), jnp.float32)
+    return QTensor(data, scale, zp_arr, None)
+
+
+def _jit_oracle(G):
+    """Bit-identity needs *both* paths XLA-compiled: the interpret-mode
+    kernel body is traced/compiled (FMA contraction applies), so the oracle
+    must be jitted too — an eager ref call differs in the last ulp."""
+    return jax.jit(functools.partial(ref.ref_int4_matmul, group_size=G))
+
+
+# The sweep deliberately includes: group_size not dividing the default bk
+# (G=48 → bk=480), K not a multiple of the group (tail-group edge padding),
+# multi-k-step grids with a padded grid tail (K=700/2048), sublane-awkward M,
+# and lane-awkward N.
+INT4_CASES = [
+    #  M,    K,   N,   G, scale_dtype
+    (8,    64, 128,  32, jnp.float32),
+    (3,   100, 130,  32, jnp.float16),
+    (12,  700, 257,  48, jnp.float16),
+    (1,    16, 128,  16, jnp.float32),
+    (5,  1000,  64, 128, jnp.float16),
+    (17, 2048, 512, 128, jnp.float16),
+    (9,   130,  96,  64, jnp.float16),
+]
+
+
+@pytest.mark.parametrize("M,K,N,G,scale_dtype", INT4_CASES)
+@pytest.mark.parametrize("zp", [None, 3.0])
+def test_int4_matmul_bit_identical_to_reference(rng, M, K, N, G, scale_dtype,
+                                                zp):
+    """Interpret-mode kernel must be bit-identical to the jitted group-wise
+    oracle — same int32 MXU dots, same ascending-group f32 combination."""
+    b = _mk_bqt(rng, K, N, G, scale_dtype)
+    a = _mk_act(rng, M, K, zp)
+    zp_arr = jnp.float32(zp) if zp is not None else None
+    got = int4_matmul_pallas(a.data, a.scale, b.data, b.scale, b.vmin,
+                             zp_arr, None, group_size=G, interpret=True)
+    want = _jit_oracle(G)(a.data, a.scale, b.data, b.scale, b.vmin,
+                          zp_arr, None)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("M,K,N,G,scale_dtype", INT4_CASES[:4])
+def test_int4_matmul_matches_float_dequant(rng, M, K, N, G, scale_dtype):
+    """Kernel ≈ dense float matmul against the reference dequantized weights
+    (validates the whole integer decomposition, not just oracle agreement)."""
+    b = _mk_bqt(rng, K, N, G, scale_dtype)
+    a = _mk_act(rng, M, K)
+    got = ops.int4_matmul(a, b, impl="interpret")
+    want = a.dequantize() @ b.dequantize()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_int4_matmul_exact_vs_float_reference(rng):
+    """Power-of-two scale/min and integer activations are exactly
+    representable: kernel must equal float math with zero tolerance."""
+    M, K, N, G = 16, 64, 32, 32
+    codes = jnp.asarray(rng.integers(0, 16, (K, N)), jnp.int32)
+    b = BlockQTensor(data=pack_nibbles(codes),
+                     scale=jnp.full((K // G, N), 0.5, jnp.float32),
+                     vmin=jnp.full((K // G, N), -4.0, jnp.float32),
+                     group_size=G, k_dim=K)
+    a_f = rng.integers(-50, 50, (M, K)).astype(np.float32)
+    a = QTensor(jnp.asarray(a_f.astype(np.int8)), jnp.float32(1.0),
+                jnp.zeros((), jnp.float32), None)
+    got = ops.int4_matmul(a, b, impl="interpret")
+    want = a_f @ np.asarray(b.dequantize())
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_int4_matmul_padding_contributes_zero(rng):
+    """Stored rows beyond k_dim must not leak into the result: poisoning the
+    padded tail nibbles (0x0 → 0xF) leaves the output bit-identical."""
+    K, G, N, M = 70, 32, 64, 5          # k_store = 96, 26 padded rows
+    n_g, k_store = 3, 96
+    codes = np.asarray(rng.integers(0, 16, (k_store, N)), np.int32)
+    scale = jnp.asarray(rng.uniform(0.01, 0.1, (n_g, N)), jnp.float16)
+    vmin = jnp.asarray(rng.uniform(-1.0, 0.0, (n_g, N)), jnp.float16)
+    a = _mk_act(rng, M, K, zp=2.0)
+
+    outs = []
+    for fill in (0, 15):
+        poisoned = codes.copy()
+        poisoned[K:, :] = fill
+        b = BlockQTensor(data=pack_nibbles(jnp.asarray(poisoned)),
+                         scale=scale, vmin=vmin, group_size=G, k_dim=K)
+        outs.append(np.asarray(ops.int4_matmul(a, b, impl="interpret")))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_int4_matmul_out_dtypes(rng, out_dtype):
+    b = _mk_bqt(rng, 64, 128, 32)
+    a = _mk_act(rng, 8, 64)
+    got = ops.int4_matmul(a, b, out_dtype=out_dtype, impl="interpret")
+    assert got.dtype == out_dtype
+    want = ops.int4_matmul(a, b, out_dtype=out_dtype, impl="xla")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_int4_matmul_leading_batch_dims(rng):
+    """ops.int4_matmul flattens (..., K) activations like int8_matmul."""
+    B, T, K, N, G = 2, 3, 64, 128, 32
+    b = _mk_bqt(rng, K, N, G)
+    data = jnp.asarray(rng.integers(-127, 128, (B, T, K)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(1e-3, 0.05, (B, T, 1)), jnp.float32)
+    a = QTensor(data, scale, jnp.zeros((), jnp.float32), None)
+    got = ops.int4_matmul(a, b, impl="interpret")
+    assert got.shape == (B, T, N)
+    flat = QTensor(data.reshape(-1, K), scale.reshape(-1, 1),
+                   jnp.zeros((), jnp.float32), None)
+    want = ops.int4_matmul(flat, b, impl="interpret").reshape(B, T, N)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_int4_matmul_bias(rng):
+    b = _mk_bqt(rng, 96, 64, 48)
+    a = _mk_act(rng, 7, 96)
+    bias = jnp.asarray(rng.normal(size=64), jnp.float32)
+    got = ops.int4_matmul(a, b, bias, impl="interpret")
+    want = jnp.asarray(
+        _jit_oracle(48)(a.data, _row_scale_for_test(a.scale, 7),
+                        b.data, b.scale, b.vmin, None, bias))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def _row_scale_for_test(scale, M):
+    return jnp.reshape(jnp.asarray(scale, jnp.float32), (M, 1))
+
+
+def test_pick_bk_invariants():
+    """bk must be a multiple of group_size (a block's scale/min never
+    straddles two k-tiles) and never exceed the padded store."""
+    for k_store, G in [(96, 32), (512, 48), (4096, 128), (64, 64), (32, 128)]:
+        bk = _pick_bk(k_store, G, 512)
+        assert bk % G == 0 and bk >= G
+        assert bk <= max(k_store, G)
+
+
+@given(st.integers(1, 33), st.integers(1, 200), st.integers(1, 150),
+       st.sampled_from([16, 32, 48, 64]))
+@settings(max_examples=12, deadline=None)
+def test_int4_matmul_property(M, K, N, G):
+    r = np.random.default_rng(M * 7919 + K * 131 + N * 17 + G)
+    b = _mk_bqt(r, K, N, G)
+    a = _mk_act(r, M, K)
+    got = int4_matmul_pallas(a.data, a.scale, b.data, b.scale, b.vmin,
+                             None, None, group_size=G, interpret=True)
+    want = _jit_oracle(G)(a.data, a.scale, b.data, b.scale, b.vmin,
+                          None, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)

@@ -183,3 +183,65 @@ def test_build_cell_skips_without_record(tmp_path, monkeypatch):
     monkeypatch.setattr(roofline, "DRYRUN_DIR", str(tmp_path / "none"))
     cell = roofline.build_cell("transformer-base", "decode_32k")
     assert "skipped" in cell
+
+
+# ------------------------------------------------------- weight_stream_bytes
+def test_weight_stream_bytes_exact_assembly():
+    n = 1_000_000
+    ws = roofline.weight_stream_bytes
+    # FP streams act_bytes per weight; INT8 streams exactly one byte
+    assert ws(n, quantized=False, act_bytes=4) == 4 * n
+    assert ws(n, quantized=False, act_bytes=2) == 2 * n
+    assert ws(n, weight_bits=8) == n
+    # INT4 default layout: nibble + (scale, min) f16 pair per 128 weights
+    # → 0.5 + 2·2/128 = 0.53125 bytes/weight
+    assert ws(n, weight_bits=4) == int(n * (0.5 + 4.0 / 128))
+    assert n / ws(n, weight_bits=4) == pytest.approx(1.0 / 0.53125)
+    assert n / ws(n, weight_bits=4) >= 1.88  # the bench's byte-cut floor
+    # group/scale knobs move the metadata overhead exactly
+    assert ws(n, weight_bits=4, group_size=32, scale_bytes=4) == \
+        int(n * (0.5 + 8.0 / 32))
+    # fraction mixes linearly between INT8 and full-INT4
+    assert ws(n, weight_bits=4, int4_fraction=0.0) == n
+    half = ws(n, weight_bits=4, int4_fraction=0.5)
+    assert half == int(n * (0.5 + 0.5 * 0.53125))
+    with pytest.raises(ValueError):
+        ws(n, weight_bits=3)
+
+
+def test_cell_int4_memory_term():
+    cfg = get_config("transformer-base")
+    n = cfg.n_active_params
+    c8 = sharded_decode_cell(cfg, rows=8, tp=2, kv_bytes_per_step=1000)
+    c4 = sharded_decode_cell(cfg, rows=8, tp=2, kv_bytes_per_step=1000,
+                             weight_bits=4)
+    # memory term assembles exactly from weight_stream_bytes
+    w4 = roofline.weight_stream_bytes(n, weight_bits=4)
+    assert c4["weight_bytes_per_step"] == w4
+    assert c4["terms_s"]["memory_s"] == \
+        pytest.approx((w4 / 2 + 1000) / HBM_BW)
+    # compute + collective terms are untouched (nibbles feed the same
+    # s8×s8 MXU path); only the weight-stream bytes shrink ≥ 1.88×
+    assert c4["terms_s"]["compute_s"] == c8["terms_s"]["compute_s"]
+    assert c4["terms_s"]["collective_s"] == c8["terms_s"]["collective_s"]
+    assert c8["weight_bytes_per_step"] / c4["weight_bytes_per_step"] >= 1.88
+    assert c4["weight_bits"] == 4 and c8["weight_bits"] == 8
+
+
+def test_cell_int4_fraction_interpolates():
+    cfg = get_config("transformer-base")
+    cells = [sharded_decode_cell(cfg, rows=4, tp=1, weight_bits=4,
+                                 int4_fraction=f)
+             for f in (0.0, 0.5, 1.0)]
+    b = [c["weight_bytes_per_step"] for c in cells]
+    assert b[0] > b[1] > b[2]
+    assert b[1] == pytest.approx((b[0] + b[2]) / 2, abs=1)
+
+
+def test_cell_unquantized_ignores_weight_bits():
+    cfg = get_config("transformer-base")
+    c = sharded_decode_cell(cfg, rows=4, tp=1, quantized=False,
+                            weight_bits=4)
+    act_bytes = int(cfg.activation_dtype.itemsize)
+    assert c["weight_bytes_per_step"] == cfg.n_active_params * act_bytes
+    assert c["weight_bits"] == 8 * act_bytes
